@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig. 2 (AllReduce vs ScatterReduce communication time
+//! over 4–16 workers, MobileNet + ResNet-50 payloads).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let points = slsgpu::exp::fig2::run(&[4, 8, 12, 16]).expect("fig2");
+    print!("{}", slsgpu::exp::fig2::render(&points));
+    println!("regenerated in {:.0} ms", t0.elapsed().as_secs_f64() * 1000.0);
+}

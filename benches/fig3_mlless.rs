@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 3 (MLLess communication reduction via
+//! significance filtering) — publish-rate sweep at paper scale.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let points = slsgpu::exp::fig3::run_sim(&[1.0, 0.75, 0.5, 0.25, 0.1, 0.05, 0.02])
+        .expect("fig3");
+    print!("{}", slsgpu::exp::fig3::render_sim(&points));
+    let first = &points[0];
+    let last = &points[points.len() - 1];
+    println!(
+        "epoch-time reduction {:.1}x (paper convergence-time headline: {:.1}x)",
+        first.epoch_secs / last.epoch_secs,
+        slsgpu::exp::fig3::PAPER_UNFILTERED_SECS / slsgpu::exp::fig3::PAPER_FILTERED_SECS
+    );
+    println!("regenerated in {:.0} ms", t0.elapsed().as_secs_f64() * 1000.0);
+}

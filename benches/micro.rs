@@ -1,0 +1,116 @@
+//! Micro-benchmarks for the L3 hot paths (plain harness; criterion is
+//! unavailable offline). Each case reports ns/op or GB/s over enough
+//! iterations to stabilize — the numbers feed EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use slsgpu::metrics::{CommStats, Ledger};
+use slsgpu::sim::{Resource, VTime};
+use slsgpu::tensor::{ChunkPlan, Slab};
+
+fn time<F: FnMut()>(name: &str, iters: usize, bytes_per_iter: Option<u64>, mut f: F) {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let per_op = secs / iters as f64;
+    match bytes_per_iter {
+        Some(b) => println!(
+            "{name:<40} {:>10.2} us/op  {:>8.2} GB/s",
+            per_op * 1e6,
+            b as f64 * iters as f64 / secs / 1e9
+        ),
+        None => println!("{name:<40} {:>10.2} us/op", per_op * 1e6),
+    }
+}
+
+fn main() {
+    let n = 4_200_000; // MobileNet-sized slab
+
+    // Slab axpy — the pure-Rust aggregation hot loop.
+    let mut acc = Slab::zeros(n);
+    let g = Slab::from_vec(vec![0.5; n]);
+    time("slab axpy (4.2M f32)", 50, Some(4 * n as u64), || {
+        acc.axpy(&g, 0.25).unwrap();
+    });
+
+    // Slab mean of 4 (AllReduce master aggregation).
+    let grads: Vec<Slab> = (0..4).map(|_| Slab::from_vec(vec![1.0; n])).collect();
+    time("slab mean of 4 (4.2M f32)", 20, Some(16 * n as u64), || {
+        let _ = Slab::mean(&grads).unwrap();
+    });
+
+    // Chunk split + concat (ScatterReduce path).
+    let plan = ChunkPlan::new(n, 16).unwrap();
+    let slab = Slab::from_vec(vec![2.0; n]);
+    time("chunk split 16-way (4.2M f32)", 50, Some(4 * n as u64), || {
+        let _ = plan.split(&slab).unwrap();
+    });
+    let chunks = plan.split(&slab).unwrap();
+    time("chunk concat 16-way (4.2M f32)", 50, Some(4 * n as u64), || {
+        let _ = plan.concat(&chunks).unwrap();
+    });
+
+    // L2 norm (significance filter).
+    time("slab l2_norm_sq (4.2M f32)", 50, Some(4 * n as u64), || {
+        let _ = slab.l2_norm_sq();
+    });
+
+    // Virtual-time resource scheduling (the simulation engine itself).
+    let mut r = Resource::new("bench", 4);
+    let mut i = 0u64;
+    time("resource serve (backfill scheduler)", 200_000, None, || {
+        i += 1;
+        if i % 10_000 == 0 {
+            r.reset(); // keep interval lists bounded like real epochs do
+        }
+        let _ = r.serve(VTime::from_secs((i % 100) as f64), 0.01);
+    });
+
+    // Virtual redis set/get with real slab movement (1 MB payloads).
+    let mut redis = slsgpu::cloud::Redis::new("bench");
+    let mut comm = CommStats::new();
+    let payload = Slab::from_vec(vec![1.0; 262_144]);
+    let mut t = VTime::ZERO;
+    time("redis set+get (1 MiB real slab)", 2_000, Some(2 * 1_048_576), || {
+        t = redis.set(t, "k", payload.clone(), &mut comm);
+        let (t2, _) = redis.get(t, "k", &mut comm).unwrap();
+        t = t2;
+    });
+
+    // Queue publish/poll.
+    let mut q = slsgpu::cloud::MessageQueue::new();
+    let mut ledger = Ledger::new();
+    let mut tq = VTime::ZERO;
+    let mut k = 0u64;
+    time("queue publish+wait", 20_000, None, || {
+        k += 1;
+        let topic = format!("t{}", k % 64);
+        tq = q.publish(tq, &topic, "m", &mut ledger, &mut comm);
+        let _ = q.wait_for(tq, &topic, 1, &mut ledger, &mut comm).unwrap();
+        if k % 1000 == 0 {
+            q.clear();
+        }
+    });
+
+    // One full virtual Table-2 epoch (whole-simulator throughput).
+    time("virtual epoch: AllReduce/mobilenet x4", 5, None, || {
+        let mut env = slsgpu::coordinator::ClusterEnv::new(
+            slsgpu::coordinator::EnvConfig::virtual_paper(
+                slsgpu::cloud::FrameworkKind::AllReduce,
+                "mobilenet",
+                4,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        slsgpu::coordinator::strategy_for(slsgpu::cloud::FrameworkKind::AllReduce)
+            .run_epoch(&mut env)
+            .unwrap();
+    });
+}

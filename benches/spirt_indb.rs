@@ -1,0 +1,24 @@
+//! Bench: regenerate §4.2 (SPIRT in-database ops vs naive
+//! fetch-update-store). Runs the virtual paper-scale benchmark always, and
+//! the real-slab PJRT-backed variant when artifacts are present.
+use std::rc::Rc;
+use std::time::Instant;
+
+use slsgpu::runtime::Engine;
+
+fn main() {
+    let t0 = Instant::now();
+    let virt = slsgpu::exp::spirt_indb::run(None, 24).expect("spirt-indb");
+    print!("{}", slsgpu::exp::spirt_indb::render(&virt));
+
+    match Engine::load("artifacts") {
+        Ok(engine) => {
+            // Real 46.8 MB slabs through the PJRT-compiled Pallas kernels.
+            let real = slsgpu::exp::spirt_indb::run(Some((Rc::new(engine), "resnet18_full")), 24)
+                .expect("spirt-indb real");
+            print!("{}", slsgpu::exp::spirt_indb::render(&real));
+        }
+        Err(_) => println!("(real-slab variant skipped: run `make artifacts`)"),
+    }
+    println!("regenerated in {:.0} ms", t0.elapsed().as_secs_f64() * 1000.0);
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate the paper's Table 2 (time / peak RAM / cost per epoch).
+//! Plain harness (criterion is unavailable offline): prints the table and
+//! the wall time to produce it.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = slsgpu::exp::table2::run(4).expect("table2");
+    print!("{}", slsgpu::exp::table2::render(&rows));
+    println!("regenerated in {:.0} ms", t0.elapsed().as_secs_f64() * 1000.0);
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate Table 3 / Fig. 4 (convergence time & final accuracy,
+//! all five frameworks, end-to-end real gradients).
+//!
+//! The full run (to 80%) takes tens of minutes of CPU; the default here
+//! uses a reduced budget controlled by SLSGPU_T3_EPOCHS / SLSGPU_T3_SAMPLES
+//! so `cargo bench` stays tractable. The full-budget record lives in
+//! EXPERIMENTS.md (produced by `slsgpu exp table3`).
+use std::rc::Rc;
+use std::time::Instant;
+
+use slsgpu::exp::table3::{render, render_csv, run, Table3Config};
+use slsgpu::runtime::Engine;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => Rc::new(e),
+        Err(err) => {
+            println!("table3 bench skipped: {err:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let cfg = Table3Config {
+        model: "mobilenet_s".into(),
+        workers: 4,
+        train_samples: env_usize("SLSGPU_T3_SAMPLES", 512),
+        max_epochs: env_usize("SLSGPU_T3_EPOCHS", 3),
+        target_acc: 0.80,
+        seed: 42,
+    };
+    let t0 = Instant::now();
+    let rows = run(engine, &cfg).expect("table3");
+    print!("{}", render(&rows, &cfg));
+    let csv = render_csv(&rows);
+    std::fs::write("fig4_curve.csv", &csv).ok();
+    println!("accuracy-vs-time series -> fig4_curve.csv ({} rows)", csv.lines().count() - 1);
+    println!("regenerated in {:.1} s (budget: {} epochs x {} samples)",
+        t0.elapsed().as_secs_f64(), cfg.max_epochs, cfg.train_samples);
+}

@@ -1,0 +1,97 @@
+//! Cost explorer: where is the serverless-vs-GPU cost crossover?
+//!
+//! The paper's headline finding is a *crossover*: serverless wins on cost
+//! for lightweight models (MobileNet), the GPU baseline wins for heavier
+//! ones (ResNet-18). This example sweeps model size between and beyond the
+//! paper's two anchors and reports the per-epoch cost of the cheapest
+//! serverless variant vs the GPU fleet, locating the crossover.
+//!
+//! ```sh
+//! cargo run --release --example cost_explorer
+//! ```
+
+use slsgpu::cloud::calibration::{scaled_profile, ModelProfile, FrameworkKind, MOBILENET, RESNET18};
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig, GradMode};
+use slsgpu::util::table::{Align, Table};
+
+/// Interpolate a profile at an arbitrary parameter count between the
+/// MobileNet and ResNet-18 calibration anchors (extrapolating beyond).
+fn profile_at(params: u64) -> ModelProfile {
+    let (a, b) = (MOBILENET, RESNET18);
+    let t = (params as f64 - a.params as f64) / (b.params as f64 - a.params as f64);
+    let lerp = |x: f64, y: f64| x + t * (y - x);
+    ModelProfile {
+        name: "interp",
+        params,
+        lambda_secs_per_sample: lerp(a.lambda_secs_per_sample, b.lambda_secs_per_sample),
+        gpu_secs_per_sample: lerp(a.gpu_secs_per_sample, b.gpu_secs_per_sample),
+        activation_mb: lerp(a.activation_mb, b.activation_mb),
+    }
+}
+
+fn epoch_cost(fw: FrameworkKind, profile: ModelProfile) -> anyhow::Result<f64> {
+    let cfg = EnvConfig {
+        framework: fw,
+        workers: 4,
+        batches_per_epoch: 24,
+        batch_size: 512,
+        lr: 0.05,
+        profile,
+        grad_mode: GradMode::Virtual,
+        seed: 7,
+    };
+    let mut env = ClusterEnv::new(cfg)?;
+    strategy_for(fw).run_epoch(&mut env)?;
+    Ok(env.ledger.total_paper())
+}
+
+fn main() -> anyhow::Result<()> {
+    let sizes: Vec<u64> = vec![
+        1_000_000, 2_000_000, 3_000_000, 4_200_000, 6_000_000, 8_000_000, 10_000_000,
+        11_700_000, 16_000_000, 25_600_000,
+    ];
+    let mut t = Table::new(&["Params", "Serverless best ($)", "Best variant", "GPU ($)", "Winner"])
+        .align(&[Align::Right, Align::Right, Align::Left, Align::Right, Align::Left])
+        .title("Per-epoch cost vs model size (B=512, 4 workers x 24 batches)");
+
+    let mut crossover: Option<u64> = None;
+    let mut prev_serverless_won = true;
+    for params in sizes {
+        let profile = if params > RESNET18.params {
+            scaled_profile(RESNET18, params)
+        } else {
+            profile_at(params)
+        };
+        let mut best = f64::INFINITY;
+        let mut best_name = "";
+        for fw in [FrameworkKind::AllReduce, FrameworkKind::ScatterReduce, FrameworkKind::Spirt] {
+            let c = epoch_cost(fw, profile)?;
+            if c < best {
+                best = c;
+                best_name = fw.name();
+            }
+        }
+        let gpu = epoch_cost(FrameworkKind::GpuBaseline, profile)?;
+        let serverless_wins = best < gpu;
+        if prev_serverless_won && !serverless_wins && crossover.is_none() {
+            crossover = Some(params);
+        }
+        prev_serverless_won = serverless_wins;
+        t.row(vec![
+            format!("{:.1}M", params as f64 / 1e6),
+            format!("{best:.4}"),
+            best_name.to_string(),
+            format!("{gpu:.4}"),
+            if serverless_wins { "serverless".into() } else { "GPU".to_string() },
+        ]);
+    }
+    print!("{}", t.render());
+    match crossover {
+        Some(p) => println!(
+            "crossover: GPU becomes cheaper at ~{:.1}M params (paper: between 4.2M MobileNet and 11.7M ResNet-18)",
+            p as f64 / 1e6
+        ),
+        None => println!("no crossover found in the swept range"),
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: train a small MobileNet with the AllReduce architecture,
+//! end to end through the full stack — PJRT-compiled JAX/Pallas gradients,
+//! simulated AWS substrates, virtual-time cost accounting.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::rc::Rc;
+
+use slsgpu::cloud::FrameworkKind;
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use slsgpu::runtime::Engine;
+use slsgpu::train::{run_session, SessionConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts (built once by `make artifacts`).
+    let engine = Rc::new(Engine::load("artifacts")?);
+
+    // 2. Build a 4-worker cluster over the executed MobileNet config.
+    let cfg = EnvConfig::real(
+        FrameworkKind::AllReduce,
+        engine,
+        "mobilenet_s",
+        4,    // workers
+        512,  // training samples (synthetic CIFAR)
+        42,   // seed
+    )?;
+    let mut env = ClusterEnv::new(cfg)?;
+
+    // 3. Train for two epochs with the framework's full protocol.
+    let mut strategy = strategy_for(FrameworkKind::AllReduce);
+    let session = SessionConfig { max_epochs: 2, target_acc: 0.99, patience: 10, evaluate: true };
+    let report = run_session(&mut env, strategy.as_mut(), &session)?;
+
+    for e in &report.reports {
+        println!(
+            "epoch {}: loss {:.4}, test acc {:.1}%, virtual time {:.1}s, cost ${:.4}",
+            e.epoch,
+            e.mean_loss.unwrap_or(f64::NAN),
+            e.test_acc.unwrap_or(0.0) * 100.0,
+            e.vtime_secs,
+            e.cost_usd
+        );
+    }
+    println!(
+        "gradient bytes on the wire: {}",
+        slsgpu::util::fmt_bytes(env.comm.wire_bytes())
+    );
+    Ok(())
+}

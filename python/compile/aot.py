@@ -1,0 +1,134 @@
+"""AOT lowering: JAX functions -> HLO text artifacts + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. Lowered with return_tuple=True — every artifact
+output is a tuple, unwrapped with to_tupleN on the Rust side.
+
+Run as:  cd python && python -m compile.aot --out ../artifacts
+The Makefile `artifacts` target is a no-op when inputs are unchanged.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, arg_specs, path):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)", flush=True)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def build_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "image_shape": list(M.IMAGE_SHAPE),
+        "num_classes": M.NUM_CLASSES,
+        "models": {},
+        "slabs": {},
+        "paper_sizes": M.PAPER_SIZES,
+    }
+
+    # Per-config executable artifacts: init / grad / eval.
+    for name, cfg in M.MODEL_CONFIGS.items():
+        _, _, spec = M.build_model(name)
+        n = spec["total"]
+        batch, eval_batch = cfg["batch"], cfg["eval_batch"]
+        print(f"[{name}] n_params={n} batch={batch}", flush=True)
+
+        x = f32(batch, *M.IMAGE_SHAPE)
+        y = i32(batch)
+        xe = f32(eval_batch, *M.IMAGE_SHAPE)
+        ye = i32(eval_batch)
+
+        files = {
+            "init": f"init_{name}.hlo.txt",
+            "grad": f"grad_{name}.hlo.txt",
+            "eval": f"eval_{name}.hlo.txt",
+        }
+        lower_to_file(M.make_init_fn(name), [u32()], os.path.join(out_dir, files["init"]))
+        lower_to_file(
+            M.make_grad_fn(name), [f32(n), x, y], os.path.join(out_dir, files["grad"])
+        )
+        lower_to_file(
+            M.make_eval_fn(name), [f32(n), xe, ye], os.path.join(out_dir, files["eval"])
+        )
+
+        manifest["models"][name] = {
+            "arch": cfg["arch"],
+            "width": cfg["width"],
+            "n_params": n,
+            "batch": batch,
+            "eval_batch": eval_batch,
+            "artifacts": files,
+        }
+
+    # Size-parameterized elementwise slab artifacts (Pallas-backed).
+    for slab_name, n in M.slab_sizes().items():
+        print(f"[slab {slab_name}] n={n}", flush=True)
+        files = {
+            "acc": f"acc_{slab_name}.hlo.txt",
+            "sgd": f"sgd_{slab_name}.hlo.txt",
+            "avg_update": f"avg_update_{slab_name}.hlo.txt",
+        }
+        lower_to_file(
+            M.make_acc_fn(), [f32(n), f32(n), f32()], os.path.join(out_dir, files["acc"])
+        )
+        lower_to_file(
+            M.make_sgd_fn(), [f32(n), f32(n), f32()], os.path.join(out_dir, files["sgd"])
+        )
+        lower_to_file(
+            M.make_avg_update_fn(),
+            [f32(n), f32(n), f32(), f32()],
+            os.path.join(out_dir, files["avg_update"]),
+        )
+        manifest["slabs"][slab_name] = {"n": n, "artifacts": files}
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for the slsgpu testbed.
+
+Every kernel is lowered with ``interpret=True``: the CPU PJRT plugin that the
+Rust runtime embeds cannot execute Mosaic custom-calls, and interpret mode
+lowers the kernel into plain HLO (a fori-loop over the grid) that runs on any
+backend. Block shapes are still chosen as if targeting a TPU core — 128x128
+MXU-shaped tiles for the matmul, 64K-element VMEM-resident slabs for the
+elementwise aggregation kernels — so the VMEM/MXU estimates recorded in
+EXPERIMENTS.md §Perf reflect the real schedule.
+"""
+
+from .matmul import matmul
+from .aggregate import accumulate, fused_avg_update, sgd_update
+from .significance import l2_norm_sq
+
+__all__ = [
+    "matmul",
+    "accumulate",
+    "fused_avg_update",
+    "sgd_update",
+    "l2_norm_sq",
+]

@@ -1,0 +1,89 @@
+"""Elementwise gradient-aggregation Pallas kernels (the "RedisAI ops").
+
+SPIRT's headline optimization is *in-database* gradient math: the Redis
+instance that stores worker gradients also averages them and applies the SGD
+update, so gradients are never shuttled out to the function runtime
+(§4.2: averaging 67.32s -> 37.41s, update 27.5s -> 4.8s vs the naive
+fetch-update-store baseline). In this reproduction the Redis substrate
+(rust/src/cloud/redis.rs) embeds PJRT executables of exactly these kernels —
+the "in-database computation" runs real compiled code on real bytes.
+
+All three kernels stream flat f32 slabs through VMEM in BLOCK-element tiles
+(1-D grid). Slab length is padded to a tile multiple by the wrappers; padding
+lanes are mathematically inert (they are sliced away on return).
+
+  accumulate(acc, g, w)            -> acc + w * g        (k-way sum, axpy)
+  fused_avg_update(theta, gsum,
+                   inv_k, lr)      -> theta - lr*(inv_k*gsum)
+  sgd_update(theta, g, lr)         -> theta - lr * g
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 64K f32 = 256 KiB per resident block; three operands keep the working set
+# under 1 MiB, far below the ~16 MiB VMEM of a TPU core — the schedule is
+# bandwidth-bound by construction (see EXPERIMENTS.md §Perf).
+BLOCK = 65536
+
+
+def _ceil_to(value: int, mult: int) -> int:
+    return ((value + mult - 1) // mult) * mult
+
+
+def _axpy_kernel(acc_ref, g_ref, w_ref, o_ref):
+    o_ref[...] = acc_ref[...] + w_ref[0] * g_ref[...]
+
+
+def _fused_avg_update_kernel(theta_ref, gsum_ref, inv_k_ref, lr_ref, o_ref):
+    # One fused pass: scale the gradient sum to a mean and apply SGD, so the
+    # slab crosses HBM<->VMEM once instead of twice.
+    o_ref[...] = theta_ref[...] - lr_ref[0] * (inv_k_ref[0] * gsum_ref[...])
+
+
+def _sgd_kernel(theta_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = theta_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def _elementwise_call(kernel, vecs, scalars):
+    """Run `kernel` over equal-length flat vectors + broadcast scalars."""
+    n = vecs[0].shape[0]
+    block = min(BLOCK, _ceil_to(n, 8))
+    np_ = _ceil_to(n, block)
+    padded = [jnp.pad(v, (0, np_ - n)) for v in vecs]
+    scal = [jnp.reshape(s, (1,)).astype(jnp.float32) for s in scalars]
+
+    vec_specs = [pl.BlockSpec((block,), lambda i: (i,)) for _ in padded]
+    # Scalars are replicated to every grid step (block index 0 of a len-1 arr).
+    scal_specs = [pl.BlockSpec((1,), lambda i: (0,)) for _ in scal]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_ // block,),
+        in_specs=vec_specs + scal_specs,
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(*padded, *scal)
+    return out[:n]
+
+
+@jax.jit
+def accumulate(acc, g, w):
+    """acc + w*g — the incremental k-way aggregation step (axpy)."""
+    return _elementwise_call(_axpy_kernel, [acc, g], [w])
+
+
+@jax.jit
+def fused_avg_update(theta, gsum, inv_k, lr):
+    """theta - lr * (inv_k * gsum) — SPIRT's fused in-database op."""
+    return _elementwise_call(_fused_avg_update_kernel, [theta, gsum], [inv_k, lr])
+
+
+@jax.jit
+def sgd_update(theta, g, lr):
+    """Plain SGD step on a flat parameter slab."""
+    return _elementwise_call(_sgd_kernel, [theta, g], [lr])

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness bar.
+
+pytest asserts allclose(kernel, ref) across a hypothesis sweep of shapes and
+value ranges before aot.py is allowed to emit artifacts (see
+python/tests/test_*_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def accumulate(acc, g, w):
+    return acc + w * g
+
+
+def fused_avg_update(theta, gsum, inv_k, lr):
+    return theta - lr * (inv_k * gsum)
+
+
+def sgd_update(theta, g, lr):
+    return theta - lr * g
+
+
+def l2_norm_sq(g):
+    return jnp.sum(g * g)
+
+
+def is_significant(g, theta, threshold):
+    gn = jnp.sum(g * g)
+    tn = jnp.sum(theta * theta)
+    return jnp.where(gn > (threshold * threshold) * jnp.maximum(tn, 1e-12), 1.0, 0.0)

@@ -1,0 +1,49 @@
+"""Blockwise squared-L2-norm Pallas kernel — MLLess significance filtering.
+
+MLLess publishes a gradient only when it is "significant" (its relative
+magnitude exceeds a threshold); everything else stays local, which is where
+its 13x communication reduction comes from (Fig. 3). The decision needs
+||g||^2, computed here as a 1-D grid of per-block partial sums followed by a
+scalar reduction — the canonical two-stage TPU reduction (VMEM-resident block
+reduce on the VPU, then a trivial final sum).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .aggregate import BLOCK, _ceil_to
+
+
+def _sumsq_kernel(g_ref, o_ref):
+    blk = g_ref[...]
+    o_ref[0] = jnp.sum(blk * blk)
+
+
+@jax.jit
+def l2_norm_sq(g):
+    """sum(g**2) via per-block partial sums (zero padding is inert)."""
+    n = g.shape[0]
+    block = min(BLOCK, _ceil_to(n, 8))
+    np_ = _ceil_to(n, block)
+    gp = jnp.pad(g, (0, np_ - n))
+    nblocks = np_ // block
+
+    partials = pl.pallas_call(
+        _sumsq_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        interpret=True,
+    )(gp)
+    return jnp.sum(partials)
+
+
+@jax.jit
+def is_significant(g, theta, threshold):
+    """MLLess predicate: ||g|| / ||theta|| > threshold (as f32 0/1)."""
+    gn = l2_norm_sq(g)
+    tn = l2_norm_sq(theta)
+    # Guard ||theta|| = 0 (first step): everything is significant then.
+    return jnp.where(gn > (threshold * threshold) * jnp.maximum(tn, 1e-12), 1.0, 0.0)

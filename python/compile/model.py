@@ -1,0 +1,132 @@
+"""Layer-2 artifact functions: everything the Rust coordinator executes.
+
+For each *executed* model config this module builds the pure functions that
+aot.py lowers to HLO text:
+
+  init(seed)            -> theta                       (He-normal flat init)
+  grad(theta, x, y)     -> (loss, grads, correct)      (fwd+bwd, flat ABI)
+  eval(theta, x, y)     -> (loss, correct)             (fwd only)
+
+and, per flat-slab size n (executed configs + the paper's full model sizes):
+
+  acc(acc, g, w)            -> acc + w*g               (Pallas)
+  sgd(theta, g, lr)         -> theta - lr*g            (Pallas)
+  avg_update(theta, gsum,
+             inv_k, lr)     -> theta - lr*inv_k*gsum   (Pallas, fused in-DB op)
+
+The executed configs are width-reduced so a full convergence run fits the CPU
+testbed; the paper-size elementwise slabs (4.2M / 11.7M params) make the
+SPIRT in-database benchmark move paper-scale bytes through real compiled code.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels import accumulate, fused_avg_update, sgd_update
+from .models import ARCHS
+
+NUM_CLASSES = 10
+IMAGE_SHAPE = (32, 32, 3)
+
+# Configs that are lowered to executable grad/eval/init artifacts.
+MODEL_CONFIGS = {
+    "mobilenet_s": {"arch": "mobilenet", "width": 0.25, "batch": 64, "eval_batch": 256},
+    "resnet18_s": {"arch": "resnet18", "width": 0.25, "batch": 32, "eval_batch": 256},
+}
+
+# Paper-reported full-model parameter counts (gradient payload sizes for the
+# communication/cost experiments; no grad artifact is built at these sizes).
+PAPER_SIZES = {
+    "mobilenet": 4_200_000,
+    "resnet18": 11_700_000,
+    "resnet50": 25_600_000,
+}
+
+
+def build_model(name):
+    """Instantiate (init, apply, spec) for a named executed config."""
+    cfg = MODEL_CONFIGS[name]
+    init, apply = ARCHS[cfg["arch"]](width=cfg["width"], num_classes=NUM_CLASSES)
+    params = jax.eval_shape(init, jax.random.PRNGKey(0))
+    spec = P.flatten_spec(params)
+    return init, apply, spec
+
+
+def make_init_fn(name):
+    init, _, _ = build_model(name)
+
+    def init_flat(seed):
+        key = jax.random.PRNGKey(seed)
+        return (P.tree_to_vec(init(key)),)
+
+    return init_flat
+
+
+def make_grad_fn(name):
+    from .models import layers as L
+
+    _, apply, spec = build_model(name)
+
+    def loss_fn(theta, x, y):
+        params = P.vec_to_tree(theta, spec)
+        logits = apply(params, x)
+        return L.softmax_cross_entropy(logits, y), logits
+
+    def grad_flat(theta, x, y):
+        (loss, logits), grads_tree = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta, x, y
+        )
+        # theta is already flat, so grads_tree is the flat cotangent.
+        return loss, grads_tree, L.correct_count(logits, y)
+
+    return grad_flat
+
+
+def make_eval_fn(name):
+    from .models import layers as L
+
+    _, apply, spec = build_model(name)
+
+    def eval_flat(theta, x, y):
+        params = P.vec_to_tree(theta, spec)
+        logits = apply(params, x)
+        return L.softmax_cross_entropy(logits, y), L.correct_count(logits, y)
+
+    return eval_flat
+
+
+# ---------------------------------------------------------------------------
+# Elementwise slab artifacts (size-parameterized, Pallas-backed)
+
+
+def make_acc_fn():
+    def acc(a, g, w):
+        return (accumulate(a, g, w),)
+
+    return acc
+
+
+def make_sgd_fn():
+    def sgd(theta, g, lr):
+        return (sgd_update(theta, g, lr),)
+
+    return sgd
+
+
+def make_avg_update_fn():
+    def avg_update(theta, gsum, inv_k, lr):
+        return (fused_avg_update(theta, gsum, inv_k, lr),)
+
+    return avg_update
+
+
+def slab_sizes():
+    """All flat-slab sizes that need elementwise artifacts."""
+    sizes = {}
+    for name in MODEL_CONFIGS:
+        _, _, spec = build_model(name)
+        sizes[name] = spec["total"]
+    for arch, n in PAPER_SIZES.items():
+        sizes[f"{arch}_full"] = n
+    return sizes

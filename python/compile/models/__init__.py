@@ -1,0 +1,24 @@
+"""Layer-2 model zoo: MobileNet-v1 and ResNet-18/50 adapted to 32x32 inputs.
+
+Models are plain functional JAX: ``init(key) -> params`` pytrees and
+``apply(params, x) -> logits``. BatchNorm is replaced by GroupNorm (stateless,
+identical train/eval behaviour) so the flat-parameter ABI carries no running
+statistics — the standard substitution for parameter-server-style training
+where optimizer state must be an opaque slab.
+
+Pointwise (1x1) convolutions, projection shortcuts and the classifier head
+run through the Pallas matmul kernel (kernels.matmul); spatial 3x3 and
+depthwise convolutions use lax.conv_general_dilated, which XLA already lowers
+optimally on every backend.
+"""
+
+from .mobilenet import mobilenet
+from .resnet import resnet18, resnet50
+
+ARCHS = {
+    "mobilenet": mobilenet,
+    "resnet18": resnet18,
+    "resnet50": resnet50,
+}
+
+__all__ = ["mobilenet", "resnet18", "resnet50", "ARCHS"]

@@ -1,0 +1,142 @@
+"""Shared layer primitives for the model zoo.
+
+Every layer is a pair of pure functions:
+
+  init_<layer>(key, ...) -> params (a dict of arrays)
+  <layer>(params, x, ...) -> y
+
+Conventions: NHWC activations, HWIO conv kernels, f32 everywhere. Pointwise
+(1x1) convs and dense layers route through the Pallas matmul kernel so the
+model's GEMM hot path exercises the Layer-1 schedule end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import matmul
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def he_normal(key, shape, fan_in):
+    """He-normal initialization (ReLU-family gain)."""
+    std = jnp.sqrt(2.0 / fan_in)
+    return std * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Convolutions
+
+
+def init_conv(key, kh, kw, cin, cout):
+    return {"w": he_normal(key, (kh, kw, cin, cout), kh * kw * cin)}
+
+
+def conv(params, x, stride=1):
+    """Spatial conv, SAME padding (XLA-lowered)."""
+    return lax.conv_general_dilated(
+        x,
+        params["w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=_DN,
+    )
+
+
+def init_depthwise(key, kh, kw, c):
+    # HWIO with feature_group_count=c: (kh, kw, 1, c)
+    return {"w": he_normal(key, (kh, kw, 1, c), kh * kw)}
+
+
+def depthwise(params, x, stride=1):
+    """3x3 depthwise conv, SAME padding (one filter per channel)."""
+    c = x.shape[-1]
+    return lax.conv_general_dilated(
+        x,
+        params["w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=_DN,
+        feature_group_count=c,
+    )
+
+
+def init_pointwise(key, cin, cout):
+    return {"w": he_normal(key, (cin, cout), cin)}
+
+
+def pointwise(params, x):
+    """1x1 conv as a GEMM through the Pallas matmul kernel."""
+    n, h, w, cin = x.shape
+    flat = x.reshape(n * h * w, cin)
+    out = matmul(flat, params["w"])
+    return out.reshape(n, h, w, -1)
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activations
+
+
+def init_groupnorm(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def groupnorm(params, x, groups=8, eps=1e-5):
+    """GroupNorm over NHWC (stateless BatchNorm substitute)."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:  # channels are powers of two here, but stay safe
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * lax.rsqrt(var + eps)
+    x = xg.reshape(n, h, w, c)
+    return x * params["scale"] + params["bias"]
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+# ---------------------------------------------------------------------------
+# Head
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def init_dense(key, cin, cout):
+    kw, kb = jax.random.split(key)
+    return {
+        "w": he_normal(kw, (cin, cout), cin),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def dense(params, x):
+    """Classifier head GEMM through the Pallas matmul kernel."""
+    return matmul(x, params["w"]) + params["b"]
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+
+
+def softmax_cross_entropy(logits, labels):
+    """Mean CE over the batch; labels are int32 class ids."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(ll)
+
+
+def correct_count(logits, labels):
+    """Number of correct top-1 predictions (f32 scalar)."""
+    pred = jnp.argmax(logits, axis=-1).astype(labels.dtype)
+    return jnp.sum((pred == labels).astype(jnp.float32))

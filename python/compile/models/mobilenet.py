@@ -1,0 +1,77 @@
+"""MobileNet-v1 adapted to CIFAR-scale 32x32 inputs.
+
+Standard v1 stack (Howard et al. 2017) with the ImageNet stem stride removed
+(32x32 inputs downsample 4x across the depthwise blocks, ending at 2x2).
+Every pointwise conv is a Pallas-matmul GEMM — MobileNet is ~95% pointwise
+FLOPs, so this is the architecture where the Layer-1 kernel carries the
+model. Width multiplier scales all channel counts (paper uses 1.0; the
+executed testbed config uses 0.25).
+"""
+
+import jax
+
+from . import layers as L
+
+# (stride of the depthwise conv, output channels at width=1.0)
+_BLOCKS = [
+    (1, 64),
+    (2, 128),
+    (1, 128),
+    (2, 256),
+    (1, 256),
+    (2, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (1, 512),
+    (2, 1024),
+    (1, 1024),
+]
+
+_STEM_CH = 32
+
+
+def _scaled(c, width):
+    return max(8, int(c * width))
+
+
+def mobilenet(width=1.0, num_classes=10):
+    """Returns (init, apply) for MobileNet-v1 at the given width."""
+
+    stem_ch = _scaled(_STEM_CH, width)
+    chans = [_scaled(c, width) for _, c in _BLOCKS]
+    strides = [s for s, _ in _BLOCKS]
+
+    def init(key):
+        keys = jax.random.split(key, 2 * len(_BLOCKS) + 2)
+        params = {
+            "stem": {
+                "conv": L.init_conv(keys[0], 3, 3, 3, stem_ch),
+                "gn": L.init_groupnorm(stem_ch),
+            },
+            "blocks": [],
+            "head": L.init_dense(keys[1], chans[-1], num_classes),
+        }
+        cin = stem_ch
+        for i, cout in enumerate(chans):
+            params["blocks"].append(
+                {
+                    "dw": L.init_depthwise(keys[2 + 2 * i], 3, 3, cin),
+                    "dw_gn": L.init_groupnorm(cin),
+                    "pw": L.init_pointwise(keys[3 + 2 * i], cin, cout),
+                    "pw_gn": L.init_groupnorm(cout),
+                }
+            )
+            cin = cout
+        return params
+
+    def apply(params, x):
+        x = L.relu6(L.groupnorm(params["stem"]["gn"], L.conv(params["stem"]["conv"], x)))
+        for blk, stride in zip(params["blocks"], strides):
+            x = L.relu6(L.groupnorm(blk["dw_gn"], L.depthwise(blk["dw"], x, stride)))
+            x = L.relu6(L.groupnorm(blk["pw_gn"], L.pointwise(blk["pw"], x)))
+        x = L.global_avg_pool(x)
+        return L.dense(params["head"], x)
+
+    return init, apply

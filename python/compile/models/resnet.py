@@ -1,0 +1,133 @@
+"""ResNet-18/50 adapted to CIFAR-scale 32x32 inputs (He et al. 2016).
+
+CIFAR stem (3x3 stride-1, no max-pool); four stages with strides 1/2/2/2 so
+32x32 ends at 4x4 before global pooling. ResNet-18 uses BasicBlocks,
+ResNet-50 Bottlenecks. Projection shortcuts and all bottleneck 1x1 convs are
+Pallas-matmul GEMMs; GroupNorm replaces BatchNorm (see models/__init__.py).
+
+ResNet-50 exists in the zoo primarily as the large-gradient workload of the
+paper's Fig. 2 communication study (25.6M params); it is lowered/executed only
+at reduced width.
+"""
+
+import jax
+
+from . import layers as L
+
+
+def _basic_block(keys, cin, cout, stride):
+    p = {
+        "conv1": L.init_conv(keys[0], 3, 3, cin, cout),
+        "gn1": L.init_groupnorm(cout),
+        "conv2": L.init_conv(keys[1], 3, 3, cout, cout),
+        "gn2": L.init_groupnorm(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = L.init_pointwise(keys[2], cin, cout)
+        p["proj_gn"] = L.init_groupnorm(cout)
+    return p
+
+
+def _apply_basic(p, x, stride):
+    out = L.relu(L.groupnorm(p["gn1"], L.conv(p["conv1"], x, stride)))
+    out = L.groupnorm(p["gn2"], L.conv(p["conv2"], out))
+    if "proj" in p:
+        # Strided projection: subsample spatially, then 1x1 GEMM.
+        sc = x[:, ::stride, ::stride, :] if stride != 1 else x
+        sc = L.groupnorm(p["proj_gn"], L.pointwise(p["proj"], sc))
+    else:
+        sc = x
+    return L.relu(out + sc)
+
+
+def _bottleneck_block(keys, cin, cmid, cout, stride):
+    p = {
+        "pw1": L.init_pointwise(keys[0], cin, cmid),
+        "gn1": L.init_groupnorm(cmid),
+        "conv2": L.init_conv(keys[1], 3, 3, cmid, cmid),
+        "gn2": L.init_groupnorm(cmid),
+        "pw3": L.init_pointwise(keys[2], cmid, cout),
+        "gn3": L.init_groupnorm(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = L.init_pointwise(keys[3], cin, cout)
+        p["proj_gn"] = L.init_groupnorm(cout)
+    return p
+
+
+def _apply_bottleneck(p, x, stride):
+    out = L.relu(L.groupnorm(p["gn1"], L.pointwise(p["pw1"], x)))
+    out = L.relu(L.groupnorm(p["gn2"], L.conv(p["conv2"], out, stride)))
+    out = L.groupnorm(p["gn3"], L.pointwise(p["pw3"], out))
+    if "proj" in p:
+        sc = x[:, ::stride, ::stride, :] if stride != 1 else x
+        sc = L.groupnorm(p["proj_gn"], L.pointwise(p["proj"], sc))
+    else:
+        sc = x
+    return L.relu(out + sc)
+
+
+def _resnet(stage_blocks, bottleneck, width, num_classes):
+    base = [64, 128, 256, 512]
+    chans = [max(8, int(c * width)) for c in base]
+    expansion = 4 if bottleneck else 1
+
+    def init(key):
+        nkeys = 2 + sum(stage_blocks) * 4
+        keys = jax.random.split(key, nkeys)
+        ki = 0
+
+        def take(n):
+            nonlocal ki
+            out = keys[ki : ki + n]
+            ki += n
+            return out
+
+        stem_ch = chans[0]
+        params = {
+            "stem": {
+                "conv": L.init_conv(take(1)[0], 3, 3, 3, stem_ch),
+                "gn": L.init_groupnorm(stem_ch),
+            },
+            "stages": [],
+        }
+        cin = stem_ch
+        for si, nblocks in enumerate(stage_blocks):
+            stage = []
+            for bi in range(nblocks):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                if bottleneck:
+                    cmid = chans[si]
+                    cout = chans[si] * expansion
+                    stage.append(_bottleneck_block(take(4), cin, cmid, cout, stride))
+                else:
+                    cout = chans[si]
+                    stage.append(_basic_block(take(3), cin, cout, stride))
+                cin = cout
+            params["stages"].append(stage)
+        params["head"] = L.init_dense(take(1)[0], cin, num_classes)
+        return params
+
+    def apply(params, x):
+        x = L.relu(L.groupnorm(params["stem"]["gn"], L.conv(params["stem"]["conv"], x)))
+        for si, stage in enumerate(params["stages"]):
+            for bi, blk in enumerate(stage):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                if bottleneck:
+                    x = _apply_bottleneck(blk, x, stride)
+                else:
+                    x = _apply_basic(blk, x, stride)
+        x = L.global_avg_pool(x)
+        return L.dense(params["head"], x)
+
+    return init, apply
+
+
+def resnet18(width=1.0, num_classes=10):
+    """BasicBlock ResNet-18: stages [2,2,2,2] (11.2M params at width=1)."""
+    return _resnet([2, 2, 2, 2], bottleneck=False, width=width, num_classes=num_classes)
+
+
+def resnet50(width=1.0, num_classes=10):
+    """Bottleneck ResNet-50: stages [3,4,6,3] (the Fig. 2 large model)."""
+    return _resnet([3, 4, 6, 3], bottleneck=True, width=width, num_classes=num_classes)

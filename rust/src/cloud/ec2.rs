@@ -1,0 +1,69 @@
+//! EC2 GPU fleet substrate — the paper's distributed baseline.
+//!
+//! The baseline trains on `n` g4dn.xlarge instances (one NVIDIA T4 each),
+//! data-parallel, synchronizing per batch through S3 (§2 "GPU-Based
+//! Baseline"). Instances bill by wall-clock hour regardless of utilization —
+//! the over-provisioning the paper's serverless argument targets. Compute
+//! durations come from the calibrated T4 per-sample model.
+
+use crate::metrics::{CostKind, Ledger};
+use crate::sim::VTime;
+
+use super::calibration::ModelProfile;
+use super::pricing;
+
+/// A fleet of identical GPU instances.
+#[derive(Debug)]
+pub struct GpuFleet {
+    pub instances: usize,
+    /// Boot + CUDA/container init, seconds (paid once per experiment).
+    pub provision_secs: f64,
+}
+
+impl GpuFleet {
+    pub fn new(instances: usize) -> GpuFleet {
+        assert!(instances > 0);
+        GpuFleet { instances, provision_secs: 60.0 }
+    }
+
+    /// Fwd+bwd time for one batch of `batch` samples on one T4.
+    pub fn batch_secs(&self, model: &ModelProfile, batch: usize) -> f64 {
+        model.gpu_secs_per_sample * batch as f64
+    }
+
+    /// Bill the whole fleet for an experiment that ran `duration` seconds of
+    /// virtual wall time (instances are on the whole time — that is the
+    /// point the paper makes about always-on resources).
+    pub fn bill(&self, duration: f64, ledger: &mut Ledger) {
+        ledger.charge(CostKind::Ec2Gpu, pricing::gpu_cost(duration, self.instances));
+    }
+
+    /// Provisioning completes at `now + provision_secs` (excluded from the
+    /// paper's per-epoch accounting, available for ablations).
+    pub fn provision(&self, now: VTime) -> VTime {
+        now + self.provision_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::calibration::MOBILENET;
+
+    #[test]
+    fn batch_time_scales_with_batch() {
+        let fleet = GpuFleet::new(4);
+        let b512 = fleet.batch_secs(&MOBILENET, 512);
+        let b256 = fleet.batch_secs(&MOBILENET, 256);
+        assert!((b512 - 2.0 * b256).abs() < 1e-9);
+        assert!(b512 > 2.0 && b512 < 4.0, "T4 MobileNet B512 ≈ 3 s, got {b512}");
+    }
+
+    #[test]
+    fn billing_matches_paper_formula() {
+        let fleet = GpuFleet::new(4);
+        let mut ledger = Ledger::new();
+        fleet.bill(92.0, &mut ledger);
+        assert!((ledger.get(CostKind::Ec2Gpu) - 0.0538).abs() < 5e-4);
+    }
+}

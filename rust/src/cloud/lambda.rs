@@ -1,0 +1,159 @@
+//! AWS Lambda runtime substrate: invocation lifecycle + GB-second billing.
+//!
+//! Serverless training is *stateless*: every batch is a fresh invocation
+//! that must re-load the model (and often the data shard) before computing
+//! (§3.1 "Communication Overhead"). `LambdaRuntime` models exactly that
+//! lifecycle on the virtual timeline:
+//!
+//! ```text
+//! invoke = [cold-start?] + warm-init + state-load + body + finalize
+//! cost   = duration × allocated-GB × rate + request fee
+//! ```
+//!
+//! The *body* (gradient compute + protocol communication) is charged by the
+//! strategy code between `begin_invocation` and `finish_invocation`; this
+//! module owns the init/billing bookkeeping and the warm-pool state.
+
+use std::collections::HashSet;
+
+use crate::metrics::{CostKind, Ledger};
+use crate::sim::VTime;
+
+use super::calibration::{LAMBDA_COLD_START, LAMBDA_WARM_INIT};
+use super::pricing;
+
+/// An in-flight invocation handle (returned by `begin_invocation`).
+#[derive(Debug, Clone, Copy)]
+pub struct Invocation {
+    pub worker: usize,
+    /// When the invocation was requested.
+    pub requested: VTime,
+    /// When user code starts (after cold/warm init).
+    pub body_start: VTime,
+    /// Whether this invocation paid a cold start.
+    pub cold: bool,
+}
+
+/// Per-experiment Lambda runtime: warm pool + billing statistics.
+#[derive(Debug, Default)]
+pub struct LambdaRuntime {
+    warm: HashSet<usize>,
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub billed_secs: f64,
+    pub billed_gb_secs: f64,
+    /// Max duration across invocations (timeout-budget check).
+    pub max_duration: f64,
+}
+
+impl LambdaRuntime {
+    pub fn new() -> LambdaRuntime {
+        LambdaRuntime::default()
+    }
+
+    /// Start an invocation for `worker` at `now`. The first invocation of
+    /// each worker's function pays the cold start (sandbox + import of the
+    /// PyTorch-sized deployment package).
+    pub fn begin_invocation(&mut self, now: VTime, worker: usize) -> Invocation {
+        let cold = !self.warm.contains(&worker);
+        if cold {
+            self.warm.insert(worker);
+            self.cold_starts += 1;
+        }
+        self.invocations += 1;
+        let init = if cold { LAMBDA_COLD_START } else { 0.0 } + LAMBDA_WARM_INIT;
+        Invocation { worker, requested: now, body_start: now + init, cold }
+    }
+
+    /// Finish an invocation whose body completed at `body_end`; bills
+    /// duration × allocated memory. Returns the function's total duration.
+    pub fn finish_invocation(
+        &mut self,
+        inv: Invocation,
+        body_end: VTime,
+        allocated_mb: f64,
+        ledger: &mut Ledger,
+    ) -> f64 {
+        assert!(body_end >= inv.body_start, "invocation ended before it started");
+        let duration = body_end - inv.requested;
+        self.billed_secs += duration;
+        self.billed_gb_secs += duration * allocated_mb / 1024.0;
+        self.max_duration = self.max_duration.max(duration);
+        ledger.charge(CostKind::LambdaCompute, pricing::lambda_cost(duration, allocated_mb));
+        duration
+    }
+
+    /// Forget warm state (e.g. between epochs with long gaps).
+    pub fn evict_all(&mut self) {
+        self.warm.clear();
+    }
+
+    pub fn mean_duration(&self) -> f64 {
+        if self.invocations == 0 {
+            0.0
+        } else {
+            self.billed_secs / self.invocations as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_invocation_is_cold_then_warm() {
+        let mut rt = LambdaRuntime::new();
+        let a = rt.begin_invocation(VTime::ZERO, 0);
+        assert!(a.cold);
+        let b = rt.begin_invocation(VTime::from_secs(10.0), 0);
+        assert!(!b.cold);
+        let c = rt.begin_invocation(VTime::ZERO, 1);
+        assert!(c.cold);
+        assert_eq!(rt.cold_starts, 2);
+        assert!(a.body_start.secs() > LAMBDA_COLD_START);
+        assert!((b.body_start.secs() - (10.0 + LAMBDA_WARM_INIT)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn billing_follows_duration_times_memory() {
+        let mut rt = LambdaRuntime::new();
+        let mut ledger = Ledger::new();
+        let inv = rt.begin_invocation(VTime::ZERO, 0);
+        let end = inv.body_start + 10.0;
+        let dur = rt.finish_invocation(inv, end, 2048.0, &mut ledger);
+        let expected = pricing::lambda_cost(dur, 2048.0);
+        assert!((ledger.get(CostKind::LambdaCompute) - expected).abs() < 1e-12);
+        assert!(dur > 10.0); // init included in billed duration
+    }
+
+    #[test]
+    fn eviction_restores_cold_start() {
+        let mut rt = LambdaRuntime::new();
+        rt.begin_invocation(VTime::ZERO, 0);
+        rt.evict_all();
+        assert!(rt.begin_invocation(VTime::from_secs(1.0), 0).cold);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut rt = LambdaRuntime::new();
+        let mut ledger = Ledger::new();
+        for i in 0..3 {
+            let inv = rt.begin_invocation(VTime::ZERO, i);
+            rt.finish_invocation(inv, inv.body_start + 5.0, 1024.0, &mut ledger);
+        }
+        assert_eq!(rt.invocations, 3);
+        assert!(rt.mean_duration() > 5.0);
+        assert!(rt.max_duration >= rt.mean_duration());
+    }
+
+    #[test]
+    #[should_panic(expected = "ended before it started")]
+    fn rejects_time_travel() {
+        let mut rt = LambdaRuntime::new();
+        let mut ledger = Ledger::new();
+        let inv = rt.begin_invocation(VTime::from_secs(5.0), 0);
+        rt.finish_invocation(inv, VTime::ZERO, 1024.0, &mut ledger);
+    }
+}

@@ -1,0 +1,27 @@
+//! Simulated AWS substrates.
+//!
+//! The paper ran on AWS Lambda + RedisAI-on-EC2 + S3 + RabbitMQ + Step
+//! Functions + g4dn GPU instances. None of that is available here, so each
+//! managed service is rebuilt as an in-process substrate: real data
+//! structures hold real bytes (gradients actually move, in-database ops
+//! actually compute), while *time* is charged to virtual clocks from
+//! calibrated latency/bandwidth models and *money* into the [`crate::metrics::Ledger`]
+//! from the public AWS rate card. See DESIGN.md §2 for the substitution
+//! table and why each one preserves the paper's behaviour.
+
+pub mod calibration;
+pub mod ec2;
+pub mod lambda;
+pub mod object_store;
+pub mod pricing;
+pub mod queue;
+pub mod redis;
+pub mod step_functions;
+
+pub use calibration::{FrameworkKind, ModelProfile};
+pub use ec2::GpuFleet;
+pub use lambda::LambdaRuntime;
+pub use object_store::ObjectStore;
+pub use queue::MessageQueue;
+pub use redis::Redis;
+pub use step_functions::StepFunctions;

@@ -1,0 +1,206 @@
+//! S3-like object store: put/get with latency + bandwidth + request fees.
+//!
+//! The store frontend is modeled as a wide queueing resource (S3 scales
+//! horizontally; per-stream bandwidth and per-request latency are what a
+//! client observes). The GPU baseline synchronizes gradients through this
+//! substrate, LambdaML (AllReduce/ScatterReduce) uses it as the shared
+//! gradient bucket, and Lambda state loads read batches from it.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::{CommKind, CommStats, CostKind, Ledger};
+use crate::sim::{Resource, VTime};
+use crate::tensor::Slab;
+
+use super::calibration::{S3_BW, S3_LATENCY};
+use super::pricing;
+
+/// In-process S3: objects are real slabs, time is virtual.
+#[derive(Debug)]
+pub struct ObjectStore {
+    objects: HashMap<String, (Slab, VTime)>, // value + time it became visible
+    frontend: Resource,
+    latency: f64,
+    bandwidth: f64,
+}
+
+impl Default for ObjectStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ObjectStore {
+    pub fn new() -> ObjectStore {
+        ObjectStore::with_profile(S3_LATENCY, S3_BW, 64)
+    }
+
+    /// Custom latency/bandwidth/parallelism (used by ablation benches).
+    pub fn with_profile(latency: f64, bandwidth: f64, servers: usize) -> ObjectStore {
+        ObjectStore {
+            objects: HashMap::new(),
+            frontend: Resource::new("s3", servers),
+            latency,
+            bandwidth,
+        }
+    }
+
+    /// PUT: object becomes visible when the transfer completes. The
+    /// per-request latency is client-side RTT (it does not consume server
+    /// capacity); only the byte transfer occupies a frontend server.
+    pub fn put(
+        &mut self,
+        now: VTime,
+        key: &str,
+        slab: Slab,
+        ledger: &mut Ledger,
+        comm: &mut CommStats,
+    ) -> VTime {
+        let bytes = slab.nbytes();
+        let served = self.frontend.serve(now + self.latency, bytes as f64 / self.bandwidth);
+        let done = served.end;
+        self.objects.insert(key.to_string(), (slab, done));
+        ledger.charge(CostKind::S3Requests, pricing::s3_put_cost(1));
+        comm.record(CommKind::Put, bytes);
+        comm.comm_time += done - now;
+        done
+    }
+
+    /// GET: blocks (in virtual time) until the object is visible, then
+    /// transfers it. Returns the completion time and a copy of the slab.
+    pub fn get(
+        &mut self,
+        now: VTime,
+        key: &str,
+        ledger: &mut Ledger,
+        comm: &mut CommStats,
+    ) -> Result<(VTime, Slab)> {
+        let (slab, visible) = self
+            .objects
+            .get(key)
+            .ok_or_else(|| anyhow!("object not found: {key}"))?
+            .clone();
+        let start = now.max(visible) + self.latency;
+        let done = self.frontend.serve(start, slab.nbytes() as f64 / self.bandwidth).end;
+        ledger.charge(CostKind::S3Requests, pricing::s3_get_cost(1));
+        comm.record(CommKind::Get, slab.nbytes());
+        comm.comm_time += done - now;
+        Ok((done, slab))
+    }
+
+    /// Pipelined bulk GET over one connection: a single request latency,
+    /// then sequential transfers (the LambdaML master's reduce loop fetches
+    /// all worker gradients with connection reuse).
+    pub fn get_many(
+        &mut self,
+        now: VTime,
+        keys: &[String],
+        ledger: &mut Ledger,
+        comm: &mut CommStats,
+    ) -> Result<(VTime, Vec<Slab>)> {
+        let mut t = now + self.latency;
+        let mut out = Vec::with_capacity(keys.len());
+        for key in keys {
+            let (slab, visible) = self
+                .objects
+                .get(key)
+                .ok_or_else(|| anyhow!("object not found: {key}"))?
+                .clone();
+            let start = t.max(visible);
+            t = self.frontend.serve(start, slab.nbytes() as f64 / self.bandwidth).end;
+            ledger.charge(CostKind::S3Requests, pricing::s3_get_cost(1));
+            comm.record(CommKind::Get, slab.nbytes());
+            out.push(slab);
+        }
+        comm.comm_time += t - now;
+        Ok((t, out))
+    }
+
+    /// Earliest virtual time at which `key` is readable (None if absent).
+    pub fn visible_at(&self, key: &str) -> Option<VTime> {
+        self.objects.get(key).map(|(_, t)| *t)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.objects.contains_key(key)
+    }
+
+    pub fn delete(&mut self, key: &str) {
+        self.objects.remove(key);
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    /// Reset timeline + contents (new experiment).
+    pub fn clear(&mut self) {
+        self.objects.clear();
+        self.frontend.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Ledger, CommStats) {
+        (Ledger::new(), CommStats::new())
+    }
+
+    #[test]
+    fn put_get_roundtrip_preserves_data() {
+        let mut s3 = ObjectStore::new();
+        let (mut l, mut c) = env();
+        let t1 = s3.put(VTime::ZERO, "g/0", Slab::from_vec(vec![1.0, 2.0]), &mut l, &mut c);
+        let (t2, slab) = s3.get(t1, "g/0", &mut l, &mut c).unwrap();
+        assert!(t2 > t1);
+        assert_eq!(slab.as_slice().unwrap(), &[1.0, 2.0]);
+        assert_eq!(c.ops(CommKind::Put), 1);
+        assert_eq!(c.ops(CommKind::Get), 1);
+        assert!(l.get(CostKind::S3Requests) > 0.0);
+    }
+
+    #[test]
+    fn get_waits_for_visibility() {
+        let mut s3 = ObjectStore::new();
+        let (mut l, mut c) = env();
+        // Writer finishes at ~t=0.5 (100 MB at 100 MB/s handled below).
+        let big = Slab::virtual_of(10_000_000); // 40 MB -> 0.4 s + latency
+        let vis = s3.put(VTime::ZERO, "k", big, &mut l, &mut c);
+        // Reader arrives earlier than visibility.
+        let (done, _) = s3.get(VTime::ZERO, "k", &mut l, &mut c).unwrap();
+        assert!(done > vis, "reader must wait for the writer");
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let mut s3 = ObjectStore::new();
+        let (mut l, mut c) = env();
+        let t_small = s3.put(VTime::ZERO, "a", Slab::virtual_of(1000), &mut l, &mut c);
+        let mut s3b = ObjectStore::new();
+        let t_big = s3b.put(VTime::ZERO, "b", Slab::virtual_of(25_000_000), &mut l, &mut c);
+        assert!(t_big.secs() > t_small.secs() + 0.5);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let mut s3 = ObjectStore::new();
+        let (mut l, mut c) = env();
+        assert!(s3.get(VTime::ZERO, "nope", &mut l, &mut c).is_err());
+    }
+
+    #[test]
+    fn comm_time_accumulates() {
+        let mut s3 = ObjectStore::new();
+        let (mut l, mut c) = env();
+        s3.put(VTime::ZERO, "a", Slab::virtual_of(100), &mut l, &mut c);
+        assert!(c.comm_time >= S3_LATENCY);
+    }
+}

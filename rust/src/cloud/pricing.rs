@@ -1,0 +1,84 @@
+//! AWS pricing tables (us-east-1 on-demand, as used by the paper §3.3).
+//!
+//! The paper computes serverless cost as `time(s) × RAM(GB) × $0.0000166667`
+//! (Lambda x86 GB-second) and GPU cost from g4dn.xlarge hourly pricing; we
+//! additionally carry the request-level fees for S3/SQS/Step Functions so
+//! the orchestration-cost discussion (§5) is quantified rather than assumed.
+
+/// AWS Lambda x86: USD per GB-second.
+pub const LAMBDA_USD_PER_GB_SECOND: f64 = 0.000_016_666_7;
+/// AWS Lambda: USD per request.
+pub const LAMBDA_USD_PER_REQUEST: f64 = 0.000_000_2;
+/// EC2 g4dn.xlarge (1x NVIDIA T4, 16 GB): USD per hour, on-demand.
+pub const G4DN_XLARGE_USD_PER_HOUR: f64 = 0.526;
+/// EC2 r5.large hosting Redis/RedisAI (excluded by the paper's cost model).
+pub const REDIS_EC2_USD_PER_HOUR: f64 = 0.126;
+/// S3: USD per 1000 PUT/COPY/POST requests.
+pub const S3_USD_PER_1K_PUT: f64 = 0.005;
+/// S3: USD per 1000 GET requests.
+pub const S3_USD_PER_1K_GET: f64 = 0.0004;
+/// SQS/RabbitMQ-equivalent: USD per million messages.
+pub const QUEUE_USD_PER_MILLION_MSG: f64 = 0.40;
+/// Step Functions: USD per 1000 state transitions.
+pub const STEPFN_USD_PER_1K_TRANSITIONS: f64 = 0.025;
+
+/// Lambda execution cost: duration × allocated memory × GB-second rate,
+/// plus the per-request fee. This is exactly the paper's §4.1 formula —
+/// including its decimal MB→GB conversion (2685 MB = 2.685 GB), which we
+/// match so Table 2 cost columns reproduce digit-for-digit.
+pub fn lambda_cost(duration_secs: f64, allocated_mb: f64) -> f64 {
+    duration_secs * (allocated_mb / 1000.0) * LAMBDA_USD_PER_GB_SECOND
+        + LAMBDA_USD_PER_REQUEST
+}
+
+/// GPU instance cost for a duration.
+pub fn gpu_cost(duration_secs: f64, instances: usize) -> f64 {
+    duration_secs / 3600.0 * G4DN_XLARGE_USD_PER_HOUR * instances as f64
+}
+
+pub fn s3_put_cost(requests: u64) -> f64 {
+    requests as f64 / 1000.0 * S3_USD_PER_1K_PUT
+}
+
+pub fn s3_get_cost(requests: u64) -> f64 {
+    requests as f64 / 1000.0 * S3_USD_PER_1K_GET
+}
+
+pub fn queue_cost(messages: u64) -> f64 {
+    messages as f64 / 1_000_000.0 * QUEUE_USD_PER_MILLION_MSG
+}
+
+pub fn stepfn_cost(transitions: u64) -> f64 {
+    transitions as f64 / 1000.0 * STEPFN_USD_PER_1K_TRANSITIONS
+}
+
+pub fn redis_host_cost(duration_secs: f64, instances: usize) -> f64 {
+    duration_secs / 3600.0 * REDIS_EC2_USD_PER_HOUR * instances as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_spirt_mobilenet() {
+        // §4.1: 15.44 s at 2685 MB -> ~0.000689 USD per function.
+        let c = lambda_cost(15.44, 2685.0) - LAMBDA_USD_PER_REQUEST;
+        assert!((c - 0.000_689).abs() < 0.000_005, "got {c}");
+    }
+
+    #[test]
+    fn paper_example_gpu_mobilenet() {
+        // §4.1: 4 instances × 92 s -> ~0.0538 USD total.
+        let c = gpu_cost(92.0, 4);
+        assert!((c - 0.0538).abs() < 0.0005, "got {c}");
+    }
+
+    #[test]
+    fn request_fees_scale_linearly() {
+        assert!((s3_put_cost(2000) - 0.01).abs() < 1e-12);
+        assert!((s3_get_cost(1000) - 0.0004).abs() < 1e-12);
+        assert!((queue_cost(1_000_000) - 0.40).abs() < 1e-12);
+        assert!((stepfn_cost(4000) - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,196 @@
+//! Message queue substrate (RabbitMQ / SQS analog).
+//!
+//! Used for worker synchronization: SPIRT's sync queue (workers notify
+//! completion and poll until all peers report), MLLess's per-worker update
+//! queues and supervisor channel. Messages become *visible* at the virtual
+//! time their publish completes; a waiter's clock jumps to the visibility
+//! of the k-th message plus a poll latency — exactly the notify/poll
+//! semantics the paper describes, on the virtual timeline.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::{CommKind, CommStats, CostKind, Ledger};
+use crate::sim::VTime;
+
+use super::calibration::QUEUE_LATENCY;
+use super::pricing;
+
+/// One message: payload + visibility time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Msg {
+    pub body: String,
+    pub visible: VTime,
+}
+
+/// A named-topic message broker.
+#[derive(Debug, Default)]
+pub struct MessageQueue {
+    topics: BTreeMap<String, Vec<Msg>>,
+    latency: f64,
+    published: u64,
+}
+
+impl MessageQueue {
+    pub fn new() -> MessageQueue {
+        MessageQueue { topics: BTreeMap::new(), latency: QUEUE_LATENCY, published: 0 }
+    }
+
+    /// Publish `body` to `topic`; visible after the publish latency.
+    pub fn publish(
+        &mut self,
+        now: VTime,
+        topic: &str,
+        body: impl Into<String>,
+        ledger: &mut Ledger,
+        comm: &mut CommStats,
+    ) -> VTime {
+        let visible = now + self.latency;
+        let body = body.into();
+        let bytes = body.len() as u64 + 64; // envelope overhead
+        self.topics
+            .entry(topic.to_string())
+            .or_default()
+            .push(Msg { body, visible });
+        self.published += 1;
+        ledger.charge(CostKind::QueueMessages, pricing::queue_cost(1));
+        comm.record(CommKind::Publish, bytes);
+        visible
+    }
+
+    /// Virtual time at which the `k`-th message (1-based) on `topic` is
+    /// visible, or None if fewer than `k` messages were ever published.
+    pub fn kth_visible(&self, topic: &str, k: usize) -> Option<VTime> {
+        let msgs = self.topics.get(topic)?;
+        if msgs.len() < k || k == 0 {
+            return None;
+        }
+        let mut times: Vec<VTime> = msgs.iter().map(|m| m.visible).collect();
+        times.sort();
+        Some(times[k - 1])
+    }
+
+    /// Block (in virtual time) until `count` messages are visible on
+    /// `topic`, charging one poll. Returns the waiter's new clock.
+    pub fn wait_for(
+        &mut self,
+        now: VTime,
+        topic: &str,
+        count: usize,
+        ledger: &mut Ledger,
+        comm: &mut CommStats,
+    ) -> Result<VTime> {
+        let Some(t) = self.kth_visible(topic, count) else {
+            bail!("queue[{topic}]: only {} messages, waiting for {count}",
+                self.topics.get(topic).map(|m| m.len()).unwrap_or(0));
+        };
+        let done = now.max(t) + self.latency;
+        ledger.charge(CostKind::QueueMessages, pricing::queue_cost(1));
+        comm.record(CommKind::Poll, 64);
+        comm.comm_time += done - now;
+        Ok(done)
+    }
+
+    /// Consume every message visible by `now` on `topic` (drains them).
+    pub fn drain_visible(
+        &mut self,
+        now: VTime,
+        topic: &str,
+        ledger: &mut Ledger,
+        comm: &mut CommStats,
+    ) -> (VTime, Vec<String>) {
+        let done = now + self.latency;
+        let mut out = Vec::new();
+        if let Some(msgs) = self.topics.get_mut(topic) {
+            let mut rest = Vec::new();
+            for m in msgs.drain(..) {
+                if m.visible <= now {
+                    out.push(m.body);
+                } else {
+                    rest.push(m);
+                }
+            }
+            *msgs = rest;
+        }
+        ledger.charge(CostKind::QueueMessages, pricing::queue_cost(1));
+        comm.record(CommKind::Poll, 64 * (out.len() as u64 + 1));
+        comm.comm_time += self.latency;
+        (done, out)
+    }
+
+    /// Messages currently enqueued on a topic (any visibility).
+    pub fn depth(&self, topic: &str) -> usize {
+        self.topics.get(topic).map(|m| m.len()).unwrap_or(0)
+    }
+
+    pub fn total_published(&self) -> u64 {
+        self.published
+    }
+
+    pub fn clear(&mut self) {
+        self.topics.clear();
+        self.published = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Ledger, CommStats) {
+        (Ledger::new(), CommStats::new())
+    }
+
+    #[test]
+    fn publish_then_wait() {
+        let mut q = MessageQueue::new();
+        let (mut l, mut c) = env();
+        q.publish(VTime::from_secs(1.0), "sync", "w0", &mut l, &mut c);
+        q.publish(VTime::from_secs(3.0), "sync", "w1", &mut l, &mut c);
+        // Waiter arrives early; must wait for the 2nd message (3.0 + lat).
+        let t = q.wait_for(VTime::ZERO, "sync", 2, &mut l, &mut c).unwrap();
+        assert!(t.secs() >= 3.0 + QUEUE_LATENCY);
+        // Waiter arriving late pays only the poll.
+        let t2 = q.wait_for(VTime::from_secs(10.0), "sync", 2, &mut l, &mut c).unwrap();
+        assert!((t2.secs() - (10.0 + QUEUE_LATENCY)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wait_for_unpublished_fails() {
+        let mut q = MessageQueue::new();
+        let (mut l, mut c) = env();
+        assert!(q.wait_for(VTime::ZERO, "sync", 1, &mut l, &mut c).is_err());
+    }
+
+    #[test]
+    fn kth_visible_is_order_statistic() {
+        let mut q = MessageQueue::new();
+        let (mut l, mut c) = env();
+        q.publish(VTime::from_secs(5.0), "t", "late", &mut l, &mut c);
+        q.publish(VTime::from_secs(1.0), "t", "early", &mut l, &mut c);
+        assert!(q.kth_visible("t", 1).unwrap().secs() < 2.0);
+        assert!(q.kth_visible("t", 2).unwrap().secs() > 4.0);
+        assert!(q.kth_visible("t", 3).is_none());
+    }
+
+    #[test]
+    fn drain_visible_respects_time() {
+        let mut q = MessageQueue::new();
+        let (mut l, mut c) = env();
+        q.publish(VTime::ZERO, "t", "a", &mut l, &mut c);
+        q.publish(VTime::from_secs(100.0), "t", "b", &mut l, &mut c);
+        let (_, got) = q.drain_visible(VTime::from_secs(1.0), "t", &mut l, &mut c);
+        assert_eq!(got, vec!["a"]);
+        assert_eq!(q.depth("t"), 1); // "b" still pending
+    }
+
+    #[test]
+    fn message_costs_charged() {
+        let mut q = MessageQueue::new();
+        let (mut l, mut c) = env();
+        q.publish(VTime::ZERO, "t", "x", &mut l, &mut c);
+        assert!(l.get(CostKind::QueueMessages) > 0.0);
+        assert_eq!(c.ops(CommKind::Publish), 1);
+    }
+}

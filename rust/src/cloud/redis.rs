@@ -1,0 +1,396 @@
+//! Redis/RedisAI substrate: KV tensor store + in-database computation.
+//!
+//! SPIRT hosts one RedisAI instance per worker and pushes the gradient math
+//! *into* the database (AI.TENSORSET + scripted averaging/SGD), so slabs
+//! never cross the network during aggregation — the paper measures this as
+//! 67.32→37.41 s averaging and 27.5→4.8 s updates vs a naive
+//! fetch-update-store loop (§4.2). This substrate reproduces both paths:
+//!
+//! * network ops (`set`/`get`) charge latency + bytes/bandwidth and move
+//!   real slabs in and out;
+//! * in-DB ops (`acc_in_db`, `avg_update_in_db`) run a [`SlabMath`] engine
+//!   *inside* the store — on the end-to-end path that engine is the PJRT
+//!   executable of the fused Pallas kernel (`runtime::PjrtMath`), the
+//!   faithful RedisAI analog — and charge only the in-instance throughput.
+//!
+//! Redis command processing is single-threaded: one queueing server, so
+//! concurrent clients serialize exactly like a real instance.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::{CommKind, CommStats, Ledger};
+use crate::sim::{Resource, VTime};
+use crate::tensor::{RustMath, Slab, SlabMath};
+
+use super::calibration::{
+    CLIENT_TENSOR_BW, INDB_UPDATE_BW, REDIS_BW, REDIS_INDB_BW, REDIS_LATENCY, TORCH_REBUILD_BW,
+};
+
+/// One Redis/RedisAI instance.
+pub struct Redis {
+    name: String,
+    store: HashMap<String, (Slab, VTime)>,
+    cmd: Resource, // single-threaded command loop (network transfers)
+    /// RedisAI executes scripted tensor ops on a background worker thread
+    /// (AI.SCRIPTEXEC threadpool) — the command loop stays responsive while
+    /// accumulation chains run, matching RedisAI's actual architecture.
+    script_engine: Resource,
+    math: Arc<dyn SlabMath>,
+    latency: f64,
+    net_bw: f64,
+    indb_bw: f64,
+}
+
+impl std::fmt::Debug for Redis {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Redis")
+            .field("name", &self.name)
+            .field("keys", &self.store.len())
+            .finish()
+    }
+}
+
+impl Redis {
+    pub fn new(name: impl Into<String>) -> Redis {
+        Redis::with_math(name, Arc::new(RustMath))
+    }
+
+    /// Install the in-database math engine (PJRT-backed on the e2e path).
+    pub fn with_math(name: impl Into<String>, math: Arc<dyn SlabMath>) -> Redis {
+        Redis {
+            name: name.into(),
+            store: HashMap::new(),
+            cmd: Resource::new("redis-cmd", 1),
+            script_engine: Resource::new("redisai-scripts", 1),
+            math,
+            latency: REDIS_LATENCY,
+            net_bw: REDIS_BW,
+            indb_bw: REDIS_INDB_BW,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// SET: transfer the slab over the network into the store. Per-op
+    /// latency is client-side RTT; only the transfer occupies the command
+    /// loop.
+    pub fn set(&mut self, now: VTime, key: &str, slab: Slab, comm: &mut CommStats) -> VTime {
+        let bytes = slab.nbytes();
+        let done = self.cmd.serve(now + self.latency, bytes as f64 / self.net_bw).end;
+        self.store.insert(key.to_string(), (slab, done));
+        comm.record(CommKind::Put, bytes);
+        comm.comm_time += done - now;
+        done
+    }
+
+    /// GET: transfer the slab out (waits for visibility).
+    pub fn get(&mut self, now: VTime, key: &str, comm: &mut CommStats) -> Result<(VTime, Slab)> {
+        let (slab, visible) = self
+            .store
+            .get(key)
+            .ok_or_else(|| anyhow!("redis[{}]: missing key {key}", self.name))?
+            .clone();
+        let start = now.max(visible) + self.latency;
+        let done = self.cmd.serve(start, slab.nbytes() as f64 / self.net_bw).end;
+        comm.record(CommKind::Get, slab.nbytes());
+        comm.comm_time += done - now;
+        Ok((done, slab))
+    }
+
+    /// Client-side tensor GET (tensorget → numpy conversion in a Python
+    /// function — the naive fetch-update-store path of §4.2).
+    pub fn get_tensor_client(
+        &mut self,
+        now: VTime,
+        key: &str,
+        comm: &mut CommStats,
+    ) -> Result<(VTime, Slab)> {
+        let (slab, visible) = self.peek(key)?;
+        let start = now.max(visible) + self.latency;
+        let done = self.cmd.serve(start, slab.nbytes() as f64 / CLIENT_TENSOR_BW).end;
+        comm.record(CommKind::Get, slab.nbytes());
+        comm.comm_time += done - now;
+        Ok((done, slab))
+    }
+
+    /// Client-side tensor SET (numpy → tensorset from a Python function).
+    pub fn set_tensor_client(
+        &mut self,
+        now: VTime,
+        key: &str,
+        slab: Slab,
+        comm: &mut CommStats,
+    ) -> VTime {
+        let bytes = slab.nbytes();
+        let done = self.cmd.serve(now + self.latency, bytes as f64 / CLIENT_TENSOR_BW).end;
+        self.store.insert(key.to_string(), (slab, done));
+        comm.record(CommKind::Put, bytes);
+        comm.comm_time += done - now;
+        done
+    }
+
+    /// Client-side model rebuild: torch.load + state_dict copy after a
+    /// fetch. Pure client time (no Redis server involvement).
+    pub fn rebuild_secs(bytes: u64) -> f64 {
+        bytes as f64 / TORCH_REBUILD_BW
+    }
+
+    /// Earliest time `key` is visible.
+    pub fn visible_at(&self, key: &str) -> Option<VTime> {
+        self.store.get(key).map(|(_, t)| *t)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.store.contains_key(key)
+    }
+
+    /// In-DB `dst = src_acc + w * src_g` (AI script). Bytes never leave the
+    /// instance; duration uses in-instance throughput over 3 slab passes.
+    pub fn acc_in_db(
+        &mut self,
+        now: VTime,
+        dst: &str,
+        src_acc: &str,
+        src_g: &str,
+        w: f32,
+        comm: &mut CommStats,
+    ) -> Result<VTime> {
+        let (acc, v1) = self.peek(src_acc)?;
+        let (g, v2) = self.peek(src_g)?;
+        let out = self.math.acc(&acc, &g, w)?;
+        let bytes = 3 * out.nbytes();
+        let start = now.max(v1).max(v2) + self.latency;
+        let done = self.script_engine.serve(start, bytes as f64 / self.indb_bw).end;
+        self.store.insert(dst.to_string(), (out, done));
+        comm.record(CommKind::InDb, bytes);
+        Ok(done)
+    }
+
+    /// In-DB `dst = w * src` (scripted scaling — SPIRT's in-database
+    /// gradient averaging: `avg = gsum / k` without leaving the instance).
+    pub fn scale_in_db(
+        &mut self,
+        now: VTime,
+        dst: &str,
+        src: &str,
+        w: f32,
+        comm: &mut CommStats,
+    ) -> Result<VTime> {
+        let (src_slab, visible) = self.peek(src)?;
+        let out = self.math.acc(&src_slab.zeros_like(), &src_slab, w)?;
+        let bytes = 2 * out.nbytes();
+        let start = now.max(visible) + self.latency;
+        let done = self.script_engine.serve(start, bytes as f64 / self.indb_bw).end;
+        self.store.insert(dst.to_string(), (out, done));
+        comm.record(CommKind::InDb, bytes);
+        Ok(done)
+    }
+
+    /// In-DB fused `theta = theta - lr * inv_k * gsum` (SPIRT model update).
+    pub fn avg_update_in_db(
+        &mut self,
+        now: VTime,
+        theta_key: &str,
+        gsum_key: &str,
+        inv_k: f32,
+        lr: f32,
+        comm: &mut CommStats,
+    ) -> Result<VTime> {
+        let (theta, v1) = self.peek(theta_key)?;
+        let (gsum, v2) = self.peek(gsum_key)?;
+        let out = self.math.avg_update(&theta, &gsum, inv_k, lr)?;
+        let bytes = 3 * out.nbytes();
+        let start = now.max(v1).max(v2);
+        // TorchScript SGD is slower than a scripted buffer add (§4.2: 4.8 s
+        // for a 46.8 MB model).
+        let done = self
+            .script_engine
+            .serve(start + self.latency, bytes as f64 / INDB_UPDATE_BW)
+            .end;
+        self.store.insert(theta_key.to_string(), (out, done));
+        comm.record(CommKind::InDb, bytes);
+        Ok(done)
+    }
+
+    /// Value + visibility without timeline effects (internal).
+    fn peek(&self, key: &str) -> Result<(Slab, VTime)> {
+        self.store
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("redis[{}]: missing key {key}", self.name))
+    }
+
+    /// Read a stored slab without modeling a transfer (test/assert helper).
+    pub fn peek_slab(&self, key: &str) -> Result<Slab> {
+        Ok(self.peek(key)?.0)
+    }
+
+    pub fn delete(&mut self, key: &str) {
+        self.store.remove(key);
+    }
+
+    pub fn clear(&mut self) {
+        self.store.clear();
+        self.cmd.reset();
+        self.script_engine.reset();
+    }
+
+    /// Bill the hosting EC2 instance for the experiment duration (the paper
+    /// excludes this; we track it under `CostKind::Ec2Redis`).
+    pub fn bill_hosting(&self, duration: f64, ledger: &mut Ledger) {
+        ledger.charge(
+            crate::metrics::CostKind::Ec2Redis,
+            super::pricing::redis_host_cost(duration, 1),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut r = Redis::new("w0");
+        let mut c = CommStats::new();
+        let t1 = r.set(VTime::ZERO, "g", Slab::from_vec(vec![1.0, 2.0]), &mut c);
+        let (t2, s) = r.get(t1, "g", &mut c).unwrap();
+        assert!(t2 > t1);
+        assert_eq!(s.as_slice().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn indb_acc_computes_real_math() {
+        let mut r = Redis::new("w0");
+        let mut c = CommStats::new();
+        r.set(VTime::ZERO, "acc", Slab::from_vec(vec![1.0, 1.0]), &mut c);
+        r.set(VTime::ZERO, "g", Slab::from_vec(vec![2.0, 4.0]), &mut c);
+        r.acc_in_db(VTime::from_secs(1.0), "acc", "acc", "g", 0.5, &mut c).unwrap();
+        let out = r.peek_slab("acc").unwrap();
+        assert_eq!(out.as_slice().unwrap(), &[2.0, 3.0]);
+        assert!(c.bytes(CommKind::InDb) > 0);
+    }
+
+    #[test]
+    fn indb_avg_update_applies_fused_step() {
+        let mut r = Redis::new("w0");
+        let mut c = CommStats::new();
+        r.set(VTime::ZERO, "theta", Slab::from_vec(vec![1.0]), &mut c);
+        r.set(VTime::ZERO, "gsum", Slab::from_vec(vec![4.0]), &mut c);
+        r.avg_update_in_db(VTime::from_secs(1.0), "theta", "gsum", 0.25, 0.1, &mut c)
+            .unwrap();
+        let theta = r.peek_slab("theta").unwrap();
+        assert!((theta.as_slice().unwrap()[0] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn indb_is_faster_than_fetch_update_store() {
+        // The §4.2 contrast: the naive path round-trips tensors through a
+        // Python client (tensorget → numpy → tensorset); the in-DB path
+        // runs one scripted op on identically sized slabs.
+        let n = 2_000_000; // 8 MB
+        let mut c = CommStats::new();
+
+        let mut naive = Redis::new("naive");
+        naive.set(VTime::ZERO, "acc", Slab::virtual_of(n), &mut c);
+        naive.set(VTime::ZERO, "g", Slab::virtual_of(n), &mut c);
+        let t0 = VTime::from_secs(1.0);
+        let (t1, _) = naive.get_tensor_client(t0, "acc", &mut c).unwrap();
+        let (t2, _) = naive.get_tensor_client(t1, "g", &mut c).unwrap();
+        let t_naive = naive.set_tensor_client(t2, "acc", Slab::virtual_of(n), &mut c) - t0;
+
+        // In-DB: one scripted op.
+        let mut indb = Redis::new("indb");
+        indb.set(VTime::ZERO, "acc", Slab::virtual_of(n), &mut c);
+        indb.set(VTime::ZERO, "g", Slab::virtual_of(n), &mut c);
+        let t_indb =
+            indb.acc_in_db(t0, "acc", "acc", "g", 1.0, &mut c).unwrap() - t0;
+
+        assert!(
+            t_indb < t_naive * 0.75,
+            "in-DB {t_indb:.3}s should beat naive {t_naive:.3}s"
+        );
+    }
+
+    #[test]
+    fn paper_4_2_averaging_times_reproduce() {
+        // ResNet-18 (46.8 MB), 24 minibatch accumulations per epoch.
+        let n = 11_700_000;
+        let mut c = CommStats::new();
+
+        // Naive: each stateless function fetches acc + grad, stores acc.
+        let mut naive = Redis::new("naive");
+        naive.set(VTime::ZERO, "acc", Slab::virtual_of(n), &mut c);
+        naive.set(VTime::ZERO, "g", Slab::virtual_of(n), &mut c);
+        let mut t = VTime::from_secs(0.0);
+        let start = t;
+        for _ in 0..24 {
+            let (t1, _) = naive.get_tensor_client(t, "acc", &mut c).unwrap();
+            let (t2, _) = naive.get_tensor_client(t1, "g", &mut c).unwrap();
+            t = naive.set_tensor_client(t2, "acc", Slab::virtual_of(n), &mut c);
+        }
+        let naive_secs = t - start;
+        assert!((naive_secs - 67.32).abs() / 67.32 < 0.05, "naive {naive_secs:.1}s vs 67.32");
+
+        // In-DB: 24 scripted accumulations.
+        let mut indb = Redis::new("indb");
+        indb.set(VTime::ZERO, "gsum", Slab::virtual_of(n), &mut c);
+        indb.set(VTime::ZERO, "g", Slab::virtual_of(n), &mut c);
+        let mut t = VTime::from_secs(0.0);
+        let start = t;
+        for _ in 0..24 {
+            t = indb.acc_in_db(t, "gsum", "gsum", "g", 1.0, &mut c).unwrap();
+        }
+        let indb_secs = t - start;
+        assert!((indb_secs - 37.41).abs() / 37.41 < 0.05, "in-DB {indb_secs:.1}s vs 37.41");
+    }
+
+    #[test]
+    fn paper_4_2_update_times_reproduce() {
+        // ResNet-18 model update: naive (fetch theta+gsum, rebuild
+        // state_dict, store) vs in-DB fused TorchScript SGD.
+        let n = 11_700_000;
+        let bytes = 4 * n as u64;
+        let mut c = CommStats::new();
+
+        let mut r = Redis::new("upd");
+        r.set(VTime::ZERO, "theta", Slab::virtual_of(n), &mut c);
+        r.set(VTime::ZERO, "gsum", Slab::virtual_of(n), &mut c);
+
+        let t0 = VTime::from_secs(0.0);
+        let (t1, _) = r.get_tensor_client(t0, "theta", &mut c).unwrap();
+        let (t2, _) = r.get_tensor_client(t1, "gsum", &mut c).unwrap();
+        let t3 = t2 + Redis::rebuild_secs(bytes);
+        let t_naive = r.set_tensor_client(t3, "theta", Slab::virtual_of(n), &mut c) - t0;
+        assert!((t_naive - 27.5).abs() / 27.5 < 0.10, "naive update {t_naive:.1}s vs 27.5");
+
+        let t_indb = r
+            .avg_update_in_db(VTime::from_secs(100.0), "theta", "gsum", 1.0, 0.1, &mut c)
+            .unwrap()
+            - VTime::from_secs(100.0);
+        assert!((t_indb - 4.8).abs() / 4.8 < 0.10, "in-DB update {t_indb:.2}s vs 4.8");
+    }
+
+    #[test]
+    fn single_threaded_commands_serialize() {
+        let mut r = Redis::new("w0");
+        let mut c = CommStats::new();
+        let big = Slab::virtual_of(30_000_000); // 120 MB -> 0.4 s at 300 MB/s
+        let t_a = r.set(VTime::ZERO, "a", big.clone(), &mut c);
+        let t_b = r.set(VTime::ZERO, "b", big, &mut c);
+        assert!(t_b.secs() > t_a.secs() + 0.3, "second client must queue");
+    }
+
+    #[test]
+    fn missing_keys_error() {
+        let mut r = Redis::new("w0");
+        let mut c = CommStats::new();
+        assert!(r.get(VTime::ZERO, "x", &mut c).is_err());
+        assert!(r.acc_in_db(VTime::ZERO, "d", "a", "b", 1.0, &mut c).is_err());
+    }
+}

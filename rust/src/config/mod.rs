@@ -1,0 +1,233 @@
+//! Experiment configuration: a small INI/TOML-subset parser + typed configs.
+//!
+//! The CLI accepts `--config <file>` with sections and `key = value` lines:
+//!
+//! ```text
+//! [experiment]
+//! name = "table2"
+//! workers = 4
+//!
+//! [training]
+//! lr = 0.08
+//! target_acc = 0.8
+//! ```
+//!
+//! Values: strings (quoted), numbers, booleans. Flat dotted lookup
+//! (`section.key`). No external dependencies.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("expected non-negative integer, got {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Flat `section.key -> value` configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            values.insert(
+                full_key,
+                parse_value(val.trim())
+                    .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?,
+            );
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => Ok(v.as_str()?.to_string()),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64(),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize(),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool(),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    if let Some(stripped) = text.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(n) = text.parse::<f64>() {
+        return Ok(Value::Num(n));
+    }
+    // Bare strings are accepted for convenience (framework names etc.).
+    if text.chars().all(|c| c.is_alphanumeric() || "_-.".contains(c)) {
+        return Ok(Value::Str(text.to_string()));
+    }
+    bail!("cannot parse value {text:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment setup
+[experiment]
+name = "table2"     # quoted string
+workers = 4
+arch = mobilenet    # bare string
+
+[training]
+lr = 0.08
+evaluate = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("experiment.name", "x").unwrap(), "table2");
+        assert_eq!(c.usize_or("experiment.workers", 0).unwrap(), 4);
+        assert_eq!(c.str_or("experiment.arch", "x").unwrap(), "mobilenet");
+        assert!((c.f64_or("training.lr", 0.0).unwrap() - 0.08).abs() < 1e-12);
+        assert!(c.bool_or("training.evaluate", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("x.y", 7).unwrap(), 7);
+        assert_eq!(c.str_or("a.b", "z").unwrap(), "z");
+    }
+
+    #[test]
+    fn type_errors_are_loud() {
+        let c = Config::parse("[a]\nk = \"str\"").unwrap();
+        assert!(c.f64_or("a.k", 0.0).is_err());
+        assert!(c.usize_or("a.k", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("no equals sign here").is_err());
+    }
+
+    #[test]
+    fn comments_respect_quotes() {
+        let c = Config::parse("k = \"a#b\" # trailing").unwrap();
+        assert_eq!(c.str_or("k", "").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn fractional_usize_rejected() {
+        let c = Config::parse("k = 4.5").unwrap();
+        assert!(c.usize_or("k", 0).is_err());
+    }
+}

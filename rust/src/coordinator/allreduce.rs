@@ -1,0 +1,194 @@
+//! LambdaML AllReduce: master-aggregated synchronization (§2, Table 1).
+//!
+//! Per batch round every worker pushes its gradient to shared storage; a
+//! designated master (worker 0) fetches all of them, aggregates, and pushes
+//! the result; everyone fetches the aggregate and updates locally. Simple,
+//! but the master serializes `W` gradient transfers per round — the
+//! scalability bottleneck the paper measures in Fig. 2 (21.88 s at 16
+//! workers on ResNet-50).
+
+use crate::cloud::FrameworkKind;
+use crate::metrics::Stage;
+use crate::tensor::Slab;
+use crate::Result;
+
+use super::env::{ClusterEnv, Device};
+use super::{EpochStats, Strategy};
+
+#[derive(Debug, Default)]
+pub struct AllReduce {
+    pub master: usize,
+}
+
+impl AllReduce {
+    pub fn new() -> AllReduce {
+        AllReduce { master: 0 }
+    }
+
+    /// One synchronization round after gradients are computed: workers put,
+    /// master aggregates, workers fetch + update. Factored out so Fig. 2 can
+    /// measure a single round's communication time.
+    pub fn sync_round(
+        &self,
+        env: &mut ClusterEnv,
+        round_tag: &str,
+        grads: Vec<Slab>,
+    ) -> Result<()> {
+        let w_count = env.num_workers();
+
+        // Every worker uploads its gradient.
+        for w in 0..w_count {
+            let key = format!("{round_tag}/g{w}");
+            let t0 = env.workers[w].clock;
+            let done = env.store.put(t0, &key, grads[w].clone(), &mut env.ledger, &mut env.comm);
+            let dt = done - t0;
+            env.workers[w].clock = done;
+            env.stages.add(Stage::Synchronize, dt);
+        }
+
+        // Master bulk-fetches all gradients (pipelined over one connection,
+        // still serialized on its clock — the Fig. 2 bottleneck), averages.
+        let m = self.master;
+        let keys: Vec<String> = (0..w_count).map(|w| format!("{round_tag}/g{w}")).collect();
+        let t0 = env.workers[m].clock;
+        let (done, fetched) = env.store.get_many(t0, &keys, &mut env.ledger, &mut env.comm)?;
+        env.stages.add(Stage::Synchronize, done - t0);
+        env.workers[m].clock = done;
+        let agg_secs = env.local_agg_secs(w_count);
+        env.workers[m].clock += agg_secs;
+        env.stages.add(Stage::Synchronize, agg_secs);
+        let mean = Slab::mean(&fetched)?;
+        let t0 = env.workers[m].clock;
+        let done = env.store.put(t0, &format!("{round_tag}/agg"), mean, &mut env.ledger, &mut env.comm);
+        env.stages.add(Stage::Synchronize, done - t0);
+        env.workers[m].clock = done;
+
+        // Everyone fetches the aggregate and applies it.
+        for w in 0..w_count {
+            let t0 = env.workers[w].clock;
+            let (done, agg) = env.store.get(t0, &format!("{round_tag}/agg"), &mut env.ledger, &mut env.comm)?;
+            env.stages.add(Stage::Synchronize, done - t0);
+            env.workers[w].clock = done;
+            // Gradients were already averaged by the master: inv_k = 1.
+            env.apply_update(w, &agg, 1.0)?;
+        }
+        Ok(())
+    }
+}
+
+impl Strategy for AllReduce {
+    fn kind(&self) -> FrameworkKind {
+        FrameworkKind::AllReduce
+    }
+
+    fn run_epoch(&mut self, env: &mut ClusterEnv) -> Result<EpochStats> {
+        env.begin_epoch();
+        let w_count = env.num_workers();
+        let start = env.max_clock();
+        let alloc_mb = env.allocated_mb();
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0usize;
+
+        for round in 0..env.batches_per_epoch {
+            let tag = format!("e{}/r{}", env.epoch, round);
+
+            // Each batch is one stateless invocation per worker.
+            let mut invs = Vec::with_capacity(w_count);
+            let mut grads = Vec::with_capacity(w_count);
+            for w in 0..w_count {
+                let inv = env.lambda.begin_invocation(env.workers[w].clock, w);
+                env.workers[w].clock = inv.body_start;
+                invs.push(inv);
+                env.state_load(w);
+                let g = env.compute_grad(w, Device::LambdaCpu)?;
+                if let Some(l) = g.loss {
+                    loss_sum += l;
+                    loss_n += 1;
+                }
+                grads.push(g.grad);
+            }
+
+            self.sync_round(env, &tag, grads)?;
+
+            // Residual orchestration overhead (calibration), then billing.
+            let overhead = self.kind().batch_overhead();
+            for w in 0..w_count {
+                env.charge_sync(w, overhead);
+                let end = env.workers[w].clock;
+                env.lambda.finish_invocation(invs[w], end, alloc_mb, &mut env.ledger);
+            }
+        }
+
+        let epoch_secs = env.max_clock() - start;
+        Ok(EpochStats {
+            mean_loss: (loss_n > 0).then(|| loss_sum / loss_n as f64),
+            batches: env.batches_per_epoch * w_count,
+            epoch_secs,
+            mean_fn_secs: env.lambda.mean_duration(),
+        })
+    }
+
+    fn stage_table(&self) -> Vec<(Stage, &'static str)> {
+        vec![
+            (Stage::FetchDataset, "Each worker fetches a minibatch."),
+            (
+                Stage::ComputeGradients,
+                "Gradients are computed for the minibatch and stored in a shared database.",
+            ),
+            (
+                Stage::Synchronize,
+                "A designated master worker retrieves all gradients, aggregates, stores the \
+                 result; other workers fetch the aggregated gradient.",
+            ),
+            (Stage::ModelUpdate, "Workers apply the aggregated gradient to update the model."),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::FrameworkKind;
+    use crate::coordinator::env::EnvConfig;
+
+    fn env(workers: usize) -> ClusterEnv {
+        ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", workers).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn epoch_runs_and_bills_all_invocations() {
+        let mut e = env(4);
+        let stats = AllReduce::new().run_epoch(&mut e).unwrap();
+        assert_eq!(stats.batches, 4 * 24);
+        assert_eq!(e.lambda.invocations, 4 * 24);
+        assert!(stats.epoch_secs > 0.0);
+        assert!(e.ledger.total_paper() > 0.0);
+        // per-batch duration should land in the paper's ballpark (14.38 s)
+        assert!(
+            (stats.mean_fn_secs - 14.382).abs() / 14.382 < 0.15,
+            "mean fn duration {:.2}s vs paper 14.382s",
+            stats.mean_fn_secs
+        );
+    }
+
+    #[test]
+    fn master_is_slowest_clock() {
+        let mut e = env(4);
+        AllReduce::new().run_epoch(&mut e).unwrap();
+        // Master (w0) fetched W grads per round; its clock must lead or tie.
+        let m = e.workers[0].clock;
+        assert!(e.workers.iter().all(|w| w.clock <= m));
+    }
+
+    #[test]
+    fn comm_scales_with_workers() {
+        let mut small = env(4);
+        AllReduce::new().run_epoch(&mut small).unwrap();
+        let mut big = env(8);
+        AllReduce::new().run_epoch(&mut big).unwrap();
+        assert!(big.comm.wire_bytes() > small.comm.wire_bytes() * 3 / 2);
+    }
+}

@@ -1,0 +1,81 @@
+//! Early stopping / convergence detection (paper §4.3: "Early stopping was
+//! applied to detect convergence in all setups").
+
+/// Tracks test accuracy across epochs; signals stop at a target accuracy or
+/// when improvement stalls for `patience` epochs.
+#[derive(Debug, Clone)]
+pub struct EarlyStopper {
+    pub target_acc: f64,
+    pub patience: usize,
+    pub min_delta: f64,
+    best: f64,
+    stale: usize,
+    /// Epoch (1-based) at which `target_acc` was first reached.
+    pub reached_target_at: Option<usize>,
+}
+
+impl EarlyStopper {
+    pub fn new(target_acc: f64, patience: usize) -> EarlyStopper {
+        EarlyStopper {
+            target_acc,
+            patience,
+            min_delta: 1e-4,
+            best: f64::NEG_INFINITY,
+            stale: 0,
+            reached_target_at: None,
+        }
+    }
+
+    /// Record an epoch's accuracy; returns `true` when training should stop.
+    pub fn observe(&mut self, epoch: usize, acc: f64) -> bool {
+        if acc >= self.target_acc && self.reached_target_at.is_none() {
+            self.reached_target_at = Some(epoch);
+        }
+        if acc > self.best + self.min_delta {
+            self.best = acc;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+        }
+        acc >= self.target_acc || self.stale >= self.patience
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stops_at_target() {
+        let mut s = EarlyStopper::new(0.8, 5);
+        assert!(!s.observe(1, 0.5));
+        assert!(!s.observe(2, 0.7));
+        assert!(s.observe(3, 0.81));
+        assert_eq!(s.reached_target_at, Some(3));
+    }
+
+    #[test]
+    fn stops_on_plateau() {
+        let mut s = EarlyStopper::new(0.99, 3);
+        assert!(!s.observe(1, 0.60));
+        assert!(!s.observe(2, 0.60));
+        assert!(!s.observe(3, 0.60));
+        assert!(s.observe(4, 0.60));
+        assert_eq!(s.reached_target_at, None);
+        assert!((s.best() - 0.60).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvement_resets_patience() {
+        let mut s = EarlyStopper::new(0.99, 2);
+        assert!(!s.observe(1, 0.5));
+        assert!(!s.observe(2, 0.5));
+        assert!(!s.observe(3, 0.6)); // improvement resets
+        assert!(!s.observe(4, 0.6));
+        assert!(s.observe(5, 0.6));
+    }
+}

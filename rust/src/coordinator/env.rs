@@ -1,0 +1,467 @@
+//! Cluster environment: workers + substrates + measurement plane.
+//!
+//! One `ClusterEnv` is one experiment: it owns the worker states (virtual
+//! clock + model replica + data shard), every cloud substrate instance, the
+//! gradient source (real PJRT artifacts or size-only), and the cost/comm/
+//! stage accumulators. Strategies mutate it; the experiment drivers read the
+//! results out of it.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::cloud::calibration::{self, FrameworkKind, ModelProfile};
+use crate::cloud::{GpuFleet, LambdaRuntime, MessageQueue, ObjectStore, Redis, StepFunctions};
+use crate::data::{Dataset, SyntheticCifar, IMG_ELEMS};
+use crate::metrics::{CommStats, Ledger, Stage, StageTimer};
+use crate::runtime::{Engine, PjrtMath};
+use crate::sim::VTime;
+use crate::tensor::Slab;
+use crate::util::rng::Rng;
+
+/// Local (in-function) aggregation memory bandwidth, bytes/sec — the speed
+/// of summing gradient slabs inside a worker (NumPy-level memory-bound op).
+pub const LOCAL_AGG_BW: f64 = 2.0e9;
+
+/// Whether gradients come from the PJRT runtime or are size-only.
+pub enum GradMode {
+    /// Size-only gradients; losses are not tracked. Used by the paper-scale
+    /// cost/communication experiments (Table 2, Fig. 2, Fig. 3-sim).
+    Virtual,
+    /// Real gradients through the AOT grad artifact; the full e2e path.
+    Real {
+        engine: Rc<Engine>,
+        /// Executed model config name (e.g. "mobilenet_s").
+        model: String,
+        train: Dataset,
+        test: Dataset,
+    },
+}
+
+/// One worker replica.
+#[derive(Debug)]
+pub struct WorkerState {
+    pub id: usize,
+    pub clock: VTime,
+    pub theta: Slab,
+    /// Sample indices this worker owns (reshuffled every epoch).
+    pub shard: Vec<usize>,
+    cursor: usize,
+}
+
+/// Experiment parameters for building a [`ClusterEnv`].
+pub struct EnvConfig {
+    pub framework: FrameworkKind,
+    pub workers: usize,
+    /// Gradient batches per worker per epoch (paper: 24).
+    pub batches_per_epoch: usize,
+    /// Samples per gradient batch (paper: 512; executed configs: 32/64).
+    pub batch_size: usize,
+    pub lr: f32,
+    /// Full-architecture profile for the virtual-time compute model.
+    pub profile: ModelProfile,
+    pub grad_mode: GradMode,
+    pub seed: u64,
+}
+
+impl EnvConfig {
+    /// Paper-scale, size-only config (cost/communication experiments).
+    pub fn virtual_paper(framework: FrameworkKind, arch: &str, workers: usize) -> Result<EnvConfig> {
+        let profile = calibration::profile(arch)
+            .ok_or_else(|| anyhow::anyhow!("unknown architecture {arch}"))?;
+        Ok(EnvConfig {
+            framework,
+            workers,
+            batches_per_epoch: 24,
+            batch_size: 512,
+            lr: 0.05,
+            profile,
+            grad_mode: GradMode::Virtual,
+            seed: 0x5157,
+        })
+    }
+
+    /// End-to-end config over an executed model (real gradients). The
+    /// virtual-time compute model is the full architecture's, scaled to the
+    /// reduced parameter count.
+    pub fn real(
+        framework: FrameworkKind,
+        engine: Rc<Engine>,
+        model: &str,
+        workers: usize,
+        train_samples: usize,
+        seed: u64,
+    ) -> Result<EnvConfig> {
+        let entry = engine.manifest.model(model)?.clone();
+        let base = calibration::profile(&entry.arch)
+            .ok_or_else(|| anyhow::anyhow!("no profile for arch {}", entry.arch))?;
+        let profile = calibration::scaled_profile(base, entry.n_params as u64);
+        let gen = SyntheticCifar::with_defaults(seed);
+        let train = gen.generate(train_samples, 0);
+        let test = gen.generate(entry.eval_batch * 4, 1);
+        let batch = entry.batch;
+        let batches_per_epoch = (train_samples / workers / batch).max(1);
+        Ok(EnvConfig {
+            framework,
+            workers,
+            batches_per_epoch,
+            batch_size: batch,
+            lr: 0.1,
+            profile,
+            grad_mode: GradMode::Real { engine, model: model.to_string(), train, test },
+            seed,
+        })
+    }
+}
+
+/// Result of one gradient computation.
+#[derive(Debug)]
+pub struct GradResult {
+    pub grad: Slab,
+    pub loss: Option<f64>,
+    pub correct: u32,
+    /// Virtual seconds the computation took on the configured device.
+    pub secs: f64,
+}
+
+/// Which device executes gradient compute (drives the duration model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    LambdaCpu,
+    GpuT4,
+}
+
+/// The experiment world.
+pub struct ClusterEnv {
+    pub framework: FrameworkKind,
+    pub workers: Vec<WorkerState>,
+    pub profile: ModelProfile,
+    pub batch_size: usize,
+    pub batches_per_epoch: usize,
+    pub lr: f32,
+    pub n_params: usize,
+    pub epoch: usize,
+
+    // Substrates.
+    pub lambda: LambdaRuntime,
+    /// Shared object store (LambdaML gradient bucket, Lambda data loads).
+    pub store: ObjectStore,
+    /// GPU-side object store (EC2 bandwidth profile).
+    pub gpu_store: ObjectStore,
+    pub queues: MessageQueue,
+    pub stepfn: StepFunctions,
+    /// Per-worker Redis instances (SPIRT's P2P databases).
+    pub worker_redis: Vec<Redis>,
+    /// Shared Redis (MLLess update store, LambdaML model store).
+    pub shared_redis: Redis,
+    pub fleet: GpuFleet,
+
+    // Measurement plane.
+    pub ledger: Ledger,
+    pub comm: CommStats,
+    pub stages: StageTimer,
+
+    grad_mode: GradMode,
+    pub rng: Rng,
+}
+
+impl ClusterEnv {
+    pub fn new(cfg: EnvConfig) -> Result<ClusterEnv> {
+        if cfg.workers == 0 {
+            bail!("need at least one worker");
+        }
+        let n_params = match &cfg.grad_mode {
+            GradMode::Virtual => cfg.profile.params as usize,
+            GradMode::Real { engine, model, .. } => engine.manifest.model(model)?.n_params,
+        };
+
+        let rng = Rng::new(cfg.seed);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let theta0 = match &cfg.grad_mode {
+            GradMode::Virtual => Slab::virtual_of(n_params),
+            GradMode::Real { engine, model, .. } => engine.init(model, cfg.seed as u32)?,
+        };
+        let shards = match &cfg.grad_mode {
+            GradMode::Virtual => vec![Vec::new(); cfg.workers],
+            GradMode::Real { train, .. } => train.shard_indices(cfg.workers),
+        };
+        for (id, shard) in shards.into_iter().enumerate() {
+            workers.push(WorkerState {
+                id,
+                clock: VTime::ZERO,
+                theta: theta0.clone(),
+                shard,
+                cursor: 0,
+            });
+        }
+
+        // SPIRT's per-worker Redis instances get the PJRT in-database math
+        // engine in real mode (the RedisAI analog).
+        let worker_redis: Vec<Redis> = (0..cfg.workers)
+            .map(|i| match &cfg.grad_mode {
+                GradMode::Real { engine, model, .. } => Redis::with_math(
+                    format!("spirt-w{i}"),
+                    std::sync::Arc::new(PjrtMath::new(engine.clone(), model.clone())),
+                ),
+                GradMode::Virtual => Redis::new(format!("spirt-w{i}")),
+            })
+            .collect();
+
+        Ok(ClusterEnv {
+            framework: cfg.framework,
+            workers,
+            profile: cfg.profile,
+            batch_size: cfg.batch_size,
+            batches_per_epoch: cfg.batches_per_epoch,
+            lr: cfg.lr,
+            n_params,
+            epoch: 0,
+            lambda: LambdaRuntime::new(),
+            store: ObjectStore::new(),
+            gpu_store: ObjectStore::with_profile(
+                calibration::GPU_S3_LATENCY,
+                calibration::GPU_S3_BW,
+                64,
+            ),
+            queues: MessageQueue::new(),
+            stepfn: StepFunctions::new(),
+            worker_redis,
+            shared_redis: Redis::new("shared"),
+            fleet: GpuFleet::new(cfg.workers),
+            ledger: Ledger::new(),
+            comm: CommStats::new(),
+            stages: StageTimer::new(),
+            grad_mode: cfg.grad_mode,
+            rng: Rng::fork(&rng, 1),
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_real(&self) -> bool {
+        matches!(self.grad_mode, GradMode::Real { .. })
+    }
+
+    /// Gradient payload bytes (f32 × params).
+    pub fn grad_bytes(&self) -> u64 {
+        self.n_params as u64 * 4
+    }
+
+    /// Begin a new epoch: reshuffle shards, bump counter.
+    pub fn begin_epoch(&mut self) {
+        self.epoch += 1;
+        let mut rng = self.rng.fork(0xE70C ^ self.epoch as u64);
+        for w in &mut self.workers {
+            rng.shuffle(&mut w.shard);
+            w.cursor = 0;
+        }
+    }
+
+    /// Serverless statelessness: re-load model + batch data on invocation.
+    /// Advances the worker clock; charges FetchDataset stage time.
+    pub fn state_load(&mut self, w: usize) {
+        let model_load = self.grad_bytes() as f64 / calibration::REDIS_BW
+            + calibration::REDIS_LATENCY;
+        let data_bytes = (self.batch_size * IMG_ELEMS * 4) as u64;
+        let data_load = data_bytes as f64 / calibration::S3_BW + calibration::S3_LATENCY;
+        let secs = model_load + data_load;
+        self.workers[w].clock += secs;
+        self.stages.add(Stage::FetchDataset, secs);
+    }
+
+    /// Compute one gradient batch for worker `w` on `device`. Advances the
+    /// worker clock by the modeled duration; returns the (real or virtual)
+    /// gradient.
+    pub fn compute_grad(&mut self, w: usize, device: Device) -> Result<GradResult> {
+        let per_sample = match device {
+            Device::LambdaCpu => self.profile.lambda_secs_per_sample,
+            Device::GpuT4 => self.profile.gpu_secs_per_sample,
+        };
+        let secs = per_sample * self.batch_size as f64;
+
+        let out = match &self.grad_mode {
+            GradMode::Virtual => GradResult {
+                grad: Slab::virtual_of(self.n_params),
+                loss: None,
+                correct: 0,
+                secs,
+            },
+            GradMode::Real { engine, model, train, .. } => {
+                let worker = &mut self.workers[w];
+                let b = self.batch_size;
+                if worker.shard.len() < b {
+                    bail!("worker {w} shard smaller than one batch");
+                }
+                // Wrap the cursor (epoch boundaries are driven by the
+                // strategy's batches_per_epoch, not shard exhaustion).
+                if worker.cursor + b > worker.shard.len() {
+                    worker.cursor = 0;
+                }
+                let idx = &worker.shard[worker.cursor..worker.cursor + b];
+                worker.cursor += b;
+                let (x, y) = train.batch(idx);
+                let g = engine.grad(model, &worker.theta, &x, &y)?;
+                GradResult {
+                    grad: g.grads,
+                    loss: Some(g.loss as f64),
+                    correct: g.correct,
+                    secs,
+                }
+            }
+        };
+        self.workers[w].clock += secs;
+        self.stages.add(Stage::ComputeGradients, secs);
+        Ok(out)
+    }
+
+    /// Apply `theta -= lr * inv_k * gsum` on worker `w`'s replica. In real
+    /// mode this runs the fused Pallas `avg_update` artifact; virtual mode
+    /// charges the modeled duration only.
+    pub fn apply_update(&mut self, w: usize, gsum: &Slab, inv_k: f32) -> Result<()> {
+        let secs = 3.0 * gsum.nbytes() as f64 / LOCAL_AGG_BW;
+        match &self.grad_mode {
+            GradMode::Virtual => {}
+            GradMode::Real { engine, model, .. } => {
+                let theta = &self.workers[w].theta;
+                self.workers[w].theta =
+                    engine.avg_update(model, theta, gsum, inv_k, self.lr)?;
+            }
+        }
+        self.workers[w].clock += secs;
+        self.stages.add(Stage::ModelUpdate, secs);
+        Ok(())
+    }
+
+    /// Local in-function aggregation duration for summing `k` slabs.
+    pub fn local_agg_secs(&self, k: usize) -> f64 {
+        k as f64 * self.grad_bytes() as f64 / LOCAL_AGG_BW
+    }
+
+    /// Charge `secs` of synchronization wait to worker `w`.
+    pub fn charge_sync(&mut self, w: usize, secs: f64) {
+        self.workers[w].clock += secs;
+        self.stages.add(Stage::Synchronize, secs);
+    }
+
+    /// Virtual barrier across all workers (clocks jump to the max).
+    pub fn barrier(&mut self) -> VTime {
+        let t = self
+            .workers
+            .iter()
+            .map(|w| w.clock)
+            .fold(VTime::ZERO, VTime::max);
+        for w in &mut self.workers {
+            w.clock = t;
+        }
+        t
+    }
+
+    /// Max worker clock (epoch end time).
+    pub fn max_clock(&self) -> VTime {
+        self.workers.iter().map(|w| w.clock).fold(VTime::ZERO, VTime::max)
+    }
+
+    /// Evaluate test accuracy of worker 0's replica (real mode only).
+    pub fn eval_accuracy(&self) -> Result<Option<f64>> {
+        let GradMode::Real { engine, model, test, .. } = &self.grad_mode else {
+            return Ok(None);
+        };
+        let entry = engine.manifest.model(model)?;
+        let b = entry.eval_batch;
+        let theta = &self.workers[0].theta;
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        let batches = test.len() / b;
+        for i in 0..batches {
+            let idx: Vec<usize> = (i * b..(i + 1) * b).collect();
+            let (x, y) = test.batch(&idx);
+            let (_, c) = engine.eval(model, theta, &x, &y)?;
+            correct += c as u64;
+            total += b as u64;
+        }
+        Ok(Some(correct as f64 / total.max(1) as f64))
+    }
+
+    /// Allocated Lambda memory for this framework/model (billing input).
+    pub fn allocated_mb(&self) -> f64 {
+        calibration::peak_ram_mb(self.framework, &self.profile, self.batch_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn virt_env(workers: usize) -> ClusterEnv {
+        ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", workers).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn virtual_env_has_paper_shapes() {
+        let env = virt_env(4);
+        assert_eq!(env.num_workers(), 4);
+        assert_eq!(env.n_params, 4_200_000);
+        assert_eq!(env.grad_bytes(), 16_800_000);
+        assert_eq!(env.batches_per_epoch, 24);
+        assert!(!env.is_real());
+    }
+
+    #[test]
+    fn compute_grad_charges_device_time() {
+        let mut env = virt_env(2);
+        let r = env.compute_grad(0, Device::LambdaCpu).unwrap();
+        assert!((r.secs - 512.0 * env.profile.lambda_secs_per_sample).abs() < 1e-9);
+        assert_eq!(env.workers[0].clock.secs(), r.secs);
+        assert_eq!(env.workers[1].clock.secs(), 0.0);
+        let g = env.compute_grad(1, Device::GpuT4).unwrap();
+        assert!(g.secs < r.secs, "T4 must be faster than Lambda CPU");
+        assert_eq!(r.grad.len(), env.n_params);
+    }
+
+    #[test]
+    fn barrier_aligns_clocks() {
+        let mut env = virt_env(3);
+        env.charge_sync(1, 5.0);
+        let t = env.barrier();
+        assert_eq!(t.secs(), 5.0);
+        assert!(env.workers.iter().all(|w| w.clock == t));
+    }
+
+    #[test]
+    fn state_load_charges_fetch_stage() {
+        let mut env = virt_env(1);
+        env.state_load(0);
+        assert!(env.stages.get(Stage::FetchDataset) > 0.05);
+        assert!(env.workers[0].clock.secs() > 0.0);
+    }
+
+    #[test]
+    fn apply_update_virtual_charges_update_stage() {
+        let mut env = virt_env(1);
+        let g = Slab::virtual_of(env.n_params);
+        env.apply_update(0, &g, 0.25).unwrap();
+        assert!(env.stages.get(Stage::ModelUpdate) > 0.0);
+    }
+
+    #[test]
+    fn begin_epoch_reshuffles_deterministically() {
+        let mut a = virt_env(2);
+        let mut b = virt_env(2);
+        a.begin_epoch();
+        b.begin_epoch();
+        assert_eq!(a.epoch, 1);
+        assert_eq!(a.workers[0].shard, b.workers[0].shard);
+    }
+
+    #[test]
+    fn allocated_memory_uses_framework_model() {
+        let env = virt_env(4);
+        let mb = env.allocated_mb();
+        assert!((mb - 2070.7).abs() < 50.0, "AllReduce/MobileNet ≈ 2048–2090, got {mb}");
+    }
+}

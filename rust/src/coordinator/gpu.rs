@@ -1,0 +1,157 @@
+//! Distributed GPU baseline: data-parallel T4 instances + S3 all-gather.
+//!
+//! The paper's baseline (§2): each g4dn.xlarge processes its batch, uploads
+//! gradients to a shared S3 bucket, downloads the peers' gradients and
+//! averages locally before updating. No Lambda billing — the instances are
+//! on for the whole epoch (hourly billing), which is exactly the
+//! always-on-vs-pay-per-use contrast the paper studies.
+
+use crate::cloud::FrameworkKind;
+use crate::metrics::Stage;
+use crate::tensor::Slab;
+use crate::Result;
+
+use super::env::{ClusterEnv, Device};
+use super::{EpochStats, Strategy};
+
+#[derive(Debug, Default)]
+pub struct GpuBaseline;
+
+impl GpuBaseline {
+    pub fn new() -> GpuBaseline {
+        GpuBaseline
+    }
+}
+
+impl Strategy for GpuBaseline {
+    fn kind(&self) -> FrameworkKind {
+        FrameworkKind::GpuBaseline
+    }
+
+    fn run_epoch(&mut self, env: &mut ClusterEnv) -> Result<EpochStats> {
+        env.begin_epoch();
+        let w_count = env.num_workers();
+        let start = env.max_clock();
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0usize;
+
+        for round in 0..env.batches_per_epoch {
+            let tag = format!("gpu/e{}/r{}", env.epoch, round);
+
+            // Compute on the T4s (data already resident on instance disk).
+            let mut grads = Vec::with_capacity(w_count);
+            for w in 0..w_count {
+                let g = env.compute_grad(w, Device::GpuT4)?;
+                if let Some(l) = g.loss {
+                    loss_sum += l;
+                    loss_n += 1;
+                }
+                grads.push(g.grad);
+            }
+
+            // All-gather through the shared bucket (EC2-side bandwidth).
+            for w in 0..w_count {
+                let key = format!("{tag}/g{w}");
+                let t0 = env.workers[w].clock;
+                let done = env
+                    .gpu_store
+                    .put(t0, &key, grads[w].clone(), &mut env.ledger, &mut env.comm);
+                env.stages.add(Stage::Synchronize, done - t0);
+                env.workers[w].clock = done;
+            }
+            for w in 0..w_count {
+                let mut fetched = Vec::with_capacity(w_count);
+                for j in 0..w_count {
+                    if j == w {
+                        fetched.push(grads[w].clone());
+                        continue;
+                    }
+                    let key = format!("{tag}/g{j}");
+                    let t0 = env.workers[w].clock;
+                    let (done, g) =
+                        env.gpu_store.get(t0, &key, &mut env.ledger, &mut env.comm)?;
+                    env.stages.add(Stage::Synchronize, done - t0);
+                    env.workers[w].clock = done;
+                    fetched.push(g);
+                }
+                let mean = Slab::mean(&fetched)?;
+                env.apply_update(w, &mean, 1.0)?;
+                env.charge_sync(w, self.kind().batch_overhead());
+            }
+        }
+
+        // Instances bill for the epoch's wall time.
+        let epoch_secs = env.max_clock() - start;
+        env.fleet.bill(epoch_secs, &mut env.ledger);
+
+        Ok(EpochStats {
+            mean_loss: (loss_n > 0).then(|| loss_sum / loss_n as f64),
+            batches: env.batches_per_epoch * w_count,
+            epoch_secs,
+            mean_fn_secs: 0.0,
+        })
+    }
+
+    fn stage_table(&self) -> Vec<(Stage, &'static str)> {
+        vec![
+            (
+                Stage::FetchDataset,
+                "Each GPU loads its assigned batch of data and a local copy of the model.",
+            ),
+            (Stage::ComputeGradients, "Gradients are computed locally by each GPU."),
+            (
+                Stage::Synchronize,
+                "Each GPU uploads its gradients to a shared S3 bucket, retrieves others' \
+                 gradients, and performs local averaging.",
+            ),
+            (Stage::ModelUpdate, "The locally averaged gradients are used to update the model."),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::env::EnvConfig;
+    use crate::metrics::CostKind;
+
+    fn env(arch: &str) -> ClusterEnv {
+        ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::GpuBaseline, arch, 4).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn epoch_time_matches_paper() {
+        for (arch, paper) in [("mobilenet", 92.0), ("resnet18", 139.0)] {
+            let mut e = env(arch);
+            let stats = GpuBaseline::new().run_epoch(&mut e).unwrap();
+            let err = (stats.epoch_secs - paper).abs() / paper;
+            assert!(err < 0.15, "{arch}: epoch {:.1}s vs paper {paper}s", stats.epoch_secs);
+        }
+    }
+
+    #[test]
+    fn bills_ec2_not_lambda() {
+        let mut e = env("mobilenet");
+        GpuBaseline::new().run_epoch(&mut e).unwrap();
+        assert!(e.ledger.get(CostKind::Ec2Gpu) > 0.0);
+        assert_eq!(e.ledger.get(CostKind::LambdaCompute), 0.0);
+        // Paper: ~0.0538 USD for the MobileNet epoch.
+        let cost = e.ledger.get(CostKind::Ec2Gpu);
+        assert!((cost - 0.0538).abs() / 0.0538 < 0.2, "cost {cost}");
+    }
+
+    #[test]
+    fn gpu_epoch_is_much_faster_than_serverless() {
+        let mut g = env("mobilenet");
+        let gstats = GpuBaseline::new().run_epoch(&mut g).unwrap();
+        let mut a = ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 4).unwrap(),
+        )
+        .unwrap();
+        let astats = super::super::allreduce::AllReduce::new().run_epoch(&mut a).unwrap();
+        assert!(gstats.epoch_secs * 2.0 < astats.epoch_secs);
+    }
+}

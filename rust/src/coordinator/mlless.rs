@@ -1,0 +1,281 @@
+//! MLLess: significance-filtered parameter exchange with a supervisor.
+//!
+//! §2's workflow: each worker computes a minibatch gradient and publishes it
+//! *only if significant* (relative L2 norm above a threshold); insignificant
+//! gradients accumulate locally and ride along with the next significant
+//! update, so signal is delayed rather than lost. A central supervisor
+//! coordinates rounds: workers report (update key or "none") through
+//! queues, the supervisor tells everyone when to fetch, workers pull the
+//! published updates from shared Redis, aggregate and update.
+//!
+//! The filter is where MLLess's 13× communication reduction comes from
+//! (Fig. 3); the supervisor round-trips are where its high per-batch
+//! latency comes from (69.4 s vs ~14.4 s for LambdaML — Table 2).
+
+use crate::cloud::FrameworkKind;
+use crate::metrics::Stage;
+use crate::sim::VTime;
+use crate::tensor::{SignificanceFilter, Slab};
+use crate::Result;
+
+use super::env::{ClusterEnv, Device};
+use super::{EpochStats, Strategy};
+
+/// Default relative-norm threshold (calibrated so early epochs publish
+/// nearly everything and filtering ramps up as gradients shrink — the
+/// behaviour MLLess reports).
+pub const DEFAULT_THRESHOLD: f64 = 0.05;
+
+pub struct MlLess {
+    filters: Vec<SignificanceFilter>,
+    threshold: f64,
+    /// The supervisor's own virtual clock.
+    supervisor_clock: VTime,
+    /// Publish probability for size-only gradients (virtual mode cannot
+    /// evaluate the norm predicate; 1.0 = worst-case full traffic, which is
+    /// what Table 2 measures; Fig. 3's sim sweep varies it).
+    virtual_publish_rate: f64,
+    /// Fig. 3 counters.
+    pub updates_proposed: u64,
+    pub updates_published: u64,
+}
+
+impl MlLess {
+    pub fn new(threshold: f64) -> MlLess {
+        MlLess {
+            filters: Vec::new(),
+            threshold,
+            supervisor_clock: VTime::ZERO,
+            virtual_publish_rate: 1.0,
+            updates_proposed: 0,
+            updates_published: 0,
+        }
+    }
+
+    /// Set the virtual-mode publish rate (builder style).
+    pub fn with_virtual_publish_rate(mut self, rate: f64) -> MlLess {
+        assert!((0.0..=1.0).contains(&rate));
+        self.virtual_publish_rate = rate;
+        self
+    }
+
+    pub fn publish_rate(&self) -> f64 {
+        if self.updates_proposed == 0 {
+            1.0
+        } else {
+            self.updates_published as f64 / self.updates_proposed as f64
+        }
+    }
+
+    fn ensure_filters(&mut self, workers: usize) {
+        while self.filters.len() < workers {
+            self.filters.push(SignificanceFilter::new(self.threshold));
+        }
+    }
+}
+
+impl Strategy for MlLess {
+    fn kind(&self) -> FrameworkKind {
+        FrameworkKind::MlLess
+    }
+
+    fn run_epoch(&mut self, env: &mut ClusterEnv) -> Result<EpochStats> {
+        env.begin_epoch();
+        let w_count = env.num_workers();
+        self.ensure_filters(w_count);
+        let start = env.max_clock();
+        let alloc_mb = env.allocated_mb();
+        let epoch = env.epoch;
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0usize;
+
+        for round in 0..env.batches_per_epoch {
+            let sup_topic = format!("mlless/sup/e{epoch}/r{round}");
+            let proceed_topic = format!("mlless/proceed/e{epoch}/r{round}");
+
+            // -- compute + filter + report --------------------------------
+            let mut invs = Vec::with_capacity(w_count);
+            let mut published: Vec<Option<(String, Slab)>> = Vec::with_capacity(w_count);
+            for w in 0..w_count {
+                let inv = env.lambda.begin_invocation(env.workers[w].clock, w);
+                env.workers[w].clock = inv.body_start;
+                invs.push(inv);
+                env.state_load(w);
+                let g = env.compute_grad(w, Device::LambdaCpu)?;
+                if let Some(l) = g.loss {
+                    loss_sum += l;
+                    loss_n += 1;
+                }
+
+                self.updates_proposed += 1;
+                let theta = env.workers[w].theta.clone();
+                let offer = if g.grad.is_real() {
+                    self.filters[w].offer(g.grad, &theta)
+                } else {
+                    // Size-only gradients: model the filter's pass rate.
+                    env.rng.bernoulli(self.virtual_publish_rate).then_some(g.grad)
+                };
+                let report = if let Some(update) = offer {
+                    self.updates_published += 1;
+                    let key = format!("u/e{epoch}/r{round}/w{w}");
+                    let t0 = env.workers[w].clock;
+                    let t = env.shared_redis.set(t0, &key, update.clone(), &mut env.comm);
+                    env.stages.add(Stage::Synchronize, t - t0);
+                    env.workers[w].clock = t;
+                    published.push(Some((key.clone(), update)));
+                    key
+                } else {
+                    published.push(None);
+                    "none".to_string()
+                };
+                let t = env.queues.publish(
+                    env.workers[w].clock,
+                    &sup_topic,
+                    report,
+                    &mut env.ledger,
+                    &mut env.comm,
+                );
+                env.workers[w].clock = t;
+            }
+
+            // -- supervisor: wait for all reports, authorize fetch ---------
+            let t0 = self.supervisor_clock;
+            let t = env
+                .queues
+                .wait_for(t0, &sup_topic, w_count, &mut env.ledger, &mut env.comm)?;
+            self.supervisor_clock = t + 0.010; // decision processing
+            let _ = env.queues.publish(
+                self.supervisor_clock,
+                &proceed_topic,
+                "proceed",
+                &mut env.ledger,
+                &mut env.comm,
+            );
+
+            // Keys published this round (the supervisor's fetch list).
+            let keys: Vec<String> =
+                published.iter().flatten().map(|(k, _)| k.clone()).collect();
+
+            // -- workers: wait for authorization, fetch + aggregate --------
+            for w in 0..w_count {
+                let t0 = env.workers[w].clock;
+                let t = env
+                    .queues
+                    .wait_for(t0, &proceed_topic, 1, &mut env.ledger, &mut env.comm)?;
+                env.stages.add(Stage::Synchronize, t - t0);
+                env.workers[w].clock = t;
+
+                let mut updates: Vec<Slab> = Vec::new();
+                for key in &keys {
+                    // Own update is already local — no fetch needed.
+                    if let Some((own_key, own)) = &published[w] {
+                        if own_key == key {
+                            updates.push(own.clone());
+                            continue;
+                        }
+                    }
+                    let t0 = env.workers[w].clock;
+                    let (t, u) = env.shared_redis.get(t0, key, &mut env.comm)?;
+                    env.stages.add(Stage::Synchronize, t - t0);
+                    env.workers[w].clock = t;
+                    updates.push(u);
+                }
+
+                if !updates.is_empty() {
+                    let agg_secs = env.local_agg_secs(updates.len());
+                    env.charge_sync(w, agg_secs);
+                    let mean = Slab::mean(&updates)?;
+                    env.apply_update(w, &mean, 1.0)?;
+                }
+
+                // Supervisor scheduling latency: a fixed coordination floor
+                // plus per-published-update scheduling round-trips (Table 2
+                // residual; collapses under filtering — Fig. 3).
+                use crate::cloud::calibration::{MLLESS_PER_UPDATE, MLLESS_ROUND_BASE};
+                let overhead = MLLESS_ROUND_BASE + keys.len() as f64 * MLLESS_PER_UPDATE;
+                env.charge_sync(w, overhead);
+                let end = env.workers[w].clock;
+                env.lambda.finish_invocation(invs[w], end, alloc_mb, &mut env.ledger);
+            }
+
+            // Published updates are consumed; drop them from the store.
+            for key in &keys {
+                env.shared_redis.delete(key);
+            }
+        }
+
+        let epoch_secs = env.max_clock() - start;
+        Ok(EpochStats {
+            mean_loss: (loss_n > 0).then(|| loss_sum / loss_n as f64),
+            batches: env.batches_per_epoch * w_count,
+            epoch_secs,
+            mean_fn_secs: env.lambda.mean_duration(),
+        })
+    }
+
+    fn stage_table(&self) -> Vec<(Stage, &'static str)> {
+        vec![
+            (Stage::FetchDataset, "Each worker fetches a single minibatch for processing."),
+            (
+                Stage::ComputeGradients,
+                "Gradients are computed and, if the change is significant, stored in a shared \
+                 database with keys sent to peers via queues.",
+            ),
+            (
+                Stage::Synchronize,
+                "Workers listen to their queues, collect update keys, wait for synchronization \
+                 instructions from the supervisor, then fetch and aggregate the gradients.",
+            ),
+            (Stage::ModelUpdate, "The aggregated gradients are used to update the model."),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::env::EnvConfig;
+
+    fn env(threshold_irrelevant: bool) -> ClusterEnv {
+        let _ = threshold_irrelevant;
+        ClusterEnv::new(EnvConfig::virtual_paper(FrameworkKind::MlLess, "mobilenet", 4).unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn per_function_duration_matches_paper() {
+        let mut e = env(true);
+        // Virtual slabs have zero norm -> nothing significant; use
+        // threshold 0 so every update is published (worst-case traffic,
+        // which is what the Table 2 MLLess row measures pre-convergence).
+        let mut s = MlLess::new(0.0);
+        let stats = s.run_epoch(&mut e).unwrap();
+        assert!(
+            (stats.mean_fn_secs - 69.425).abs() / 69.425 < 0.15,
+            "mean fn {:.2}s vs paper 69.425s",
+            stats.mean_fn_secs
+        );
+        assert_eq!(s.publish_rate(), 1.0);
+    }
+
+    #[test]
+    fn filtering_reduces_traffic_and_time() {
+        let mut open = env(true);
+        let open_stats = MlLess::new(0.0).run_epoch(&mut open).unwrap();
+        let mut filtered = env(true);
+        let filtered_stats = MlLess::new(0.0)
+            .with_virtual_publish_rate(0.1)
+            .run_epoch(&mut filtered)
+            .unwrap();
+        assert!(filtered.comm.wire_bytes() < open.comm.wire_bytes() / 2);
+        assert!(filtered_stats.epoch_secs < open_stats.epoch_secs / 2.0);
+    }
+
+    #[test]
+    fn supervisor_round_trips_counted() {
+        let mut e = env(true);
+        MlLess::new(0.0).run_epoch(&mut e).unwrap();
+        // per round: W reports + 1 proceed -> at least 24 * 5 messages.
+        assert!(e.queues.total_published() >= 24 * 5);
+    }
+}

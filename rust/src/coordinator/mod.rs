@@ -1,0 +1,86 @@
+//! The five training architectures under comparison.
+//!
+//! Each framework implements [`Strategy`]: given a [`ClusterEnv`] (workers,
+//! substrates, measurement plane), `run_epoch` executes one full pass of the
+//! paper's Fig.-1 workflow — fetch → compute → synchronize → update — with
+//! the framework's own aggregation topology and synchronization mechanism:
+//!
+//! | framework       | aggregation                        | sync            |
+//! |-----------------|------------------------------------|-----------------|
+//! | SPIRT           | in-database (RedisAI), P2P         | sync queue      |
+//! | MLLess          | significance-filtered, supervisor  | queues + superv.|
+//! | AllReduce       | designated master                  | storage polling |
+//! | ScatterReduce   | chunk-per-worker                   | storage polling |
+//! | GPU baseline    | local average (all-gather via S3)  | storage polling |
+//!
+//! Gradients are real slabs in end-to-end mode and size-only in cost-model
+//! mode; both traverse identical protocol code (see `tensor::Slab`).
+
+pub mod allreduce;
+pub mod convergence;
+pub mod env;
+pub mod gpu;
+pub mod mlless;
+pub mod scatter_reduce;
+pub mod spirt;
+
+use crate::cloud::FrameworkKind;
+use crate::metrics::Stage;
+use crate::Result;
+
+pub use convergence::EarlyStopper;
+pub use env::{ClusterEnv, EnvConfig, GradMode, WorkerState};
+
+/// Per-epoch outcome of a strategy run.
+#[derive(Debug, Clone, Default)]
+pub struct EpochStats {
+    /// Mean training loss over all gradient batches (None in virtual mode).
+    pub mean_loss: Option<f64>,
+    /// Total gradient batches processed across workers.
+    pub batches: usize,
+    /// Epoch wall time on the virtual timeline (max worker clock advance).
+    pub epoch_secs: f64,
+    /// Mean Lambda function duration this epoch (0 for the GPU baseline).
+    pub mean_fn_secs: f64,
+}
+
+/// A distributed training architecture.
+pub trait Strategy {
+    fn kind(&self) -> FrameworkKind;
+
+    /// Execute one epoch (every worker consumes its batch schedule once).
+    fn run_epoch(&mut self, env: &mut ClusterEnv) -> Result<EpochStats>;
+
+    /// Table-1 stage contents: what this framework does in each stage.
+    fn stage_table(&self) -> Vec<(Stage, &'static str)>;
+}
+
+/// Instantiate a strategy by kind (default knobs).
+pub fn strategy_for(kind: FrameworkKind) -> Box<dyn Strategy> {
+    match kind {
+        FrameworkKind::Spirt => Box::new(spirt::Spirt::new()),
+        FrameworkKind::MlLess => Box::new(mlless::MlLess::new(mlless::DEFAULT_THRESHOLD)),
+        FrameworkKind::AllReduce => Box::new(allreduce::AllReduce::new()),
+        FrameworkKind::ScatterReduce => Box::new(scatter_reduce::ScatterReduce::new()),
+        FrameworkKind::GpuBaseline => Box::new(gpu::GpuBaseline::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_covers_all_frameworks() {
+        for kind in FrameworkKind::ALL {
+            let s = strategy_for(kind);
+            assert_eq!(s.kind(), kind);
+            let stages = s.stage_table();
+            assert_eq!(stages.len(), 4, "{kind:?} must describe all 4 stages");
+            for (i, want) in Stage::ALL.iter().enumerate() {
+                assert_eq!(stages[i].0, *want);
+                assert!(!stages[i].1.is_empty());
+            }
+        }
+    }
+}

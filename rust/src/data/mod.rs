@@ -1,0 +1,272 @@
+//! Synthetic CIFAR-10 stand-in (see DESIGN.md substitution table).
+//!
+//! The real CIFAR-10 pixels are unavailable offline; the convergence
+//! experiments need a *learnable 10-class 32×32×3 image task*, not those
+//! exact pixels. Each class gets a smooth random template (low-frequency
+//! noise upsampled 8×8 → 32×32); a sample is its class template plus
+//! per-sample Gaussian noise and a random circular shift. CNNs learn this
+//! task the way they learn CIFAR — conv features pick up the class
+//! textures — and accuracy-vs-time curves keep the paper's shape
+//! (EXPERIMENTS.md reports this substitution with every result).
+
+use crate::util::rng::Rng;
+
+pub const IMG_H: usize = 32;
+pub const IMG_W: usize = 32;
+pub const IMG_C: usize = 3;
+pub const IMG_ELEMS: usize = IMG_H * IMG_W * IMG_C;
+pub const NUM_CLASSES: usize = 10;
+
+/// An owned dataset: sample-major contiguous images + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    images: Vec<f32>, // n * IMG_ELEMS, NHWC
+    labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG_ELEMS..(i + 1) * IMG_ELEMS]
+    }
+
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    /// Materialize a batch from sample indices (contiguous NHWC + labels).
+    pub fn batch(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(indices.len() * IMG_ELEMS);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(self.image(i));
+            y.push(self.label(i));
+        }
+        (x, y)
+    }
+
+    /// Contiguous index ranges per worker (even split, remainder forward).
+    pub fn shard_indices(&self, workers: usize) -> Vec<Vec<usize>> {
+        assert!(workers > 0);
+        let n = self.len();
+        let base = n / workers;
+        let extra = n % workers;
+        let mut out = Vec::with_capacity(workers);
+        let mut start = 0;
+        for w in 0..workers {
+            let len = base + usize::from(w < extra);
+            out.push((start..start + len).collect());
+            start += len;
+        }
+        out
+    }
+}
+
+/// Generator parameters for the synthetic task.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskSpec {
+    /// Template amplitude (signal strength).
+    pub signal: f32,
+    /// Per-sample Gaussian noise σ.
+    pub noise: f32,
+    /// Max circular shift in pixels (augmentation-like variation).
+    pub max_shift: usize,
+}
+
+impl Default for TaskSpec {
+    fn default() -> Self {
+        // Signal-to-noise chosen so a small CNN reaches >80% within a few
+        // hundred optimizer steps but does not solve the task instantly
+        // (the testbed has a single CPU core; CIFAR-scale epoch counts are
+        // out of budget — DESIGN.md documents the substitution).
+        TaskSpec { signal: 1.0, noise: 0.45, max_shift: 2 }
+    }
+}
+
+/// Deterministic synthetic CIFAR generator.
+#[derive(Debug)]
+pub struct SyntheticCifar {
+    templates: Vec<Vec<f32>>, // NUM_CLASSES × IMG_ELEMS
+    spec: TaskSpec,
+    seed: u64,
+}
+
+impl SyntheticCifar {
+    pub fn new(seed: u64, spec: TaskSpec) -> SyntheticCifar {
+        let mut templates = Vec::with_capacity(NUM_CLASSES);
+        for class in 0..NUM_CLASSES {
+            templates.push(make_template(seed, class, spec.signal));
+        }
+        SyntheticCifar { templates, spec, seed }
+    }
+
+    pub fn with_defaults(seed: u64) -> SyntheticCifar {
+        SyntheticCifar::new(seed, TaskSpec::default())
+    }
+
+    /// Generate `n` samples under a stream label (train/test get different
+    /// streams from the same generator seed).
+    pub fn generate(&self, n: usize, stream: u64) -> Dataset {
+        let mut rng = Rng::new(self.seed).fork(0x5EED ^ stream);
+        let mut images = Vec::with_capacity(n * IMG_ELEMS);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class = rng.below(NUM_CLASSES as u64) as usize;
+            let dy = rng.below(2 * self.spec.max_shift as u64 + 1) as isize
+                - self.spec.max_shift as isize;
+            let dx = rng.below(2 * self.spec.max_shift as u64 + 1) as isize
+                - self.spec.max_shift as isize;
+            let template = &self.templates[class];
+            for h in 0..IMG_H {
+                for w in 0..IMG_W {
+                    let sh = (h as isize + dy).rem_euclid(IMG_H as isize) as usize;
+                    let sw = (w as isize + dx).rem_euclid(IMG_W as isize) as usize;
+                    for c in 0..IMG_C {
+                        let v = template[(sh * IMG_W + sw) * IMG_C + c]
+                            + rng.normal_f32(0.0, self.spec.noise);
+                        images.push(v);
+                    }
+                }
+            }
+            labels.push(class as i32);
+        }
+        Dataset { images, labels }
+    }
+}
+
+/// Smooth class template: 8×8 Gaussian field bilinearly upsampled to 32×32.
+fn make_template(seed: u64, class: usize, signal: f32) -> Vec<f32> {
+    const G: usize = 8;
+    let mut rng = Rng::new(seed).fork(0x7E3Au64 ^ class as u64);
+    let mut coarse = [[0f32; 3]; G * G];
+    for cell in coarse.iter_mut() {
+        for ch in cell.iter_mut() {
+            *ch = rng.normal_f32(0.0, signal);
+        }
+    }
+    let mut out = vec![0f32; IMG_ELEMS];
+    let scale = G as f32 / IMG_H as f32;
+    for h in 0..IMG_H {
+        for w in 0..IMG_W {
+            let fy = (h as f32 + 0.5) * scale - 0.5;
+            let fx = (w as f32 + 0.5) * scale - 0.5;
+            let y0 = fy.floor().clamp(0.0, (G - 1) as f32) as usize;
+            let x0 = fx.floor().clamp(0.0, (G - 1) as f32) as usize;
+            let y1 = (y0 + 1).min(G - 1);
+            let x1 = (x0 + 1).min(G - 1);
+            let ty = (fy - y0 as f32).clamp(0.0, 1.0);
+            let tx = (fx - x0 as f32).clamp(0.0, 1.0);
+            for c in 0..IMG_C {
+                let v00 = coarse[y0 * G + x0][c];
+                let v01 = coarse[y0 * G + x1][c];
+                let v10 = coarse[y1 * G + x0][c];
+                let v11 = coarse[y1 * G + x1][c];
+                let v0 = v00 * (1.0 - tx) + v01 * tx;
+                let v1 = v10 * (1.0 - tx) + v11 * tx;
+                out[(h * IMG_W + w) * IMG_C + c] = v0 * (1.0 - ty) + v1 * ty;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let gen = SyntheticCifar::with_defaults(42);
+        let a = gen.generate(16, 0);
+        let b = gen.generate(16, 0);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = gen.generate(16, 1);
+        assert_ne!(a.images, c.images, "streams must differ");
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let gen = SyntheticCifar::with_defaults(7);
+        let d = gen.generate(500, 0);
+        let mut seen = [0usize; NUM_CLASSES];
+        for i in 0..d.len() {
+            seen[d.label(i) as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 20), "class balance: {seen:?}");
+    }
+
+    #[test]
+    fn same_class_is_more_similar_than_cross_class() {
+        // The task must be learnable: within-class distance << cross-class.
+        let gen = SyntheticCifar::new(3, TaskSpec { signal: 1.0, noise: 0.3, max_shift: 0 });
+        let d = gen.generate(200, 0);
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        let mut within = (0.0, 0);
+        let mut cross = (0.0, 0);
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                let dd = dist(d.image(i), d.image(j));
+                if d.label(i) == d.label(j) {
+                    within = (within.0 + dd, within.1 + 1);
+                } else {
+                    cross = (cross.0 + dd, cross.1 + 1);
+                }
+            }
+        }
+        let within_mean = within.0 / within.1.max(1) as f32;
+        let cross_mean = cross.0 / cross.1.max(1) as f32;
+        assert!(
+            within_mean * 1.5 < cross_mean,
+            "within {within_mean} should be well below cross {cross_mean}"
+        );
+    }
+
+    #[test]
+    fn batch_materialization() {
+        let gen = SyntheticCifar::with_defaults(1);
+        let d = gen.generate(10, 0);
+        let (x, y) = d.batch(&[3, 7]);
+        assert_eq!(x.len(), 2 * IMG_ELEMS);
+        assert_eq!(y.len(), 2);
+        assert_eq!(&x[..IMG_ELEMS], d.image(3));
+        assert_eq!(y[1], d.label(7));
+    }
+
+    #[test]
+    fn sharding_partitions_everything() {
+        let gen = SyntheticCifar::with_defaults(1);
+        let d = gen.generate(103, 0);
+        let shards = d.shard_indices(4);
+        assert_eq!(shards.len(), 4);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 103);
+        assert_eq!(shards[0].len(), 26); // remainder goes forward
+        assert_eq!(shards[3].len(), 25);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn images_are_finite_and_nontrivial() {
+        let gen = SyntheticCifar::with_defaults(5);
+        let d = gen.generate(4, 0);
+        let img = d.image(0);
+        assert!(img.iter().all(|v| v.is_finite()));
+        let var: f32 = {
+            let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+            img.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / img.len() as f32
+        };
+        assert!(var > 0.1, "image variance too small: {var}");
+    }
+}

@@ -1,0 +1,47 @@
+//! Experiment drivers: one per table/figure in the paper's evaluation.
+//!
+//! Each driver runs the relevant protocol(s) through the full substrate
+//! stack and renders the paper's rows next to our measured values, so the
+//! reproduction status is visible at a glance. See DESIGN.md §2 for the
+//! experiment index and EXPERIMENTS.md for recorded outputs.
+
+pub mod fig2;
+pub mod fig3;
+pub mod spirt_indb;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+/// Relative error helper for paper-vs-measured columns.
+pub fn rel_err(measured: f64, paper: f64) -> f64 {
+    if paper == 0.0 {
+        return 0.0;
+    }
+    (measured - paper).abs() / paper.abs()
+}
+
+/// Format a measured-vs-paper cell: `measured (paper, ±err%)`.
+pub fn vs_paper(measured: f64, paper: f64, digits: usize) -> String {
+    format!(
+        "{measured:.prec$} (paper {paper:.prec$}, {:+.1}%)",
+        (measured - paper) / paper * 100.0,
+        prec = digits
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_err_basics() {
+        assert!((rel_err(110.0, 100.0) - 0.1).abs() < 1e-12);
+        assert_eq!(rel_err(5.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn vs_paper_formats() {
+        let s = vs_paper(14.0, 14.343, 2);
+        assert!(s.starts_with("14.00 (paper 14.34"), "{s}");
+    }
+}

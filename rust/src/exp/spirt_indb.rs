@@ -1,0 +1,185 @@
+//! §4.2: SPIRT in-database computation vs the naive fetch-update-store
+//! baseline — gradient averaging and model update on ResNet-18-sized slabs.
+//!
+//! Two modes: virtual (paper-scale payload, latency model only) and real
+//! (actual 46.8 MB slabs, the math executed by the PJRT-compiled Pallas
+//! kernels inside the Redis substrate — the faithful RedisAI analog; also
+//! reports host wall-clock for EXPERIMENTS.md §Perf).
+
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cloud::Redis;
+use crate::metrics::CommStats;
+use crate::runtime::{Engine, PjrtMath};
+use crate::sim::VTime;
+use crate::tensor::Slab;
+use crate::util::table::{Align, Table};
+use crate::Result;
+
+/// Paper §4.2 values (seconds).
+pub const PAPER: PaperValues = PaperValues {
+    naive_avg: 67.32,
+    indb_avg: 37.41,
+    naive_update: 27.5,
+    indb_update: 4.8,
+};
+
+#[derive(Debug, Clone, Copy)]
+pub struct PaperValues {
+    pub naive_avg: f64,
+    pub indb_avg: f64,
+    pub naive_update: f64,
+    pub indb_update: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub n_params: usize,
+    pub minibatches: usize,
+    pub naive_avg_secs: f64,
+    pub indb_avg_secs: f64,
+    pub naive_update_secs: f64,
+    pub indb_update_secs: f64,
+    /// Host wall-clock of the real in-DB ops (ms), when run with the engine.
+    pub real_wall_ms: Option<f64>,
+}
+
+fn make_slab(n: usize, real: bool, seed: u64) -> Slab {
+    if !real {
+        return Slab::virtual_of(n);
+    }
+    let mut rng = crate::util::rng::Rng::new(seed);
+    Slab::from_vec((0..n).map(|_| rng.normal_f32(0.0, 0.01)).collect())
+}
+
+/// Run the benchmark. `engine: Some(..)` uses real slabs + PJRT in-DB math
+/// at the named slab size; `None` runs the latency model at paper scale.
+pub fn run(engine: Option<(Rc<Engine>, &str)>, minibatches: usize) -> Result<Outcome> {
+    let (n, mut redis, real) = match &engine {
+        Some((eng, slab_name)) => {
+            let n = eng.manifest.slab(slab_name)?.n;
+            let math = Arc::new(PjrtMath::new(eng.clone(), slab_name.to_string()));
+            (n, Redis::with_math("indb-bench", math), true)
+        }
+        None => (11_700_000, Redis::new("indb-bench"), false),
+    };
+    let mut comm = CommStats::new();
+    let wall_start = Instant::now();
+
+    // ---- Averaging: naive fetch-update-store ----------------------------
+    let mut naive = Redis::new("naive-bench");
+    naive.set(VTime::ZERO, "acc", make_slab(n, real, 1), &mut comm);
+    naive.set(VTime::ZERO, "g", make_slab(n, real, 2), &mut comm);
+    let start = VTime::from_secs(0.0);
+    let mut t = start;
+    for _ in 0..minibatches {
+        // Stateless function: fetch acc + fetch gradient, store new acc.
+        let (t1, mut acc) = naive.get_tensor_client(t, "acc", &mut comm)?;
+        let (t2, g) = naive.get_tensor_client(t1, "g", &mut comm)?;
+        acc.axpy(&g, 1.0)?;
+        t = naive.set_tensor_client(t2, "acc", acc, &mut comm);
+    }
+    let naive_avg_secs = t - start;
+
+    // ---- Averaging: in-database accumulation ----------------------------
+    redis.set(VTime::ZERO, "g", make_slab(n, real, 3), &mut comm);
+    let mut t = start;
+    for i in 0..minibatches {
+        t = if i == 0 {
+            redis.scale_in_db(t, "gsum", "g", 1.0, &mut comm)?
+        } else {
+            redis.acc_in_db(t, "gsum", "gsum", "g", 1.0, &mut comm)?
+        };
+    }
+    let indb_avg_secs = t - start;
+
+    // ---- Update: naive (fetch, rebuild state_dict, apply, store) --------
+    // Measured on an idle timeline (well past the averaging phase).
+    let nbytes = 4 * n as u64;
+    let u0 = VTime::from_secs(1_000.0);
+    let (t1, mut theta) = naive.get_tensor_client(u0, "acc", &mut comm)?;
+    let (t2, g) = naive.get_tensor_client(t1, "g", &mut comm)?;
+    theta.sgd(&g, 0.01)?;
+    let t3 = t2 + Redis::rebuild_secs(nbytes);
+    let naive_update_secs = naive.set_tensor_client(t3, "theta", theta, &mut comm) - u0;
+
+    // ---- Update: in-database fused Pallas kernel -------------------------
+    redis.set(VTime::ZERO, "theta", make_slab(n, real, 4), &mut comm);
+    let t_up0 = VTime::from_secs(1_000.0);
+    let indb_update_secs =
+        redis.avg_update_in_db(t_up0, "theta", "gsum", 1.0 / minibatches as f32, 0.01, &mut comm)?
+            - t_up0;
+
+    Ok(Outcome {
+        n_params: n,
+        minibatches,
+        naive_avg_secs,
+        indb_avg_secs,
+        naive_update_secs,
+        indb_update_secs,
+        real_wall_ms: real.then(|| wall_start.elapsed().as_secs_f64() * 1000.0),
+    })
+}
+
+pub fn render(o: &Outcome) -> String {
+    let mut t = Table::new(&["Operation", "Naive (s)", "In-DB (s)", "Speedup", "Paper (naive->in-DB)"])
+        .title(format!(
+            "SPIRT in-database ops vs naive fetch-update-store ({} params, {} minibatches)",
+            o.n_params, o.minibatches
+        ))
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    t.row(vec![
+        "Gradient averaging".into(),
+        format!("{:.2}", o.naive_avg_secs),
+        format!("{:.2}", o.indb_avg_secs),
+        format!("{:.2}x", o.naive_avg_secs / o.indb_avg_secs),
+        format!("{:.2} -> {:.2}", PAPER.naive_avg, PAPER.indb_avg),
+    ]);
+    t.row(vec![
+        "Model update".into(),
+        format!("{:.2}", o.naive_update_secs),
+        format!("{:.2}", o.indb_update_secs),
+        format!("{:.2}x", o.naive_update_secs / o.indb_update_secs),
+        format!("{:.2} -> {:.2}", PAPER.naive_update, PAPER.indb_update),
+    ]);
+    if let Some(ms) = o.real_wall_ms {
+        t.rule();
+        t.row(vec![
+            "Host wall (real PJRT ops)".into(),
+            "-".into(),
+            format!("{ms:.0} ms"),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::rel_err;
+
+    #[test]
+    fn virtual_mode_reproduces_paper_within_10pct() {
+        let o = run(None, 24).unwrap();
+        assert!(rel_err(o.naive_avg_secs, PAPER.naive_avg) < 0.10, "{:.1}", o.naive_avg_secs);
+        assert!(rel_err(o.indb_avg_secs, PAPER.indb_avg) < 0.10, "{:.1}", o.indb_avg_secs);
+        assert!(rel_err(o.naive_update_secs, PAPER.naive_update) < 0.15, "{:.1}", o.naive_update_secs);
+        assert!(rel_err(o.indb_update_secs, PAPER.indb_update) < 0.15, "{:.2}", o.indb_update_secs);
+    }
+
+    #[test]
+    fn indb_wins_both_operations() {
+        let o = run(None, 24).unwrap();
+        assert!(o.indb_avg_secs < o.naive_avg_secs);
+        assert!(o.indb_update_secs < o.naive_update_secs);
+        // Update benefits much more than averaging (paper: 5.7x vs 1.8x).
+        let avg_speedup = o.naive_avg_secs / o.indb_avg_secs;
+        let upd_speedup = o.naive_update_secs / o.indb_update_secs;
+        assert!(upd_speedup > 2.0 * avg_speedup, "avg {avg_speedup:.1}x upd {upd_speedup:.1}x");
+    }
+}
+

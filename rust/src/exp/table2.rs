@@ -1,0 +1,211 @@
+//! Table 2: training time, peak RAM and cost per epoch — all five
+//! frameworks × {MobileNet, ResNet-18} at the paper's scale (B=512, 4
+//! workers × 24 batches, AWS pricing).
+
+use crate::cloud::calibration::{peak_ram_mb, profile, FrameworkKind};
+use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use crate::metrics::CostKind;
+use crate::util::table::{Align, Table};
+use crate::Result;
+
+/// One Table 2 row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub framework: FrameworkKind,
+    pub arch: String,
+    /// Mean per-function duration (s); epoch wall time for the GPU row.
+    pub per_batch_secs: f64,
+    /// Per-worker serial sum over 24 batches (the paper's "Total Time").
+    pub total_time_secs: f64,
+    pub peak_ram_mb: Option<f64>,
+    pub cost_per_worker_usd: f64,
+    pub total_cost_usd: f64,
+}
+
+/// Paper's Table 2 values for the comparison columns:
+/// (framework, arch) -> (per-batch s, peak RAM MB, total cost USD).
+pub fn paper_row(fw: FrameworkKind, arch: &str) -> (f64, f64, f64) {
+    match (fw, arch) {
+        (FrameworkKind::Spirt, "mobilenet") => (15.44, 2685.0, 0.0660),
+        (FrameworkKind::ScatterReduce, "mobilenet") => (14.343, 2048.0, 0.0422),
+        (FrameworkKind::AllReduce, "mobilenet") => (14.382, 2048.0, 0.0427),
+        (FrameworkKind::MlLess, "mobilenet") => (69.425, 3024.0, 0.3356),
+        (FrameworkKind::GpuBaseline, "mobilenet") => (92.0, 0.0, 0.0538),
+        (FrameworkKind::Spirt, "resnet18") => (28.55, 3200.0, 0.1460),
+        (FrameworkKind::ScatterReduce, "resnet18") => (27.17, 2880.0, 0.1249),
+        (FrameworkKind::AllReduce, "resnet18") => (26.79, 2986.0, 0.1328),
+        (FrameworkKind::MlLess, "resnet18") => (78.39, 3630.0, 0.4548),
+        (FrameworkKind::GpuBaseline, "resnet18") => (139.0, 0.0, 0.0812),
+        _ => (0.0, 0.0, 0.0),
+    }
+}
+
+/// Run one (framework, arch) cell of Table 2 for a single epoch.
+pub fn run_cell(fw: FrameworkKind, arch: &str, workers: usize) -> Result<Row> {
+    let mut env = ClusterEnv::new(EnvConfig::virtual_paper(fw, arch, workers)?)?;
+    let mut strategy = strategy_for(fw);
+    let stats = strategy.run_epoch(&mut env)?;
+
+    let (per_batch, total_time) = if fw == FrameworkKind::GpuBaseline {
+        (stats.epoch_secs, stats.epoch_secs)
+    } else {
+        (stats.mean_fn_secs, stats.mean_fn_secs * env.batches_per_epoch as f64)
+    };
+    let total_cost = env.ledger.total_paper();
+    let cost_per_worker = if fw == FrameworkKind::GpuBaseline {
+        env.ledger.get(CostKind::Ec2Gpu) / workers as f64
+    } else {
+        total_cost / workers as f64
+    };
+    let prof = profile(arch).unwrap();
+    Ok(Row {
+        framework: fw,
+        arch: arch.to_string(),
+        per_batch_secs: per_batch,
+        total_time_secs: total_time,
+        peak_ram_mb: (fw != FrameworkKind::GpuBaseline).then(|| peak_ram_mb(fw, &prof, 512)),
+        cost_per_worker_usd: cost_per_worker,
+        total_cost_usd: total_cost,
+    })
+}
+
+/// Run the full table.
+pub fn run(workers: usize) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for arch in ["mobilenet", "resnet18"] {
+        for fw in FrameworkKind::ALL {
+            rows.push(run_cell(fw, arch, workers)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the paper-vs-measured table.
+pub fn render(rows: &[Row]) -> String {
+    let mut t = Table::new(&[
+        "Framework",
+        "Per-batch (s)",
+        "Total time (s)",
+        "Peak RAM (MB)",
+        "Cost/worker ($)",
+        "Total cost ($)",
+        "Paper total ($)",
+    ])
+    .title("Table 2 — Training time, peak RAM and cost per epoch (B=512, 4 workers x 24 batches)")
+    .align(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+
+    let mut last_arch = String::new();
+    for row in rows {
+        if row.arch != last_arch {
+            if !last_arch.is_empty() {
+                t.rule();
+            }
+            last_arch = row.arch.clone();
+        }
+        let (paper_batch, _paper_ram, paper_cost) = paper_row(row.framework, &row.arch);
+        t.row(vec![
+            format!("{} [{}]", row.framework.name(), row.arch),
+            format!("{:.2} (paper {:.2})", row.per_batch_secs, paper_batch),
+            format!("{:.1}", row.total_time_secs),
+            row.peak_ram_mb.map(|m| format!("{m:.0}")).unwrap_or_else(|| "N/A".into()),
+            format!("{:.4}", row.cost_per_worker_usd),
+            format!("{:.4}", row.total_cost_usd),
+            format!("{paper_cost:.4}"),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_shapes_hold() {
+        let rows = run(4).unwrap();
+        let cost = |fw: FrameworkKind, arch: &str| {
+            rows.iter()
+                .find(|r| r.framework == fw && r.arch == arch)
+                .unwrap()
+                .total_cost_usd
+        };
+        // Finding 1: serverless (LambdaML) beats GPU on cost for MobileNet…
+        assert!(cost(FrameworkKind::ScatterReduce, "mobilenet") < cost(FrameworkKind::GpuBaseline, "mobilenet"));
+        assert!(cost(FrameworkKind::AllReduce, "mobilenet") < cost(FrameworkKind::GpuBaseline, "mobilenet"));
+        // …but GPU wins for ResNet-18 (crossover).
+        for fw in [
+            FrameworkKind::Spirt,
+            FrameworkKind::MlLess,
+            FrameworkKind::AllReduce,
+            FrameworkKind::ScatterReduce,
+        ] {
+            assert!(
+                cost(fw, "resnet18") > cost(FrameworkKind::GpuBaseline, "resnet18"),
+                "{fw:?} should cost more than GPU on resnet18"
+            );
+        }
+        // Finding 2: MLLess is the most expensive serverless variant.
+        for arch in ["mobilenet", "resnet18"] {
+            for fw in [FrameworkKind::Spirt, FrameworkKind::AllReduce, FrameworkKind::ScatterReduce] {
+                assert!(cost(FrameworkKind::MlLess, arch) > cost(fw, arch));
+            }
+        }
+    }
+
+    #[test]
+    fn per_batch_durations_within_15pct_of_paper() {
+        let rows = run(4).unwrap();
+        for row in &rows {
+            let (paper_batch, _, _) = paper_row(row.framework, &row.arch);
+            let err = super::super::rel_err(row.per_batch_secs, paper_batch);
+            assert!(
+                err < 0.15,
+                "{:?}/{}: {:.2}s vs paper {:.2}s ({:.0}%)",
+                row.framework,
+                row.arch,
+                row.per_batch_secs,
+                paper_batch,
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn costs_within_30pct_of_paper() {
+        // Note: the paper's AllReduce/ScatterReduce cost cells are
+        // internally inconsistent with its own formula (14.343 s × 2.048 GB
+        // × $0.0000166667 = $0.00049/function, not the printed $0.000442),
+        // so a 30% band is the tightest defensible tolerance there; the
+        // self-consistent rows (SPIRT, MLLess, GPU) land within ~10%.
+        let rows = run(4).unwrap();
+        for row in &rows {
+            let (_, _, paper_cost) = paper_row(row.framework, &row.arch);
+            let err = super::super::rel_err(row.total_cost_usd, paper_cost);
+            assert!(
+                err < 0.30,
+                "{:?}/{}: ${:.4} vs paper ${:.4} ({:.0}%)",
+                row.framework,
+                row.arch,
+                row.total_cost_usd,
+                paper_cost,
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let rows = run(4).unwrap();
+        let s = render(&rows);
+        assert!(s.contains("SPIRT [mobilenet]"));
+        assert!(s.contains("GPU (g4dn.xlarge) [resnet18]"));
+    }
+}

@@ -1,0 +1,199 @@
+//! Table 3 / Fig. 4: convergence time and final accuracy — all five
+//! frameworks training the executed model end-to-end (real gradients
+//! through the PJRT artifacts, virtual time on the paper's axis).
+//!
+//! The paper's shape: GPU converges fastest; SPIRT is the best serverless
+//! trade-off (gradient accumulation → one sync per epoch); MLLess is slower
+//! (delayed updates); AllReduce/ScatterReduce are an order of magnitude
+//! slower (per-batch synchronization at serverless latencies) with
+//! AllReduce eventually the most accurate.
+
+use std::rc::Rc;
+
+use crate::cloud::FrameworkKind;
+use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use crate::runtime::Engine;
+use crate::train::{run_session, SessionConfig, SessionReport};
+use crate::util::table::{Align, Table};
+use crate::Result;
+
+/// Paper Table 3 (minutes to 80%, final accuracy %).
+pub fn paper_row(fw: FrameworkKind) -> (f64, f64) {
+    match fw {
+        FrameworkKind::Spirt => (84.96, 83.2),
+        FrameworkKind::MlLess => (189.68, 83.48),
+        FrameworkKind::ScatterReduce => (1652.49, 82.1),
+        FrameworkKind::AllReduce => (1367.01, 85.05),
+        FrameworkKind::GpuBaseline => (70.33, 84.5),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Table3Config {
+    pub model: String,
+    pub workers: usize,
+    pub train_samples: usize,
+    pub max_epochs: usize,
+    pub target_acc: f64,
+    pub seed: u64,
+}
+
+impl Default for Table3Config {
+    fn default() -> Self {
+        Table3Config {
+            model: "mobilenet_s".into(),
+            workers: 4,
+            train_samples: 6144,
+            max_epochs: 20,
+            target_acc: 0.80,
+            seed: 42,
+        }
+    }
+}
+
+/// One framework's full Table 3 outcome.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub framework: FrameworkKind,
+    pub session: SessionReport,
+    /// First epoch at which the target accuracy was reached.
+    pub epochs_to_target: Option<usize>,
+    /// Paper-scale virtual epoch duration used as the time axis (seconds).
+    pub paper_epoch_secs: f64,
+    /// Time to target on the paper-scale axis (minutes).
+    pub time_to_target_min: Option<f64>,
+    /// MLLess only: measured fraction of updates that passed the filter.
+    pub publish_rate: Option<f64>,
+}
+
+/// Run one framework's convergence session.
+pub fn run_framework(engine: Rc<Engine>, fw: FrameworkKind, cfg: &Table3Config) -> Result<Row> {
+    let env_cfg =
+        EnvConfig::real(fw, engine, &cfg.model, cfg.workers, cfg.train_samples, cfg.seed)?;
+    let mut env = ClusterEnv::new(env_cfg)?;
+    let session_cfg = SessionConfig {
+        max_epochs: cfg.max_epochs,
+        target_acc: cfg.target_acc,
+        patience: 6,
+        evaluate: true,
+    };
+
+    // MLLess is constructed directly so its measured publish rate can feed
+    // the paper-scale epoch pricing below.
+    let (session, publish_rate) = if fw == FrameworkKind::MlLess {
+        let mut s = crate::coordinator::mlless::MlLess::new(
+            crate::coordinator::mlless::DEFAULT_THRESHOLD,
+        );
+        let report = run_session(&mut env, &mut s, &session_cfg)?;
+        (report, Some(s.publish_rate()))
+    } else {
+        let mut strategy = strategy_for(fw);
+        (run_session(&mut env, strategy.as_mut(), &session_cfg)?, None)
+    };
+
+    let epochs_to_target = session
+        .reports
+        .iter()
+        .find(|r| r.test_acc.map(|a| a >= cfg.target_acc).unwrap_or(false))
+        .map(|r| r.epoch);
+    let epoch_secs = paper_epoch_secs(fw, publish_rate.unwrap_or(1.0))?;
+    Ok(Row {
+        framework: fw,
+        epochs_to_target,
+        paper_epoch_secs: epoch_secs,
+        time_to_target_min: epochs_to_target.map(|e| e as f64 * epoch_secs / 60.0),
+        publish_rate,
+        session,
+    })
+}
+
+/// Run the full Table 3 comparison.
+pub fn run(engine: Rc<Engine>, cfg: &Table3Config) -> Result<Vec<Row>> {
+    FrameworkKind::ALL
+        .iter()
+        .map(|fw| run_framework(engine.clone(), *fw, cfg))
+        .collect()
+}
+
+/// Paper-scale epoch duration (seconds) for the Table 3 time axis.
+///
+/// Methodology: convergence behaviour (epochs to target, accuracy) is
+/// measured *end-to-end* on the executed model; the time axis prices each
+/// epoch at the paper-scale virtual cost of Table 2 (MobileNet, B=512, 24
+/// batches/worker) — exactly as the paper's own time axis reflects its AWS
+/// infrastructure, not its model math. MLLess's epoch cost depends on how
+/// many updates pass the filter, so it is evaluated at the real run's
+/// measured publish rate.
+pub fn paper_epoch_secs(fw: FrameworkKind, publish_rate: f64) -> Result<f64> {
+    use crate::coordinator::mlless::MlLess;
+    use crate::coordinator::Strategy;
+    let mut env = ClusterEnv::new(EnvConfig::virtual_paper(fw, "mobilenet", 4)?)?;
+    let stats = match fw {
+        FrameworkKind::MlLess => {
+            MlLess::new(0.0).with_virtual_publish_rate(publish_rate).run_epoch(&mut env)?
+        }
+        _ => {
+            let mut s = strategy_for(fw);
+            s.run_epoch(&mut env)?
+        }
+    };
+    Ok(stats.epoch_secs)
+}
+
+pub fn render(rows: &[Row], cfg: &Table3Config) -> String {
+    let mut t = Table::new(&[
+        "Framework",
+        "Time to target (min)",
+        "Final acc (%)",
+        "Epochs",
+        "Epoch cost (s)",
+        "Paper (min, %)",
+    ])
+    .title(format!(
+        "Table 3 — Convergence ({} on synthetic CIFAR, target {:.0}%, paper-scale time axis)",
+        cfg.model,
+        cfg.target_acc * 100.0
+    ))
+    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+
+    for row in rows {
+        let (paper_min, paper_acc) = paper_row(row.framework);
+        t.row(vec![
+            row.framework.name().to_string(),
+            row.time_to_target_min
+                .map(|m| format!("{m:.1}"))
+                .unwrap_or_else(|| {
+                    format!(
+                        ">{:.1}",
+                        row.session.reports.len() as f64 * row.paper_epoch_secs / 60.0
+                    )
+                }),
+            row.session
+                .final_acc
+                .map(|a| format!("{:.1}", a * 100.0))
+                .unwrap_or_else(|| "-".into()),
+            row.session.reports.len().to_string(),
+            format!("{:.1}", row.paper_epoch_secs),
+            format!("{paper_min:.0}, {paper_acc:.1}"),
+        ]);
+    }
+    t.render()
+}
+
+/// Render the Fig. 4 accuracy-vs-time series as CSV (for plotting).
+pub fn render_csv(rows: &[Row]) -> String {
+    let mut out = String::from("framework,epoch,paper_time_min,loss,accuracy\n");
+    for row in rows {
+        for e in &row.session.reports {
+            out.push_str(&format!(
+                "{},{},{:.3},{},{}\n",
+                row.session.framework,
+                e.epoch,
+                e.epoch as f64 * row.paper_epoch_secs / 60.0,
+                e.mean_loss.map(|l| format!("{l:.4}")).unwrap_or_default(),
+                e.test_acc.map(|a| format!("{a:.4}")).unwrap_or_default(),
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,40 @@
+//! # slsgpu — Serverless-vs-GPU distributed training testbed
+//!
+//! Reproduction of *"Cost-Performance Analysis: A Comparative Study of
+//! CPU-Based Serverless and GPU-Based Training Architectures"* (Barrak,
+//! Petrillo, Jaafar — PDCAT 2025).
+//!
+//! The crate is the paper's testbed rebuilt as a library:
+//!
+//! * [`cloud`] — simulated AWS substrates (Lambda, RedisAI, S3, queues,
+//!   Step Functions, EC2/GPU) with virtual-time latency + billing models.
+//! * [`coordinator`] — the five training architectures under comparison:
+//!   SPIRT, MLLess, LambdaML AllReduce / ScatterReduce, and the distributed
+//!   GPU baseline.
+//! * [`runtime`] — the PJRT bridge: loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust. Python
+//!   never runs at request time.
+//! * [`sim`] — the virtual-time core: worker clocks, queueing resources,
+//!   the calibrated compute-duration model.
+//! * [`train`] — the epoch/step driver that wires data, strategy, substrates
+//!   and runtime into a training session.
+//! * [`exp`] — drivers that regenerate every table and figure of the paper.
+//!
+//! Time in experiment outputs is *virtual* (the paper's AWS time axis,
+//! calibrated from the paper's own measurements — see
+//! [`cloud::calibration`]); bytes, gradients and accuracies are real.
+
+pub mod cloud;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

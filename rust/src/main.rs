@@ -1,0 +1,215 @@
+//! slsgpu CLI — the testbed launcher.
+//!
+//! ```text
+//! slsgpu exp table1                          # workflow-stage comparison
+//! slsgpu exp table2 [--workers 4]            # time/RAM/cost per epoch
+//! slsgpu exp fig2   [--workers 4,8,12,16]    # AllReduce vs ScatterReduce
+//! slsgpu exp fig3   [--rates 1.0,0.5,...]    # MLLess filtering sweep (sim)
+//! slsgpu exp fig3-real [--model mobilenet_s] # MLLess real-gradient contrast
+//! slsgpu exp spirt-indb [--real]             # §4.2 in-DB vs naive
+//! slsgpu exp table3 [--model mobilenet_s] [--epochs 20] [--csv out.csv]
+//! slsgpu train --framework spirt --model mobilenet_s --epochs 5
+//! slsgpu artifacts                            # list compiled artifacts
+//! ```
+//!
+//! Experiments that execute real gradients need `make artifacts` first and
+//! accept `--artifacts <dir>` (default: ./artifacts).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use slsgpu::cloud::FrameworkKind;
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use slsgpu::exp;
+use slsgpu::runtime::Engine;
+use slsgpu::train::{run_session, SessionConfig};
+use slsgpu::util::cli::Args;
+
+fn main() {
+    if let Err(err) = run() {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}
+
+fn framework_by_name(name: &str) -> Result<FrameworkKind> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "spirt" => FrameworkKind::Spirt,
+        "mlless" => FrameworkKind::MlLess,
+        "allreduce" => FrameworkKind::AllReduce,
+        "scatterreduce" | "scatter-reduce" => FrameworkKind::ScatterReduce,
+        "gpu" | "gpu-baseline" => FrameworkKind::GpuBaseline,
+        other => bail!("unknown framework {other:?} (spirt|mlless|allreduce|scatterreduce|gpu)"),
+    })
+}
+
+fn engine_from(args: &Args) -> Result<Rc<Engine>> {
+    let dir = args.get_or("artifacts", "artifacts");
+    Ok(Rc::new(Engine::load(dir).context("loading artifacts (run `make artifacts`)")?))
+}
+
+fn parse_list(spec: &str) -> Result<Vec<usize>> {
+    spec.split(',').map(|s| Ok(s.trim().parse()?)).collect()
+}
+
+fn parse_flist(spec: &str) -> Result<Vec<f64>> {
+    spec.split(',').map(|s| Ok(s.trim().parse()?)).collect()
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("exp") => run_exp(&args),
+        Some("train") => run_train(&args),
+        Some("artifacts") => {
+            let engine = engine_from(&args)?;
+            println!("artifacts in {}:", engine.manifest.dir.display());
+            for (name, entry) in &engine.manifest.models {
+                println!(
+                    "  model {name}: arch={} n_params={} batch={} ({} artifacts)",
+                    entry.arch,
+                    entry.n_params,
+                    entry.batch,
+                    entry.artifacts.len()
+                );
+            }
+            for (name, slab) in &engine.manifest.slabs {
+                println!("  slab {name}: n={} ({} artifacts)", slab.n, slab.artifacts.len());
+            }
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (exp|train|artifacts)"),
+        None => {
+            println!("slsgpu — serverless-vs-GPU training testbed (see README)");
+            println!("subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, train, artifacts");
+            Ok(())
+        }
+    }
+}
+
+fn run_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("usage: slsgpu exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>"))?;
+    match which {
+        "table1" => {
+            print!("{}", exp::table1::render());
+        }
+        "table2" => {
+            let workers = args.get_usize("workers", 4)?;
+            let rows = exp::table2::run(workers)?;
+            print!("{}", exp::table2::render(&rows));
+        }
+        "fig2" => {
+            let counts = parse_list(args.get_or("workers", "4,8,12,16"))?;
+            let points = exp::fig2::run(&counts)?;
+            print!("{}", exp::fig2::render(&points));
+        }
+        "fig3" => {
+            let rates = parse_flist(args.get_or("rates", "1.0,0.5,0.2,0.1,0.05"))?;
+            let points = exp::fig3::run_sim(&rates)?;
+            print!("{}", exp::fig3::render_sim(&points));
+            println!(
+                "paper headline: {} s -> {} s (13x) with filtering",
+                exp::fig3::PAPER_UNFILTERED_SECS,
+                exp::fig3::PAPER_FILTERED_SECS
+            );
+        }
+        "fig3-real" => {
+            let engine = engine_from(args)?;
+            let model = args.get_or("model", "mobilenet_s");
+            let epochs = args.get_usize("epochs", 3)?;
+            let c = exp::fig3::run_real(engine, model, epochs)?;
+            println!(
+                "MLLess real-gradient contrast ({model}, {epochs} epochs):\n  \
+                 unfiltered: {:.1}s, {} on the wire\n  \
+                 filtered:   {:.1}s, {} on the wire (publish rate {:.0}%)\n  \
+                 speedup: {:.1}x (paper: {:.1}x)",
+                c.unfiltered_secs,
+                slsgpu::util::fmt_bytes(c.unfiltered_bytes),
+                c.filtered_secs,
+                slsgpu::util::fmt_bytes(c.filtered_bytes),
+                c.filtered_publish_rate * 100.0,
+                c.speedup,
+                exp::fig3::PAPER_UNFILTERED_SECS / exp::fig3::PAPER_FILTERED_SECS,
+            );
+        }
+        "spirt-indb" => {
+            let minibatches = args.get_usize("minibatches", 24)?;
+            let outcome = if args.has_flag("real") {
+                let engine = engine_from(args)?;
+                let slab = args.get_or("slab", "resnet18_full").to_string();
+                exp::spirt_indb::run(Some((engine, &slab)), minibatches)?
+            } else {
+                exp::spirt_indb::run(None, minibatches)?
+            };
+            print!("{}", exp::spirt_indb::render(&outcome));
+        }
+        "table3" => {
+            let engine = engine_from(args)?;
+            let cfg = exp::table3::Table3Config {
+                model: args.get_or("model", "mobilenet_s").to_string(),
+                workers: args.get_usize("workers", 4)?,
+                train_samples: args.get_usize("samples", 6144)?,
+                max_epochs: args.get_usize("epochs", 20)?,
+                target_acc: args.get_f64("target", 0.80)?,
+                seed: args.get_usize("seed", 42)? as u64,
+            };
+            let reports = exp::table3::run(engine, &cfg)?;
+            print!("{}", exp::table3::render(&reports, &cfg));
+            if let Some(path) = args.get("csv") {
+                std::fs::write(path, exp::table3::render_csv(&reports))?;
+                println!("wrote accuracy-vs-time series to {path}");
+            }
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn run_train(args: &Args) -> Result<()> {
+    let fw = framework_by_name(args.get_or("framework", "spirt"))?;
+    let engine = engine_from(args)?;
+    let model = args.get_or("model", "mobilenet_s");
+    let workers = args.get_usize("workers", 4)?;
+    let samples = args.get_usize("samples", 4096)?;
+    let epochs = args.get_usize("epochs", 5)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+
+    let mut env = ClusterEnv::new(EnvConfig::real(fw, engine, model, workers, samples, seed)?)?;
+    let mut strategy = strategy_for(fw);
+    let cfg = SessionConfig {
+        max_epochs: epochs,
+        target_acc: args.get_f64("target", 0.80)?,
+        patience: 8,
+        evaluate: true,
+    };
+    println!(
+        "training {model} with {} ({} workers, {} samples, {} epochs max)",
+        fw.name(),
+        workers,
+        samples,
+        epochs
+    );
+    let report = run_session(&mut env, strategy.as_mut(), &cfg)?;
+    for e in &report.reports {
+        println!(
+            "epoch {:>2}: vtime {:>8.1}s  loss {}  acc {}  cost ${:.4}",
+            e.epoch,
+            e.vtime_secs,
+            e.mean_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+            e.test_acc.map(|a| format!("{:.1}%", a * 100.0)).unwrap_or_else(|| "-".into()),
+            e.cost_usd
+        );
+    }
+    println!(
+        "done: final acc {}  total cost ${:.4}  virtual time {:.1} min",
+        report.final_acc.map(|a| format!("{:.1}%", a * 100.0)).unwrap_or_else(|| "-".into()),
+        report.total_cost_usd,
+        report.total_vtime_secs / 60.0
+    );
+    Ok(())
+}

@@ -1,0 +1,264 @@
+//! Cost ledger, communication stats and per-stage timing.
+//!
+//! Every substrate charges money into a [`Ledger`] and bytes into
+//! [`CommStats`]; the training loop charges stage durations into a
+//! [`StageTimer`]. Reports are rendered from these three accumulators —
+//! they are the testbed's measurement plane, matching the paper's metrics
+//! (§3.1: training time & cost per epoch, communication overhead, accuracy).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// What a dollar was spent on (AWS line items).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CostKind {
+    /// Lambda GB-seconds + request fees.
+    LambdaCompute,
+    /// EC2 GPU instance hours.
+    Ec2Gpu,
+    /// EC2 instance hours hosting Redis/RedisAI (excluded from the paper's
+    /// cost model; tracked separately and reported off to the side).
+    Ec2Redis,
+    /// S3 PUT/GET request fees.
+    S3Requests,
+    /// SQS/RabbitMQ message fees.
+    QueueMessages,
+    /// Step Functions state transitions.
+    StepFnTransitions,
+}
+
+impl fmt::Display for CostKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            CostKind::LambdaCompute => "lambda-compute",
+            CostKind::Ec2Gpu => "ec2-gpu",
+            CostKind::Ec2Redis => "ec2-redis",
+            CostKind::S3Requests => "s3-requests",
+            CostKind::QueueMessages => "queue-messages",
+            CostKind::StepFnTransitions => "stepfn-transitions",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Accumulates USD per cost kind.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    items: BTreeMap<CostKind, f64>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    pub fn charge(&mut self, kind: CostKind, usd: f64) {
+        debug_assert!(usd.is_finite() && usd >= 0.0, "bad charge {usd}");
+        *self.items.entry(kind).or_insert(0.0) += usd;
+    }
+
+    pub fn get(&self, kind: CostKind) -> f64 {
+        self.items.get(&kind).copied().unwrap_or(0.0)
+    }
+
+    /// Total following the paper's cost model (Ec2Redis excluded — the
+    /// paper deems database hosting negligible and excludes it; §5 Threats).
+    pub fn total_paper(&self) -> f64 {
+        self.items
+            .iter()
+            .filter(|(k, _)| **k != CostKind::Ec2Redis)
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Total including everything.
+    pub fn total_full(&self) -> f64 {
+        self.items.values().sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (CostKind, f64)> + '_ {
+        self.items.iter().map(|(k, v)| (*k, *v))
+    }
+
+    pub fn merge(&mut self, other: &Ledger) {
+        for (k, v) in other.iter() {
+            self.charge(k, v);
+        }
+    }
+}
+
+/// Classification of a communication operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CommKind {
+    /// Write to shared storage (S3 put / Redis set).
+    Put,
+    /// Read from shared storage (S3 get / Redis get).
+    Get,
+    /// Queue publish.
+    Publish,
+    /// Queue poll/receive.
+    Poll,
+    /// In-database tensor op (bytes stayed inside the DB).
+    InDb,
+}
+
+/// Byte/op counters per communication kind.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    ops: BTreeMap<CommKind, u64>,
+    bytes: BTreeMap<CommKind, u64>,
+    /// Seconds spent blocked on communication (sync stage time).
+    pub comm_time: f64,
+}
+
+impl CommStats {
+    pub fn new() -> CommStats {
+        CommStats::default()
+    }
+
+    pub fn record(&mut self, kind: CommKind, bytes: u64) {
+        *self.ops.entry(kind).or_insert(0) += 1;
+        *self.bytes.entry(kind).or_insert(0) += bytes;
+    }
+
+    pub fn ops(&self, kind: CommKind) -> u64 {
+        self.ops.get(&kind).copied().unwrap_or(0)
+    }
+
+    pub fn bytes(&self, kind: CommKind) -> u64 {
+        self.bytes.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Bytes that crossed the network (everything except in-DB ops).
+    pub fn wire_bytes(&self) -> u64 {
+        self.bytes
+            .iter()
+            .filter(|(k, _)| **k != CommKind::InDb)
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.ops.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        for (k, v) in &other.ops {
+            *self.ops.entry(*k).or_insert(0) += v;
+        }
+        for (k, v) in &other.bytes {
+            *self.bytes.entry(*k).or_insert(0) += v;
+        }
+        self.comm_time += other.comm_time;
+    }
+}
+
+/// The paper's Table-1 training stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    FetchDataset,
+    ComputeGradients,
+    Synchronize,
+    ModelUpdate,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] = [
+        Stage::FetchDataset,
+        Stage::ComputeGradients,
+        Stage::Synchronize,
+        Stage::ModelUpdate,
+    ];
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Stage::FetchDataset => "fetch-dataset",
+            Stage::ComputeGradients => "compute-gradients",
+            Stage::Synchronize => "synchronize",
+            Stage::ModelUpdate => "model-update",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Virtual seconds accumulated per training stage.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimer {
+    secs: BTreeMap<Stage, f64>,
+}
+
+impl StageTimer {
+    pub fn new() -> StageTimer {
+        StageTimer::default()
+    }
+
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        debug_assert!(secs >= 0.0, "negative stage time");
+        *self.secs.entry(stage).or_insert(0.0) += secs;
+    }
+
+    pub fn get(&self, stage: Stage) -> f64 {
+        self.secs.get(&stage).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (k, v) in &other.secs {
+            self.add(*k, *v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_and_excludes_redis() {
+        let mut l = Ledger::new();
+        l.charge(CostKind::LambdaCompute, 0.01);
+        l.charge(CostKind::LambdaCompute, 0.02);
+        l.charge(CostKind::Ec2Redis, 0.50);
+        assert!((l.get(CostKind::LambdaCompute) - 0.03).abs() < 1e-12);
+        assert!((l.total_paper() - 0.03).abs() < 1e-12);
+        assert!((l.total_full() - 0.53).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_merge() {
+        let mut a = Ledger::new();
+        a.charge(CostKind::S3Requests, 0.1);
+        let mut b = Ledger::new();
+        b.charge(CostKind::S3Requests, 0.2);
+        b.charge(CostKind::Ec2Gpu, 1.0);
+        a.merge(&b);
+        assert!((a.get(CostKind::S3Requests) - 0.3).abs() < 1e-12);
+        assert!((a.get(CostKind::Ec2Gpu) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_stats_wire_bytes_exclude_indb() {
+        let mut c = CommStats::new();
+        c.record(CommKind::Put, 100);
+        c.record(CommKind::Get, 50);
+        c.record(CommKind::InDb, 10_000);
+        assert_eq!(c.wire_bytes(), 150);
+        assert_eq!(c.total_ops(), 3);
+        assert_eq!(c.bytes(CommKind::InDb), 10_000);
+    }
+
+    #[test]
+    fn stage_timer() {
+        let mut t = StageTimer::new();
+        t.add(Stage::ComputeGradients, 5.0);
+        t.add(Stage::Synchronize, 2.0);
+        t.add(Stage::ComputeGradients, 1.0);
+        assert_eq!(t.get(Stage::ComputeGradients), 6.0);
+        assert_eq!(t.total(), 8.0);
+    }
+}

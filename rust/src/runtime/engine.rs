@@ -1,0 +1,279 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! One [`Engine`] per process. Artifacts are compiled lazily on first use
+//! and cached; every subsequent call is a straight PJRT execute with no
+//! recompilation and no Python. The typed wrappers (`init`, `grad`, `eval`,
+//! slab ops) own the Literal marshalling of the flat-parameter ABI.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{RustMath, Slab, SlabMath};
+
+use super::manifest::Manifest;
+
+/// Output of one grad-artifact execution.
+#[derive(Debug, Clone)]
+pub struct GradOutput {
+    pub loss: f32,
+    pub grads: Slab,
+    /// Correct top-1 predictions in the batch.
+    pub correct: u32,
+}
+
+/// PJRT CPU client + compiled-executable cache + manifest.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("compiled", &self.cache.borrow().len())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Create the engine over an artifacts directory (needs manifest.json).
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch cached) an artifact by file name.
+    fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact a model config needs (startup warm-up).
+    pub fn warm_model(&self, model: &str) -> Result<()> {
+        let entry = self.manifest.model(model)?.clone();
+        for file in entry.artifacts.values() {
+            self.executable(file)?;
+        }
+        let slab = self.manifest.slab(model)?.clone();
+        for file in slab.artifacts.values() {
+            self.executable(file)?;
+        }
+        Ok(())
+    }
+
+    fn run(&self, file: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        let result = exe.execute::<xla::Literal>(args)?;
+        let tupled = result[0][0].to_literal_sync()?;
+        Ok(tupled.to_tuple()?)
+    }
+
+    fn artifact_of(&self, model: &str, kind: &str) -> Result<String> {
+        let entry = self.manifest.model(model)?;
+        entry
+            .artifacts
+            .get(kind)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("model {model} lacks {kind} artifact"))
+    }
+
+    fn slab_artifact_of(&self, slab: &str, kind: &str) -> Result<String> {
+        let entry = self.manifest.slab(slab)?;
+        entry
+            .artifacts
+            .get(kind)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("slab {slab} lacks {kind} artifact"))
+    }
+
+    // -- typed calls ------------------------------------------------------
+
+    /// He-normal initial parameters for a model config (seeded).
+    pub fn init(&self, model: &str, seed: u32) -> Result<Slab> {
+        let file = self.artifact_of(model, "init")?;
+        let out = self.run(&file, &[xla::Literal::scalar(seed)])?;
+        let theta = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("init returned empty tuple"))?;
+        Ok(Slab::from_vec(theta.to_vec::<f32>()?))
+    }
+
+    /// Fwd+bwd on one batch: `(loss, grads, correct)`.
+    pub fn grad(&self, model: &str, theta: &Slab, x: &[f32], y: &[i32]) -> Result<GradOutput> {
+        let entry = self.manifest.model(model)?;
+        let (b, n) = (entry.batch, entry.n_params);
+        if theta.len() != n {
+            bail!("theta has {} params, model {model} needs {n}", theta.len());
+        }
+        if x.len() != b * 32 * 32 * 3 || y.len() != b {
+            bail!("batch shape mismatch: x={} y={} for batch {b}", x.len(), y.len());
+        }
+        let file = self.artifact_of(model, "grad")?;
+        let theta_lit = xla::Literal::vec1(theta.as_slice()?);
+        let x_lit = xla::Literal::vec1(x).reshape(&[b as i64, 32, 32, 3])?;
+        let y_lit = xla::Literal::vec1(y);
+        let out = self.run(&file, &[theta_lit, x_lit, y_lit])?;
+        if out.len() != 3 {
+            bail!("grad artifact returned {} outputs, expected 3", out.len());
+        }
+        let mut it = out.into_iter();
+        let loss = it.next().unwrap().get_first_element::<f32>()?;
+        let grads = Slab::from_vec(it.next().unwrap().to_vec::<f32>()?);
+        let correct = it.next().unwrap().get_first_element::<f32>()? as u32;
+        Ok(GradOutput { loss, grads, correct })
+    }
+
+    /// Forward-only evaluation on one eval batch: `(loss, correct)`.
+    pub fn eval(&self, model: &str, theta: &Slab, x: &[f32], y: &[i32]) -> Result<(f32, u32)> {
+        let entry = self.manifest.model(model)?;
+        let (b, n) = (entry.eval_batch, entry.n_params);
+        if theta.len() != n || x.len() != b * 32 * 32 * 3 || y.len() != b {
+            bail!("eval shape mismatch");
+        }
+        let file = self.artifact_of(model, "eval")?;
+        let theta_lit = xla::Literal::vec1(theta.as_slice()?);
+        let x_lit = xla::Literal::vec1(x).reshape(&[b as i64, 32, 32, 3])?;
+        let y_lit = xla::Literal::vec1(y);
+        let out = self.run(&file, &[theta_lit, x_lit, y_lit])?;
+        if out.len() != 2 {
+            bail!("eval artifact returned {} outputs, expected 2", out.len());
+        }
+        let loss = out[0].get_first_element::<f32>()?;
+        let correct = out[1].get_first_element::<f32>()? as u32;
+        Ok((loss, correct))
+    }
+
+    fn slab_binop(
+        &self,
+        slab_name: &str,
+        kind: &str,
+        a: &Slab,
+        b: &Slab,
+        scalars: &[f32],
+    ) -> Result<Slab> {
+        let entry = self.manifest.slab(slab_name)?;
+        if a.len() != entry.n || b.len() != entry.n {
+            bail!(
+                "slab op {kind} on {slab_name}: lengths {}/{} vs artifact {}",
+                a.len(),
+                b.len(),
+                entry.n
+            );
+        }
+        let file = self.slab_artifact_of(slab_name, kind)?;
+        let mut args = vec![xla::Literal::vec1(a.as_slice()?), xla::Literal::vec1(b.as_slice()?)];
+        for s in scalars {
+            args.push(xla::Literal::scalar(*s));
+        }
+        let out = self.run(&file, &args)?;
+        Ok(Slab::from_vec(
+            out.into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("empty tuple"))?
+                .to_vec::<f32>()?,
+        ))
+    }
+
+    /// Pallas `acc + w*g` at a named slab size.
+    pub fn acc(&self, slab_name: &str, acc: &Slab, g: &Slab, w: f32) -> Result<Slab> {
+        self.slab_binop(slab_name, "acc", acc, g, &[w])
+    }
+
+    /// Pallas `theta - lr*g`.
+    pub fn sgd(&self, slab_name: &str, theta: &Slab, g: &Slab, lr: f32) -> Result<Slab> {
+        self.slab_binop(slab_name, "sgd", theta, g, &[lr])
+    }
+
+    /// Pallas fused `theta - lr*(inv_k*gsum)` (the SPIRT in-DB op).
+    pub fn avg_update(
+        &self,
+        slab_name: &str,
+        theta: &Slab,
+        gsum: &Slab,
+        inv_k: f32,
+        lr: f32,
+    ) -> Result<Slab> {
+        self.slab_binop(slab_name, "avg_update", theta, gsum, &[inv_k, lr])
+    }
+}
+
+/// [`SlabMath`] backed by the PJRT-executed Pallas kernels — the faithful
+/// "RedisAI in-database computation" analog. Virtual slabs (and slab sizes
+/// without a compiled artifact) fall back to [`RustMath`] so cost-model
+/// experiments run without the runtime.
+pub struct PjrtMath {
+    engine: Rc<Engine>,
+    slab_name: String,
+    fallback: RustMath,
+}
+
+impl PjrtMath {
+    pub fn new(engine: Rc<Engine>, slab_name: impl Into<String>) -> PjrtMath {
+        PjrtMath { engine, slab_name: slab_name.into(), fallback: RustMath }
+    }
+
+    fn usable(&self, a: &Slab, b: &Slab) -> bool {
+        a.is_real()
+            && b.is_real()
+            && self
+                .engine
+                .manifest
+                .slab(&self.slab_name)
+                .map(|s| s.n == a.len())
+                .unwrap_or(false)
+    }
+}
+
+// SAFETY-adjacent note: the engine is not Sync (RefCell cache); the testbed
+// is single-threaded by design (deterministic virtual time), so SlabMath's
+// Send+Sync bound is satisfied by never actually sharing across threads.
+// We keep the trait bound but construct PjrtMath only on the main thread.
+unsafe impl Send for PjrtMath {}
+unsafe impl Sync for PjrtMath {}
+
+impl SlabMath for PjrtMath {
+    fn acc(&self, acc: &Slab, g: &Slab, w: f32) -> Result<Slab> {
+        if self.usable(acc, g) {
+            self.engine.acc(&self.slab_name, acc, g, w)
+        } else {
+            self.fallback.acc(acc, g, w)
+        }
+    }
+
+    fn avg_update(&self, theta: &Slab, gsum: &Slab, inv_k: f32, lr: f32) -> Result<Slab> {
+        if self.usable(theta, gsum) {
+            self.engine.avg_update(&self.slab_name, theta, gsum, inv_k, lr)
+        } else {
+            self.fallback.avg_update(theta, gsum, inv_k, lr)
+        }
+    }
+
+    fn sgd(&self, theta: &Slab, g: &Slab, lr: f32) -> Result<Slab> {
+        if self.usable(theta, g) {
+            self.engine.sgd(&self.slab_name, theta, g, lr)
+        } else {
+            self.fallback.sgd(theta, g, lr)
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest: what aot.py built and where.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// An executed model config (grad/eval/init artifacts exist).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub arch: String,
+    pub width: f64,
+    pub n_params: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    /// artifact kind ("init"/"grad"/"eval") -> file name.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// A flat-slab size with elementwise artifacts (acc/sgd/avg_update).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlabEntry {
+    pub name: String,
+    pub n: usize,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub image_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub slabs: BTreeMap<String, SlabEntry>,
+    /// Paper-reported full-model sizes (payload-only experiments).
+    pub paper_sizes: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, entry) in json.get("models")?.as_obj()? {
+            let mut artifacts = BTreeMap::new();
+            for (kind, file) in entry.get("artifacts")?.as_obj()? {
+                artifacts.insert(kind.clone(), file.as_str()?.to_string());
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    arch: entry.get("arch")?.as_str()?.to_string(),
+                    width: entry.get("width")?.as_f64()?,
+                    n_params: entry.get("n_params")?.as_usize()?,
+                    batch: entry.get("batch")?.as_usize()?,
+                    eval_batch: entry.get("eval_batch")?.as_usize()?,
+                    artifacts,
+                },
+            );
+        }
+
+        let mut slabs = BTreeMap::new();
+        for (name, entry) in json.get("slabs")?.as_obj()? {
+            let mut artifacts = BTreeMap::new();
+            for (kind, file) in entry.get("artifacts")?.as_obj()? {
+                artifacts.insert(kind.clone(), file.as_str()?.to_string());
+            }
+            slabs.insert(
+                name.clone(),
+                SlabEntry { name: name.clone(), n: entry.get("n")?.as_usize()?, artifacts },
+            );
+        }
+
+        let mut paper_sizes = BTreeMap::new();
+        for (name, n) in json.get("paper_sizes")?.as_obj()? {
+            paper_sizes.insert(name.clone(), n.as_usize()?);
+        }
+
+        Ok(Manifest {
+            dir,
+            image_shape: json
+                .get("image_shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            num_classes: json.get("num_classes")?.as_usize()?,
+            models,
+            slabs,
+            paper_sizes,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model config {name:?} not in manifest"))
+    }
+
+    pub fn slab(&self, name: &str) -> Result<&SlabEntry> {
+        self.slabs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("slab {name:?} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Locate the repo's artifacts directory from the test cwd.
+    pub fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.models.contains_key("mobilenet_s"));
+        assert!(m.slabs.contains_key("resnet18_full"));
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.image_shape, vec![32, 32, 3]);
+        let entry = m.model("mobilenet_s").unwrap();
+        assert!(entry.artifacts.contains_key("grad"));
+        // every referenced file exists
+        for model in m.models.values() {
+            for f in model.artifacts.values() {
+                assert!(m.artifact_path(f).exists(), "{f} missing");
+            }
+        }
+        // slab sizes cover the paper models
+        assert_eq!(m.slabs["mobilenet_full"].n, 4_200_000);
+        assert_eq!(m.paper_sizes["resnet50"], 25_600_000);
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads AOT artifacts and executes them on the hot path.
+//!
+//! `make artifacts` (build time, Python) lowers the JAX/Pallas functions to
+//! HLO *text*; this module (run time, Rust) parses that text into
+//! `HloModuleProto`s, compiles them once on the PJRT CPU client and executes
+//! them with zero Python involvement. Text is the interchange format because
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, GradOutput, PjrtMath};
+pub use manifest::{Manifest, ModelEntry, SlabEntry};

@@ -1,0 +1,46 @@
+//! Virtual-time simulation core.
+//!
+//! Experiments report time on the *paper's* axis (seconds of AWS wall time),
+//! not the testbed's CPU wall time. Every substrate operation charges a
+//! modeled duration to the calling worker's [`VTime`] clock; synchronization
+//! points take the max across clocks; shared services are queueing
+//! [`Resource`]s whose servers have `next_free` times. Because every duration
+//! is a pure function of the operation (no host clock reads), a seeded run is
+//! bit-for-bit reproducible.
+
+pub mod resource;
+pub mod vtime;
+
+pub use resource::{Resource, Served};
+pub use vtime::VTime;
+
+/// Advance all clocks to the max (a synchronization barrier). Returns the
+/// barrier time.
+pub fn barrier(clocks: &mut [VTime]) -> VTime {
+    let t = clocks.iter().copied().fold(VTime::ZERO, VTime::max);
+    for c in clocks.iter_mut() {
+        *c = t;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_takes_max_and_aligns() {
+        let mut clocks = [VTime::from_secs(1.0), VTime::from_secs(5.0), VTime::from_secs(2.0)];
+        let t = barrier(&mut clocks);
+        assert_eq!(t, VTime::from_secs(5.0));
+        assert!(clocks.iter().all(|c| *c == t));
+    }
+
+    #[test]
+    fn barrier_is_idempotent() {
+        let mut clocks = [VTime::from_secs(3.0), VTime::from_secs(3.0)];
+        let t1 = barrier(&mut clocks);
+        let t2 = barrier(&mut clocks);
+        assert_eq!(t1, t2);
+    }
+}

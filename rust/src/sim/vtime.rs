@@ -1,0 +1,125 @@
+//! Virtual time: an f64-seconds newtype with total ordering.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point on the virtual timeline, in seconds since experiment start.
+///
+/// Total ordering is safe because durations are always finite (asserted on
+/// construction), so `VTime` can be used in sorts and max-reductions.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct VTime(f64);
+
+impl VTime {
+    pub const ZERO: VTime = VTime(0.0);
+
+    pub fn from_secs(s: f64) -> VTime {
+        assert!(s.is_finite() && s >= 0.0, "invalid virtual time {s}");
+        VTime(s)
+    }
+
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+
+    pub fn minutes(self) -> f64 {
+        self.0 / 60.0
+    }
+
+    pub fn max(self, other: VTime) -> VTime {
+        if self.0 >= other.0 {
+            self
+        } else {
+            other
+        }
+    }
+
+    pub fn min(self, other: VTime) -> VTime {
+        if self.0 <= other.0 {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+impl Add<f64> for VTime {
+    type Output = VTime;
+    fn add(self, dur: f64) -> VTime {
+        assert!(dur.is_finite() && dur >= 0.0, "invalid duration {dur}");
+        VTime(self.0 + dur)
+    }
+}
+
+impl AddAssign<f64> for VTime {
+    fn add_assign(&mut self, dur: f64) {
+        *self = *self + dur;
+    }
+}
+
+impl Sub for VTime {
+    type Output = f64;
+    fn sub(self, other: VTime) -> f64 {
+        self.0 - other.0
+    }
+}
+
+impl PartialOrd for VTime {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Eq for VTime {}
+
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for VTime {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Finite by construction.
+        self.0.partial_cmp(&other.0).unwrap()
+    }
+}
+
+impl fmt::Display for VTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::util::fmt_duration(self.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = VTime::from_secs(1.5) + 2.5;
+        assert_eq!(t.secs(), 4.0);
+        assert_eq!(t - VTime::from_secs(1.0), 3.0);
+        assert_eq!(t.minutes(), 4.0 / 60.0);
+    }
+
+    #[test]
+    fn ordering_and_max() {
+        let a = VTime::from_secs(1.0);
+        let b = VTime::from_secs(2.0);
+        assert!(a < b);
+        assert_eq!(a.max(b), b);
+        assert_eq!(a.min(b), a);
+        let mut v = vec![b, a];
+        v.sort();
+        assert_eq!(v, vec![a, b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid duration")]
+    fn rejects_negative_duration() {
+        let _ = VTime::ZERO + (-1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid virtual time")]
+    fn rejects_nan() {
+        let _ = VTime::from_secs(f64::NAN);
+    }
+}

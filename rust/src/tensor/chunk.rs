@@ -1,0 +1,133 @@
+//! Gradient chunking — the heart of ScatterReduce.
+//!
+//! LambdaML's ScatterReduce splits each gradient into `W` chunks; worker `i`
+//! owns chunk `i`, aggregates everyone's copy of it, and the full gradient is
+//! reassembled from the `W` aggregated chunks. `ChunkPlan` fixes the split
+//! deterministically (first `n % W` chunks are one element longer) so every
+//! worker derives identical boundaries without coordination.
+
+use anyhow::{bail, Result};
+
+use super::slab::Slab;
+
+/// A deterministic split of a length-`n` slab into `k` contiguous chunks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkPlan {
+    n: usize,
+    k: usize,
+}
+
+impl ChunkPlan {
+    pub fn new(n: usize, k: usize) -> Result<ChunkPlan> {
+        if k == 0 {
+            bail!("chunk count must be positive");
+        }
+        if n < k {
+            bail!("cannot split {n} elements into {k} non-empty chunks");
+        }
+        Ok(ChunkPlan { n, k })
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.k
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.n
+    }
+
+    /// Half-open element range `[start, end)` of chunk `i`.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.k, "chunk index out of range");
+        let base = self.n / self.k;
+        let extra = self.n % self.k;
+        let start = i * base + i.min(extra);
+        let len = base + usize::from(i < extra);
+        (start, start + len)
+    }
+
+    pub fn chunk_len(&self, i: usize) -> usize {
+        let (s, e) = self.range(i);
+        e - s
+    }
+
+    /// Split a slab according to the plan (virtualness preserved).
+    pub fn split(&self, slab: &Slab) -> Result<Vec<Slab>> {
+        if slab.len() != self.n {
+            bail!("slab length {} does not match plan {}", slab.len(), self.n);
+        }
+        let mut out = Vec::with_capacity(self.k);
+        for i in 0..self.k {
+            let (s, e) = self.range(i);
+            out.push(match slab {
+                Slab::Real(v) => Slab::from_vec(v[s..e].to_vec()),
+                Slab::Virtual { .. } => Slab::virtual_of(e - s),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Reassemble chunks back into a full slab (inverse of `split`).
+    pub fn concat(&self, chunks: &[Slab]) -> Result<Slab> {
+        if chunks.len() != self.k {
+            bail!("expected {} chunks, got {}", self.k, chunks.len());
+        }
+        for (i, c) in chunks.iter().enumerate() {
+            if c.len() != self.chunk_len(i) {
+                bail!("chunk {i} has length {}, expected {}", c.len(), self.chunk_len(i));
+            }
+        }
+        if chunks.iter().any(|c| !c.is_real()) {
+            return Ok(Slab::virtual_of(self.n));
+        }
+        let mut out = Vec::with_capacity(self.n);
+        for c in chunks {
+            out.extend_from_slice(c.as_slice()?);
+        }
+        Ok(Slab::from_vec(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_partition_exactly() {
+        let plan = ChunkPlan::new(10, 3).unwrap();
+        assert_eq!(plan.range(0), (0, 4)); // 10 % 3 = 1 extra -> first chunk longer
+        assert_eq!(plan.range(1), (4, 7));
+        assert_eq!(plan.range(2), (7, 10));
+    }
+
+    #[test]
+    fn split_concat_roundtrip() {
+        let v: Vec<f32> = (0..23).map(|i| i as f32).collect();
+        let slab = Slab::from_vec(v.clone());
+        let plan = ChunkPlan::new(23, 4).unwrap();
+        let chunks = plan.split(&slab).unwrap();
+        assert_eq!(chunks.len(), 4);
+        let back = plan.concat(&chunks).unwrap();
+        assert_eq!(back.as_slice().unwrap(), v.as_slice());
+    }
+
+    #[test]
+    fn virtual_split_preserves_sizes() {
+        let plan = ChunkPlan::new(100, 7).unwrap();
+        let chunks = plan.split(&Slab::virtual_of(100)).unwrap();
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 100);
+        assert!(chunks.iter().all(|c| !c.is_real()));
+        assert!(!plan.concat(&chunks).unwrap().is_real());
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(ChunkPlan::new(3, 0).is_err());
+        assert!(ChunkPlan::new(2, 3).is_err());
+        let plan = ChunkPlan::new(10, 2).unwrap();
+        assert!(plan.split(&Slab::zeros(9)).is_err());
+        assert!(plan.concat(&[Slab::zeros(5)]).is_err());
+        assert!(plan.concat(&[Slab::zeros(4), Slab::zeros(6)]).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Flat tensor slabs — the wire format of every framework.
+//!
+//! All five architectures shuttle gradients/parameters as opaque `f32` slabs
+//! (the real systems move pickled tensors through Redis/S3; we move
+//! [`Slab`]s). A slab is either *real* (backed by memory, used by the
+//! end-to-end training runs) or *virtual* (size-only, used by the
+//! paper-scale cost/communication experiments where a 25.6M-param gradient
+//! would be 100 MB of irrelevant bytes). Every operation preserves length
+//! and "virtualness" so the two modes traverse identical protocol code.
+
+pub mod chunk;
+pub mod significance;
+pub mod slab;
+
+pub use chunk::ChunkPlan;
+pub use significance::SignificanceFilter;
+pub use slab::Slab;
+
+use anyhow::Result;
+
+/// Elementwise slab math engine — the compute behind RedisAI's in-database
+/// ops. Two implementations exist: [`RustMath`] (portable loops, used by the
+/// naive baselines and virtual-slab simulations) and
+/// `runtime::PjrtMath` (executes the AOT-compiled Pallas kernels — the
+/// faithful RedisAI analog used on the end-to-end path).
+pub trait SlabMath: Send + Sync {
+    /// `acc + w * g`.
+    fn acc(&self, acc: &Slab, g: &Slab, w: f32) -> Result<Slab>;
+    /// `theta - lr * (inv_k * gsum)` — the fused average+SGD op.
+    fn avg_update(&self, theta: &Slab, gsum: &Slab, inv_k: f32, lr: f32) -> Result<Slab>;
+    /// `theta - lr * g`.
+    fn sgd(&self, theta: &Slab, g: &Slab, lr: f32) -> Result<Slab>;
+}
+
+/// Pure-Rust [`SlabMath`] (virtual slabs pass through size-only).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RustMath;
+
+impl SlabMath for RustMath {
+    fn acc(&self, acc: &Slab, g: &Slab, w: f32) -> Result<Slab> {
+        let mut out = acc.clone();
+        out.axpy(g, w)?;
+        Ok(out)
+    }
+
+    fn avg_update(&self, theta: &Slab, gsum: &Slab, inv_k: f32, lr: f32) -> Result<Slab> {
+        let mut out = theta.clone();
+        out.axpy(gsum, -lr * inv_k)?;
+        Ok(out)
+    }
+
+    fn sgd(&self, theta: &Slab, g: &Slab, lr: f32) -> Result<Slab> {
+        let mut out = theta.clone();
+        out.axpy(g, -lr)?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod math_tests {
+    use super::*;
+
+    #[test]
+    fn rust_math_matches_manual() {
+        let m = RustMath;
+        let acc = m.acc(&Slab::from_vec(vec![1.0]), &Slab::from_vec(vec![2.0]), 0.5).unwrap();
+        assert_eq!(acc.as_slice().unwrap(), &[2.0]);
+        let upd = m
+            .avg_update(&Slab::from_vec(vec![1.0]), &Slab::from_vec(vec![4.0]), 0.25, 0.1)
+            .unwrap();
+        assert!((upd.as_slice().unwrap()[0] - 0.9).abs() < 1e-6);
+        let sgd = m.sgd(&Slab::from_vec(vec![1.0]), &Slab::from_vec(vec![1.0]), 0.3).unwrap();
+        assert!((sgd.as_slice().unwrap()[0] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rust_math_passes_virtual_through() {
+        let m = RustMath;
+        let out = m.acc(&Slab::virtual_of(8), &Slab::virtual_of(8), 1.0).unwrap();
+        assert_eq!(out.len(), 8);
+        assert!(!out.is_real());
+    }
+}

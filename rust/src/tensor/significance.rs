@@ -1,0 +1,128 @@
+//! MLLess significance filter (Rust-side decision logic).
+//!
+//! MLLess publishes an update only when its relative magnitude
+//! `||g|| / max(||theta||, eps)` exceeds a threshold; insignificant updates
+//! are accumulated locally and folded into the next significant one, so no
+//! gradient signal is lost — only its propagation is delayed. This mirrors
+//! the paper's description (§2, Fig. 3). The same predicate exists as a
+//! Pallas kernel (`kernels/significance.py`) for the in-runtime path; this
+//! Rust implementation drives the decision in the coordinator and is tested
+//! against hand-computed values.
+
+use super::slab::Slab;
+
+/// Stateful per-worker significance filter with local accumulation.
+#[derive(Debug, Clone)]
+pub struct SignificanceFilter {
+    threshold: f64,
+    /// Locally accumulated (not yet propagated) gradient.
+    pending: Option<Slab>,
+    /// Stats for Fig. 3-style reporting.
+    pub proposed: u64,
+    pub published: u64,
+}
+
+impl SignificanceFilter {
+    pub fn new(threshold: f64) -> SignificanceFilter {
+        assert!(threshold >= 0.0);
+        SignificanceFilter { threshold, pending: None, proposed: 0, published: 0 }
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Relative-magnitude significance predicate.
+    pub fn is_significant(&self, g: &Slab, theta: &Slab) -> bool {
+        if self.threshold == 0.0 {
+            return true; // filtering disabled
+        }
+        let gn = g.l2_norm_sq();
+        let tn = theta.l2_norm_sq().max(1e-12);
+        gn > self.threshold * self.threshold * tn
+    }
+
+    /// Offer a gradient. Returns `Some(update)` when the accumulated update
+    /// should be published (the pending accumulation is drained into it);
+    /// `None` when it stays local.
+    pub fn offer(&mut self, g: Slab, theta: &Slab) -> Option<Slab> {
+        self.proposed += 1;
+        let merged = match self.pending.take() {
+            Some(mut acc) => {
+                acc.axpy(&g, 1.0).expect("filter slab lengths must match");
+                acc
+            }
+            None => g,
+        };
+        if self.is_significant(&merged, theta) {
+            self.published += 1;
+            Some(merged)
+        } else {
+            self.pending = Some(merged);
+            None
+        }
+    }
+
+    /// Fraction of offers that were published (1.0 when disabled).
+    pub fn publish_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            1.0
+        } else {
+            self.published as f64 / self.proposed as f64
+        }
+    }
+
+    /// Any still-unpublished accumulation (flushed at epoch end).
+    pub fn drain_pending(&mut self) -> Option<Slab> {
+        self.pending.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slab(v: &[f32]) -> Slab {
+        Slab::from_vec(v.to_vec())
+    }
+
+    #[test]
+    fn zero_threshold_publishes_everything() {
+        let mut f = SignificanceFilter::new(0.0);
+        let theta = slab(&[100.0; 4]);
+        assert!(f.offer(slab(&[1e-9; 4]), &theta).is_some());
+        assert_eq!(f.publish_rate(), 1.0);
+    }
+
+    #[test]
+    fn small_updates_held_then_merged() {
+        // theta norm = 10; threshold 0.5 -> publish when ||g|| > 5.
+        let mut f = SignificanceFilter::new(0.5);
+        let theta = slab(&[10.0]);
+        assert!(f.offer(slab(&[3.0]), &theta).is_none()); // 3 < 5, held
+        // 3 + 3 = 6 > 5 -> published, including the held part.
+        let out = f.offer(slab(&[3.0]), &theta).unwrap();
+        assert_eq!(out.as_slice().unwrap(), &[6.0]);
+        assert_eq!(f.proposed, 2);
+        assert_eq!(f.published, 1);
+    }
+
+    #[test]
+    fn pending_flush() {
+        let mut f = SignificanceFilter::new(10.0);
+        let theta = slab(&[1.0]);
+        assert!(f.offer(slab(&[0.5]), &theta).is_none());
+        let flushed = f.drain_pending().unwrap();
+        assert_eq!(flushed.as_slice().unwrap(), &[0.5]);
+        assert!(f.drain_pending().is_none());
+    }
+
+    #[test]
+    fn significance_uses_relative_norm() {
+        let f = SignificanceFilter::new(0.5);
+        assert!(f.is_significant(&slab(&[6.0]), &slab(&[10.0]))); // 6 > 5
+        assert!(!f.is_significant(&slab(&[4.0]), &slab(&[10.0]))); // 4 < 5
+        // Zero theta: everything significant (eps guard).
+        assert!(f.is_significant(&slab(&[1e-3]), &slab(&[0.0])));
+    }
+}

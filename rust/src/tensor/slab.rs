@@ -1,0 +1,184 @@
+//! The `Slab` type: a flat f32 vector, real or size-only.
+
+use anyhow::{bail, Result};
+
+/// A flat f32 tensor slab.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Slab {
+    /// Backed by memory; elementwise math is real.
+    Real(Vec<f32>),
+    /// Size-only stand-in for paper-scale payloads; math is a no-op that
+    /// preserves length (time/cost models only need bytes).
+    Virtual { len: usize },
+}
+
+impl Slab {
+    pub fn zeros(len: usize) -> Slab {
+        Slab::Real(vec![0.0; len])
+    }
+
+    pub fn virtual_of(len: usize) -> Slab {
+        Slab::Virtual { len }
+    }
+
+    pub fn from_vec(v: Vec<f32>) -> Slab {
+        Slab::Real(v)
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Slab::Real(v) => v.len(),
+            Slab::Virtual { len } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_real(&self) -> bool {
+        matches!(self, Slab::Real(_))
+    }
+
+    /// Payload size on the wire (f32).
+    pub fn nbytes(&self) -> u64 {
+        self.len() as u64 * 4
+    }
+
+    pub fn as_slice(&self) -> Result<&[f32]> {
+        match self {
+            Slab::Real(v) => Ok(v),
+            Slab::Virtual { .. } => bail!("virtual slab has no data"),
+        }
+    }
+
+    pub fn zeros_like(&self) -> Slab {
+        match self {
+            Slab::Real(v) => Slab::zeros(v.len()),
+            Slab::Virtual { len } => Slab::Virtual { len: *len },
+        }
+    }
+
+    fn check_len(&self, other: &Slab) -> Result<()> {
+        if self.len() != other.len() {
+            bail!("slab length mismatch: {} vs {}", self.len(), other.len());
+        }
+        Ok(())
+    }
+
+    /// `self += w * g` — the aggregation primitive (pure-Rust path, used by
+    /// the "naive" baselines; the in-database path runs the PJRT kernel).
+    pub fn axpy(&mut self, g: &Slab, w: f32) -> Result<()> {
+        self.check_len(g)?;
+        if let (Slab::Real(a), Slab::Real(b)) = (&mut *self, g) {
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += w * *y;
+            }
+        }
+        Ok(())
+    }
+
+    /// `self *= s`.
+    pub fn scale(&mut self, s: f32) {
+        if let Slab::Real(v) = self {
+            for x in v.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+
+    /// `self -= lr * g` — SGD apply (pure-Rust path).
+    pub fn sgd(&mut self, g: &Slab, lr: f32) -> Result<()> {
+        self.axpy(g, -lr)
+    }
+
+    pub fn l2_norm_sq(&self) -> f64 {
+        match self {
+            Slab::Real(v) => v.iter().map(|x| (*x as f64) * (*x as f64)).sum(),
+            Slab::Virtual { .. } => 0.0,
+        }
+    }
+
+    /// Mean of `k` slabs (all must be same length). Virtual if any input is.
+    pub fn mean(slabs: &[Slab]) -> Result<Slab> {
+        if slabs.is_empty() {
+            bail!("mean of zero slabs");
+        }
+        let len = slabs[0].len();
+        if slabs.iter().any(|s| s.len() != len) {
+            bail!("slab length mismatch in mean");
+        }
+        if slabs.iter().any(|s| !s.is_real()) {
+            return Ok(Slab::Virtual { len });
+        }
+        let mut acc = Slab::zeros(len);
+        let w = 1.0 / slabs.len() as f32;
+        for s in slabs {
+            acc.axpy(s, w)?;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_real() {
+        let mut a = Slab::from_vec(vec![1.0, 2.0]);
+        a.axpy(&Slab::from_vec(vec![10.0, 20.0]), 0.5).unwrap();
+        assert_eq!(a.as_slice().unwrap(), &[6.0, 12.0]);
+    }
+
+    #[test]
+    fn axpy_virtual_is_noop_but_typed() {
+        let mut a = Slab::virtual_of(5);
+        a.axpy(&Slab::virtual_of(5), 1.0).unwrap();
+        assert_eq!(a.len(), 5);
+        assert!(!a.is_real());
+        assert!(a.axpy(&Slab::virtual_of(4), 1.0).is_err());
+    }
+
+    #[test]
+    fn sgd_matches_manual() {
+        let mut theta = Slab::from_vec(vec![1.0, 1.0, 1.0]);
+        theta.sgd(&Slab::from_vec(vec![1.0, 2.0, 3.0]), 0.1).unwrap();
+        let got = theta.as_slice().unwrap();
+        for (g, w) in got.iter().zip([0.9, 0.8, 0.7]) {
+            assert!((g - w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mean_of_slabs() {
+        let m = Slab::mean(&[
+            Slab::from_vec(vec![1.0, 3.0]),
+            Slab::from_vec(vec![3.0, 5.0]),
+        ])
+        .unwrap();
+        assert_eq!(m.as_slice().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn mean_propagates_virtual() {
+        let m = Slab::mean(&[Slab::zeros(3), Slab::virtual_of(3)]).unwrap();
+        assert!(!m.is_real());
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn nbytes_is_4x() {
+        assert_eq!(Slab::virtual_of(1000).nbytes(), 4000);
+    }
+
+    #[test]
+    fn norm() {
+        assert_eq!(Slab::from_vec(vec![3.0, 4.0]).l2_norm_sq(), 25.0);
+    }
+
+    #[test]
+    fn mean_empty_errors() {
+        assert!(Slab::mean(&[]).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Training session driver: epochs × strategy × convergence tracking.
+//!
+//! Wires a [`Strategy`] to a [`ClusterEnv`] and runs epochs until the
+//! [`EarlyStopper`] fires or the epoch budget is exhausted, recording an
+//! [`EpochReport`] per epoch — the raw material for Table 3 / Fig. 4 and
+//! the end-to-end examples.
+
+use crate::coordinator::{ClusterEnv, EarlyStopper, EpochStats, Strategy};
+use crate::Result;
+
+/// One epoch's observable state.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub epoch: usize,
+    /// Virtual time at epoch end (cumulative, seconds).
+    pub vtime_secs: f64,
+    pub epoch_secs: f64,
+    pub mean_loss: Option<f64>,
+    pub test_acc: Option<f64>,
+    /// Cumulative cost under the paper's model (USD).
+    pub cost_usd: f64,
+    pub mean_fn_secs: f64,
+}
+
+/// Outcome of a full session.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    pub framework: &'static str,
+    pub reports: Vec<EpochReport>,
+    /// Virtual minutes at which the target accuracy was first reached.
+    pub time_to_target_min: Option<f64>,
+    pub final_acc: Option<f64>,
+    pub total_cost_usd: f64,
+    pub total_vtime_secs: f64,
+}
+
+/// Session parameters.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub max_epochs: usize,
+    pub target_acc: f64,
+    pub patience: usize,
+    /// Evaluate accuracy every epoch (real mode); disable for cost-only runs.
+    pub evaluate: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { max_epochs: 30, target_acc: 0.80, patience: 8, evaluate: true }
+    }
+}
+
+/// Run a full training session.
+pub fn run_session(
+    env: &mut ClusterEnv,
+    strategy: &mut dyn Strategy,
+    cfg: &SessionConfig,
+) -> Result<SessionReport> {
+    let mut stopper = EarlyStopper::new(cfg.target_acc, cfg.patience);
+    let mut reports = Vec::new();
+    let mut time_to_target = None;
+
+    for epoch in 1..=cfg.max_epochs {
+        let stats: EpochStats = strategy.run_epoch(env)?;
+        let acc = if cfg.evaluate { env.eval_accuracy()? } else { None };
+        let vtime = env.max_clock().secs();
+        reports.push(EpochReport {
+            epoch,
+            vtime_secs: vtime,
+            epoch_secs: stats.epoch_secs,
+            mean_loss: stats.mean_loss,
+            test_acc: acc,
+            cost_usd: env.ledger.total_paper(),
+            mean_fn_secs: stats.mean_fn_secs,
+        });
+
+        if let Some(acc) = acc {
+            if acc >= cfg.target_acc && time_to_target.is_none() {
+                time_to_target = Some(vtime / 60.0);
+            }
+            if stopper.observe(epoch, acc) {
+                break;
+            }
+        }
+    }
+
+    let final_acc = reports.iter().rev().find_map(|r| r.test_acc);
+    Ok(SessionReport {
+        framework: env.framework.name(),
+        time_to_target_min: time_to_target,
+        final_acc,
+        total_cost_usd: env.ledger.total_paper(),
+        total_vtime_secs: env.max_clock().secs(),
+        reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::FrameworkKind;
+    use crate::coordinator::{strategy_for, EnvConfig};
+
+    #[test]
+    fn virtual_session_runs_epochs_without_eval() {
+        let mut env = ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 4).unwrap(),
+        )
+        .unwrap();
+        let mut strat = strategy_for(FrameworkKind::AllReduce);
+        let cfg = SessionConfig { max_epochs: 2, evaluate: false, ..Default::default() };
+        let report = run_session(&mut env, strat.as_mut(), &cfg).unwrap();
+        assert_eq!(report.reports.len(), 2);
+        assert!(report.total_cost_usd > 0.0);
+        assert!(report.time_to_target_min.is_none());
+        assert!(report.reports[1].vtime_secs > report.reports[0].vtime_secs);
+        assert_eq!(report.framework, "AllReduce");
+    }
+
+    #[test]
+    fn cost_accumulates_monotonically() {
+        let mut env = ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::ScatterReduce, "resnet18", 4).unwrap(),
+        )
+        .unwrap();
+        let mut strat = strategy_for(FrameworkKind::ScatterReduce);
+        let cfg = SessionConfig { max_epochs: 3, evaluate: false, ..Default::default() };
+        let report = run_session(&mut env, strat.as_mut(), &cfg).unwrap();
+        let costs: Vec<f64> = report.reports.iter().map(|r| r.cost_usd).collect();
+        assert!(costs.windows(2).all(|w| w[1] > w[0]), "{costs:?}");
+    }
+}

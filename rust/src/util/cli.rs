@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser: `prog <subcommand> [--key value] [--flag]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a subcommand plus `--key value` options and flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let value = iter.next().unwrap();
+                    args.options.insert(name.to_string(), value);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(arg);
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse(&["exp", "--model", "mobilenet", "--verbose", "--workers=8", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.get("model"), Some("mobilenet"));
+        assert_eq!(a.get("workers"), Some("8"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "4", "--lr", "0.5"]);
+        assert_eq!(a.get_usize("n", 1).unwrap(), 4);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse(&["x", "--n", "nope"]).get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["x", "--quiet"]);
+        assert!(a.has_flag("quiet"));
+        assert!(a.get("quiet").is_none());
+    }
+}

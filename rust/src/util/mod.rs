@@ -1,0 +1,57 @@
+//! Dependency-free utilities: PRNG, JSON, CLI args, ASCII tables.
+//!
+//! The build environment is fully offline (only the `xla` crate and its
+//! transitive deps are vendored), so the conveniences that would normally
+//! come from `rand`, `serde_json`, `clap` and `comfy-table` are implemented
+//! here as small, tested modules.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Format a byte count as a human-readable string.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut value = bytes as f64;
+    let mut unit = 0;
+    while value >= 1024.0 && unit < UNITS.len() - 1 {
+        value /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{value:.2} {}", UNITS[unit])
+    }
+}
+
+/// Format seconds as `h:mm:ss.s` / `m:ss.s` / `s.s` depending on magnitude.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{}h{:02}m{:04.1}s", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64, secs % 60.0)
+    } else if secs >= 60.0 {
+        format!("{}m{:04.1}s", (secs / 60.0) as u64, secs % 60.0)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(5.0), "5.00s");
+        assert_eq!(fmt_duration(65.0), "1m05.0s");
+        assert!(fmt_duration(3725.0).starts_with("1h02m"));
+    }
+}

@@ -1,0 +1,145 @@
+//! ASCII table renderer for experiment reports (paper-style rows).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder; renders with box-drawing borders.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    separators: Vec<usize>, // row indices after which to draw a rule
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            title: None,
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: header.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+            separators: Vec::new(),
+        }
+    }
+
+    pub fn title(mut self, t: impl Into<String>) -> Self {
+        self.title = Some(t.into());
+        self
+    }
+
+    pub fn align(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Draw a horizontal rule after the last added row (section break).
+    pub fn rule(&mut self) {
+        self.separators.push(self.rows.len());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let rule: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let pad = widths[i] - cells[i].chars().count();
+                match self.aligns[i] {
+                    Align::Left => s.push_str(&format!(" {}{} |", cells[i], " ".repeat(pad))),
+                    Align::Right => s.push_str(&format!(" {}{} |", " ".repeat(pad), cells[i])),
+                }
+            }
+            s
+        };
+
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&rule);
+        out.push('\n');
+        for (i, row) in self.rows.iter().enumerate() {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+            if self.separators.contains(&(i + 1)) && i + 1 != self.rows.len() {
+                out.push_str(&rule);
+                out.push('\n');
+            }
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        out
+    }
+}
+
+/// Convenience: `cells![a, b, c]` -> `Vec<String>` via Display.
+#[macro_export]
+macro_rules! cells {
+    ($($x:expr),* $(,)?) => {
+        vec![$(format!("{}", $x)),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]).align(&[Align::Left, Align::Right]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["long-name".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | value |"), "{s}");
+        assert!(s.contains("| a         |   1.5 |"), "{s}");
+    }
+
+    #[test]
+    fn title_and_rule() {
+        let mut t = Table::new(&["x"]).title("T");
+        t.row(vec!["1".into()]);
+        t.rule();
+        t.row(vec!["2".into()]);
+        let s = t.render();
+        assert!(s.starts_with("T\n"));
+        // two data rows + header -> at least 4 rules
+        assert!(s.matches("+---+").count() >= 4, "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

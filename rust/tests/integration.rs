@@ -1,0 +1,182 @@
+//! Integration tests over the full stack: PJRT runtime + coordinator +
+//! substrates. All tests that execute artifacts skip gracefully when
+//! `make artifacts` has not been run.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use slsgpu::cloud::FrameworkKind;
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use slsgpu::runtime::Engine;
+use slsgpu::tensor::{RustMath, Slab, SlabMath};
+use slsgpu::train::{run_session, SessionConfig};
+use slsgpu::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Option<Rc<Engine>> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Rc::new(Engine::load(artifacts_dir()).expect("engine load")))
+}
+
+#[test]
+fn runtime_grad_artifact_descends_loss() {
+    let Some(engine) = engine() else { return };
+    let model = "mobilenet_s";
+    let entry = engine.manifest.model(model).unwrap().clone();
+    let theta = engine.init(model, 7).unwrap();
+    assert_eq!(theta.len(), entry.n_params);
+
+    let mut rng = Rng::new(3);
+    let b = entry.batch;
+    let x: Vec<f32> = (0..b * 32 * 32 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(10) as i32).collect();
+
+    let out = engine.grad(model, &theta, &x, &y).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert!(out.correct <= b as u32);
+    assert_eq!(out.grads.len(), entry.n_params);
+
+    // SGD step through the Pallas artifact reduces the loss on this batch.
+    let gnorm = out.grads.l2_norm_sq().sqrt() as f32;
+    let theta2 = engine.sgd(model, &theta, &out.grads, 0.1 / gnorm.max(1.0)).unwrap();
+    let out2 = engine.grad(model, &theta2, &x, &y).unwrap();
+    assert!(
+        out2.loss < out.loss,
+        "loss must descend: {} -> {}",
+        out.loss,
+        out2.loss
+    );
+}
+
+#[test]
+fn pjrt_slab_math_matches_rust_math() {
+    // The RedisAI analog (PJRT-executed Pallas kernels) must agree with the
+    // portable Rust implementation bit-for-bit-ish.
+    let Some(engine) = engine() else { return };
+    let model = "mobilenet_s";
+    let n = engine.manifest.slab(model).unwrap().n;
+    let mut rng = Rng::new(11);
+    let a = Slab::from_vec((0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect());
+    let b = Slab::from_vec((0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect());
+
+    let rust = RustMath;
+    let cases: Vec<(Slab, Slab)> = vec![
+        (engine.acc(model, &a, &b, 0.25).unwrap(), rust.acc(&a, &b, 0.25).unwrap()),
+        (
+            engine.avg_update(model, &a, &b, 0.125, 0.05).unwrap(),
+            rust.avg_update(&a, &b, 0.125, 0.05).unwrap(),
+        ),
+        (engine.sgd(model, &a, &b, 0.1).unwrap(), rust.sgd(&a, &b, 0.1).unwrap()),
+    ];
+    for (i, (pjrt, ref_out)) in cases.iter().enumerate() {
+        let p = pjrt.as_slice().unwrap();
+        let r = ref_out.as_slice().unwrap();
+        let max_err = p
+            .iter()
+            .zip(r)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-5, "case {i}: max err {max_err}");
+    }
+}
+
+#[test]
+fn eval_artifact_agrees_with_grad_forward() {
+    let Some(engine) = engine() else { return };
+    let model = "mobilenet_s";
+    let entry = engine.manifest.model(model).unwrap().clone();
+    let theta = engine.init(model, 5).unwrap();
+    let mut rng = Rng::new(9);
+    let be = entry.eval_batch;
+    let xe: Vec<f32> = (0..be * 32 * 32 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let ye: Vec<i32> = (0..be).map(|_| rng.below(10) as i32).collect();
+    let (loss, correct) = engine.eval(model, &theta, &xe, &ye).unwrap();
+    assert!(loss.is_finite());
+    assert!(correct <= be as u32);
+}
+
+#[test]
+fn every_framework_trains_one_epoch_end_to_end() {
+    let Some(engine) = engine() else { return };
+    for fw in FrameworkKind::ALL {
+        let cfg =
+            EnvConfig::real(fw, engine.clone(), "mobilenet_s", 2, 256, 42).expect("env cfg");
+        let mut env = ClusterEnv::new(cfg).expect("env");
+        let mut strategy = strategy_for(fw);
+        let stats = strategy.run_epoch(&mut env).unwrap_or_else(|e| panic!("{fw:?}: {e:#}"));
+        assert!(stats.mean_loss.unwrap() > 0.0, "{fw:?}");
+        assert!(stats.epoch_secs > 0.0, "{fw:?}");
+        assert!(env.ledger.total_paper() > 0.0, "{fw:?}");
+        // All replicas hold finite parameters after the epoch.
+        for w in &env.workers {
+            assert!(w.theta.is_real(), "{fw:?}");
+            assert!(w.theta.l2_norm_sq().is_finite(), "{fw:?}");
+        }
+    }
+}
+
+#[test]
+fn synchronous_frameworks_keep_replicas_consistent() {
+    // AllReduce / ScatterReduce / GPU apply identical global updates: every
+    // worker's replica must stay bitwise identical across an epoch.
+    let Some(engine) = engine() else { return };
+    for fw in [FrameworkKind::AllReduce, FrameworkKind::ScatterReduce, FrameworkKind::GpuBaseline]
+    {
+        let cfg = EnvConfig::real(fw, engine.clone(), "mobilenet_s", 2, 256, 1).unwrap();
+        let mut env = ClusterEnv::new(cfg).unwrap();
+        let mut strategy = strategy_for(fw);
+        strategy.run_epoch(&mut env).unwrap();
+        let w0 = env.workers[0].theta.as_slice().unwrap().to_vec();
+        for w in &env.workers[1..] {
+            let max_err = w
+                .theta
+                .as_slice()
+                .unwrap()
+                .iter()
+                .zip(&w0)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 2e-5, "{fw:?}: replicas diverged by {max_err}");
+        }
+    }
+}
+
+#[test]
+fn spirt_theta_lives_in_the_database() {
+    let Some(engine) = engine() else { return };
+    let cfg =
+        EnvConfig::real(FrameworkKind::Spirt, engine, "mobilenet_s", 2, 256, 2).unwrap();
+    let mut env = ClusterEnv::new(cfg).unwrap();
+    let mut strategy = strategy_for(FrameworkKind::Spirt);
+    strategy.run_epoch(&mut env).unwrap();
+    // Replica mirror equals the in-database model.
+    for (w, redis) in env.workers.iter().zip(&env.worker_redis) {
+        let db = redis.peek_slab("theta").unwrap();
+        assert_eq!(db.as_slice().unwrap(), w.theta.as_slice().unwrap());
+    }
+    // SPIRT synchronized once (per epoch), not per batch.
+    assert_eq!(env.queues.total_published(), 2);
+}
+
+#[test]
+fn short_session_improves_accuracy() {
+    // Three epochs of the GPU baseline on the easy synthetic task must lift
+    // accuracy well above chance — the whole stack learns.
+    let Some(engine) = engine() else { return };
+    let cfg =
+        EnvConfig::real(FrameworkKind::GpuBaseline, engine, "mobilenet_s", 4, 1024, 42).unwrap();
+    let mut env = ClusterEnv::new(cfg).unwrap();
+    let mut strategy = strategy_for(FrameworkKind::GpuBaseline);
+    let session = SessionConfig { max_epochs: 3, target_acc: 0.99, patience: 10, evaluate: true };
+    let report = run_session(&mut env, strategy.as_mut(), &session).unwrap();
+    let first = report.reports.first().unwrap().test_acc.unwrap();
+    let last = report.final_acc.unwrap();
+    assert!(last > 0.15, "accuracy after 3 epochs: {last}");
+    assert!(last > first - 0.02, "accuracy should not regress: {first} -> {last}");
+}

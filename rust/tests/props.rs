@@ -1,0 +1,194 @@
+//! Property-based tests (hand-rolled harness; proptest is unavailable in
+//! the offline vendor set). Each property runs against a seeded sweep of
+//! randomized cases — failures print the offending seed for replay.
+
+use slsgpu::cloud::pricing;
+use slsgpu::metrics::CommStats;
+use slsgpu::sim::{Resource, VTime};
+use slsgpu::tensor::{ChunkPlan, SignificanceFilter, Slab};
+use slsgpu::util::json::Json;
+use slsgpu::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+#[test]
+fn prop_chunk_split_concat_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let k = 1 + rng.below(16) as usize;
+        let n = k + rng.below(10_000) as usize;
+        let data: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let plan = ChunkPlan::new(n, k).unwrap();
+        let chunks = plan.split(&Slab::from_vec(data.clone())).unwrap();
+        // chunks partition exactly
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, n, "seed {seed}");
+        // lengths differ by at most 1
+        let lens: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        assert!(mx - mn <= 1, "seed {seed}: {lens:?}");
+        // roundtrip is exact
+        let back = plan.concat(&chunks).unwrap();
+        assert_eq!(back.as_slice().unwrap(), data.as_slice(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_resource_no_overlap_and_causality() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let servers = 1 + rng.below(4) as usize;
+        let mut r = Resource::new("p", servers);
+        let mut served = Vec::new();
+        for _ in 0..50 {
+            let arrival = VTime::from_secs(rng.range_f64(0.0, 100.0));
+            let service = rng.range_f64(0.01, 5.0);
+            let s = r.serve(arrival, service);
+            // causality: service starts no earlier than arrival
+            assert!(s.start >= arrival, "seed {seed}");
+            assert!((s.end - s.start - service).abs() < 1e-9, "seed {seed}");
+            served.push(s);
+        }
+        // capacity: at no point are more than `servers` requests in service
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for s in &served {
+            events.push((s.start.secs(), 1));
+            events.push((s.end.secs(), -1));
+        }
+        events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut active = 0;
+        for (_, delta) in events {
+            active += delta;
+            assert!(active <= servers as i32, "seed {seed}: capacity exceeded");
+        }
+    }
+}
+
+#[test]
+fn prop_slab_mean_bounded_by_extremes() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let n = 1 + rng.below(500) as usize;
+        let k = 1 + rng.below(6) as usize;
+        let slabs: Vec<Slab> = (0..k)
+            .map(|_| Slab::from_vec((0..n).map(|_| rng.normal_f32(0.0, 3.0)).collect()))
+            .collect();
+        let mean = Slab::mean(&slabs).unwrap();
+        let m = mean.as_slice().unwrap();
+        for i in 0..n {
+            let vals: Vec<f32> = slabs.iter().map(|s| s.as_slice().unwrap()[i]).collect();
+            let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(
+                m[i] >= lo - 1e-4 && m[i] <= hi + 1e-4,
+                "seed {seed}: mean outside hull at {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_significance_filter_conserves_gradient_mass() {
+    // Everything offered is either published or still pending: no signal
+    // is lost, only delayed (the MLLess invariant).
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let n = 1 + rng.below(64) as usize;
+        let threshold = rng.range_f64(0.0, 2.0);
+        let mut filter = SignificanceFilter::new(threshold);
+        let theta = Slab::from_vec((0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect());
+        let mut offered_sum = vec![0f64; n];
+        let mut published_sum = vec![0f64; n];
+        for _ in 0..20 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+            for (a, b) in offered_sum.iter_mut().zip(&g) {
+                *a += *b as f64;
+            }
+            if let Some(update) = filter.offer(Slab::from_vec(g), &theta) {
+                for (a, b) in published_sum.iter_mut().zip(update.as_slice().unwrap()) {
+                    *a += *b as f64;
+                }
+            }
+        }
+        if let Some(pending) = filter.drain_pending() {
+            for (a, b) in published_sum.iter_mut().zip(pending.as_slice().unwrap()) {
+                *a += *b as f64;
+            }
+        }
+        for i in 0..n {
+            assert!(
+                (offered_sum[i] - published_sum[i]).abs() < 1e-3,
+                "seed {seed}: gradient mass lost at {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_lambda_billing_monotone_in_time_and_memory() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let t = rng.range_f64(0.1, 100.0);
+        let mb = rng.range_f64(128.0, 10_240.0);
+        let dt = rng.range_f64(0.01, 10.0);
+        let dmb = rng.range_f64(1.0, 1024.0);
+        let base = pricing::lambda_cost(t, mb);
+        assert!(pricing::lambda_cost(t + dt, mb) > base, "seed {seed}");
+        assert!(pricing::lambda_cost(t, mb + dmb) > base, "seed {seed}");
+        assert!(base > 0.0);
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e} in {text}"));
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bernoulli(0.5)),
+        2 => Json::Num((rng.below(2_000_000) as f64 - 1_000_000.0) / 16.0),
+        3 => {
+            let len = rng.below(12) as usize;
+            Json::Str((0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+        }
+        4 => {
+            let len = rng.below(4) as usize;
+            Json::Arr((0..len).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.below(4) as usize;
+            Json::Obj(
+                (0..len)
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_redis_visibility_ordering() {
+    // A get issued at any time always returns data at/after the set's
+    // completion time (no time-travel reads).
+    for seed in 0..CASES {
+        let mut rng = Rng::new(6000 + seed);
+        let mut redis = slsgpu::cloud::Redis::new("p");
+        let mut comm = CommStats::new();
+        let set_at = VTime::from_secs(rng.range_f64(0.0, 10.0));
+        let n = 1 + rng.below(100_000) as usize;
+        let visible = redis.set(set_at, "k", Slab::virtual_of(n), &mut comm);
+        let get_at = VTime::from_secs(rng.range_f64(0.0, 20.0));
+        let (done, slab) = redis.get(get_at, "k", &mut comm).unwrap();
+        assert!(done >= visible, "seed {seed}");
+        assert!(done >= get_at, "seed {seed}");
+        assert_eq!(slab.len(), n);
+    }
+}
