@@ -1,0 +1,64 @@
+//! Fault-engine overhead benchmark (plain harness; criterion is
+//! unavailable offline): the hooks are consulted on every compute/sync
+//! boundary even in fault-free runs, so their cost must stay negligible
+//! against the protocol simulation itself. Reports host-time per simulated
+//! epoch for (a) a fault-free plan, (b) an armed multi-fault plan, and (c)
+//! robust aggregation rules, for the AllReduce protocol at paper scale.
+
+use std::time::Instant;
+
+use slsgpu::cloud::FrameworkKind;
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use slsgpu::faults::{FaultPlan, PoisonMode};
+use slsgpu::tensor::AggregationRule;
+
+fn epoch_host_secs(plan: &FaultPlan, agg: AggregationRule, iters: usize) -> f64 {
+    // Warmup.
+    run_once(plan, agg);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        run_once(plan, agg);
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn run_once(plan: &FaultPlan, agg: AggregationRule) {
+    let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 4)
+        .unwrap()
+        .with_faults(plan.clone())
+        .with_aggregation(agg);
+    let mut env = ClusterEnv::new(cfg).unwrap();
+    let mut strategy = strategy_for(FrameworkKind::AllReduce);
+    strategy.run_epoch(&mut env).unwrap();
+}
+
+fn main() {
+    let iters = 30;
+    let none = FaultPlan::none();
+    let busy = FaultPlan::none()
+        .crash(1, 1, 5)
+        .sync_crash(2, 1)
+        .straggler(3, 1, 0, 3.0, Some(8))
+        .drop_updates(0, 1, 0, Some(4))
+        .poison(3, 1, PoisonMode::SignFlip);
+
+    let base = epoch_host_secs(&none, AggregationRule::Mean, iters);
+    println!("allreduce epoch, no faults, mean agg      {:>10.2} us", base * 1e6);
+
+    let armed = epoch_host_secs(&busy, AggregationRule::Mean, iters);
+    println!(
+        "allreduce epoch, 5-event plan, mean agg   {:>10.2} us  ({:+.1}% vs fault-free)",
+        armed * 1e6,
+        (armed - base) / base * 100.0
+    );
+
+    for agg in [AggregationRule::ClippedMean { ratio: 1.0 }, AggregationRule::CoordMedian] {
+        let t = epoch_host_secs(&none, agg, iters);
+        println!(
+            "allreduce epoch, no faults, {:<12}  {:>10.2} us  ({:+.1}% vs mean)",
+            agg.name(),
+            t * 1e6,
+            (t - base) / base * 100.0
+        );
+    }
+}

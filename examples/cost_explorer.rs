@@ -39,6 +39,8 @@ fn epoch_cost(fw: FrameworkKind, profile: ModelProfile) -> anyhow::Result<f64> {
         profile,
         grad_mode: GradMode::Virtual,
         seed: 7,
+        fault_plan: slsgpu::faults::FaultPlan::none(),
+        agg: slsgpu::tensor::AggregationRule::Mean,
     };
     let mut env = ClusterEnv::new(cfg)?;
     strategy_for(fw).run_epoch(&mut env)?;
@@ -88,7 +90,8 @@ fn main() -> anyhow::Result<()> {
     print!("{}", t.render());
     match crossover {
         Some(p) => println!(
-            "crossover: GPU becomes cheaper at ~{:.1}M params (paper: between 4.2M MobileNet and 11.7M ResNet-18)",
+            "crossover: GPU becomes cheaper at ~{:.1}M params \
+             (paper: between 4.2M MobileNet and 11.7M ResNet-18)",
             p as f64 / 1e6
         ),
         None => println!("no crossover found in the swept range"),

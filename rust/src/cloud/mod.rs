@@ -15,6 +15,7 @@ pub mod lambda;
 pub mod object_store;
 pub mod pricing;
 pub mod queue;
+pub mod recovery;
 pub mod redis;
 pub mod step_functions;
 

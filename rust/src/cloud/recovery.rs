@@ -1,0 +1,156 @@
+//! Recovery billing: what failure handling costs on AWS.
+//!
+//! Crashes are not free even on "pay per use" substrates — a retried Lambda
+//! invocation is a second billed invocation, a model restored from a Redis
+//! snapshot occupies the instance and the network, and peers that poll
+//! shared storage for an object that is late keep paying per-request fees
+//! while they wait. Restore/repoll helpers charge the normal AWS line item
+//! in the [`Ledger`] and tally the amount into
+//! [`RecoveryStats`]`::cost_usd`. Retried invocations are the exception:
+//! the strategies bill each logical invocation's *extended* span (which
+//! already contains the wasted attempt and the retry window) through
+//! `LambdaRuntime::finish_invocation`, so [`lambda_retry`] charges the
+//! ledger only the retry's extra request fee and *attributes* the window's
+//! duration cost to `cost_usd` — the fault table reports recovery cost
+//! without double-charging the ledger.
+
+use crate::metrics::{CostKind, Ledger, RecoveryStats};
+
+use super::calibration::{REDIS_BW, REDIS_LATENCY};
+use super::pricing;
+
+/// Poll interval peers use while re-polling a late object/message (seconds).
+/// Matches the 1 s backoff LambdaML-style storage synchronization uses.
+pub const REPOLL_INTERVAL: f64 = 1.0;
+
+/// Account a retried/restarted Lambda invocation of `duration_secs` at
+/// `allocated_mb`: the ledger gets the extra request fee (the duration is
+/// billed by the strategy's extended invocation span — see module docs);
+/// the full window cost is attributed to recovery.
+pub fn lambda_retry(
+    duration_secs: f64,
+    allocated_mb: f64,
+    ledger: &mut Ledger,
+    recovery: &mut RecoveryStats,
+) {
+    ledger.charge(CostKind::LambdaCompute, pricing::LAMBDA_USD_PER_REQUEST);
+    recovery.cost_usd += pricing::lambda_cost(duration_secs, allocated_mb);
+}
+
+/// Like [`lambda_retry`], but for a restart that happens *outside* any open
+/// invocation span (SPIRT's sync stage runs after its minibatch functions
+/// finished): the full duration is billed to the ledger here, since no
+/// extended span will carry it.
+pub fn lambda_restart_billed(
+    duration_secs: f64,
+    allocated_mb: f64,
+    ledger: &mut Ledger,
+    recovery: &mut RecoveryStats,
+) {
+    let usd = pricing::lambda_cost(duration_secs, allocated_mb);
+    ledger.charge(CostKind::LambdaCompute, usd);
+    recovery.cost_usd += usd;
+}
+
+/// Restore `bytes` of model state from a Redis snapshot after a restart.
+/// Returns the restore duration; the hosting instance time is billed under
+/// `Ec2Redis` (excluded from the paper total, reported off to the side —
+/// same treatment as regular Redis hosting).
+pub fn redis_snapshot_restore(
+    bytes: u64,
+    ledger: &mut Ledger,
+    recovery: &mut RecoveryStats,
+) -> f64 {
+    let secs = bytes as f64 / REDIS_BW + REDIS_LATENCY;
+    let usd = pricing::redis_host_cost(secs, 1);
+    ledger.charge(CostKind::Ec2Redis, usd);
+    recovery.snapshot_restores += 1;
+    recovery.restore_bytes += bytes;
+    recovery.cost_usd += usd;
+    secs
+}
+
+/// Bill the storage GETs `waiters` peers issue while re-polling for
+/// `down_secs` of downtime (one request per peer per poll interval).
+pub fn storage_repolls(
+    down_secs: f64,
+    waiters: usize,
+    ledger: &mut Ledger,
+    recovery: &mut RecoveryStats,
+) {
+    let polls = (down_secs / REPOLL_INTERVAL).ceil().max(1.0) as u64 * waiters as u64;
+    let usd = pricing::s3_get_cost(polls);
+    ledger.charge(CostKind::S3Requests, usd);
+    recovery.storage_repolls += polls;
+    recovery.cost_usd += usd;
+}
+
+/// Bill the queue polls `waiters` peers issue while re-polling for
+/// `down_secs` of downtime.
+pub fn queue_repolls(
+    down_secs: f64,
+    waiters: usize,
+    ledger: &mut Ledger,
+    recovery: &mut RecoveryStats,
+) {
+    let polls = (down_secs / REPOLL_INTERVAL).ceil().max(1.0) as u64 * waiters as u64;
+    let usd = pricing::queue_cost(polls);
+    ledger.charge(CostKind::QueueMessages, usd);
+    recovery.queue_repolls += polls;
+    recovery.cost_usd += usd;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_bills_request_fee_and_attributes_duration() {
+        let mut l = Ledger::new();
+        let mut r = RecoveryStats::new();
+        lambda_retry(10.0, 2048.0, &mut l, &mut r);
+        // Ledger: only the extra request fee (duration rides on the
+        // strategy's extended invocation span).
+        let fee = pricing::LAMBDA_USD_PER_REQUEST;
+        assert!((l.get(CostKind::LambdaCompute) - fee).abs() < 1e-15);
+        // Attribution: the full retry-window cost.
+        let full = pricing::lambda_cost(10.0, 2048.0);
+        assert!((r.cost_usd - full).abs() < 1e-15);
+        assert!(r.cost_usd > fee);
+    }
+
+    #[test]
+    fn uncovered_restart_bills_full_duration() {
+        let mut l = Ledger::new();
+        let mut r = RecoveryStats::new();
+        lambda_restart_billed(3.0, 2048.0, &mut l, &mut r);
+        let full = pricing::lambda_cost(3.0, 2048.0);
+        assert!((l.get(CostKind::LambdaCompute) - full).abs() < 1e-15);
+        assert!((r.cost_usd - full).abs() < 1e-15);
+    }
+
+    #[test]
+    fn snapshot_restore_takes_transfer_time() {
+        let mut l = Ledger::new();
+        let mut r = RecoveryStats::new();
+        // 46.8 MB ResNet-18 state at 300 MB/s ≈ 0.156 s.
+        let secs = redis_snapshot_restore(46_800_000, &mut l, &mut r);
+        assert!((secs - 0.1575).abs() < 0.01, "{secs}");
+        assert_eq!(r.restore_bytes, 46_800_000);
+        assert!(l.get(CostKind::Ec2Redis) > 0.0);
+        // Paper's cost model excludes Redis hosting; total_paper unchanged.
+        assert_eq!(l.total_paper(), 0.0);
+    }
+
+    #[test]
+    fn repolls_scale_with_downtime_and_waiters() {
+        let mut l = Ledger::new();
+        let mut r = RecoveryStats::new();
+        storage_repolls(3.2, 3, &mut l, &mut r);
+        assert_eq!(r.storage_repolls, 4 * 3);
+        queue_repolls(0.1, 2, &mut l, &mut r);
+        assert_eq!(r.queue_repolls, 2);
+        assert!(l.get(CostKind::S3Requests) > 0.0);
+        assert!(l.get(CostKind::QueueMessages) > 0.0);
+    }
+}

@@ -28,6 +28,13 @@ impl AllReduce {
     /// One synchronization round after gradients are computed: workers put,
     /// master aggregates, workers fetch + update. Factored out so Fig. 2 can
     /// measure a single round's communication time.
+    ///
+    /// Fault semantics: a sync-phase crash delays the crashed worker's
+    /// upload until its restart — and because the master waits for every
+    /// gradient before it can aggregate, the *whole round* stalls behind
+    /// the restart (the master-topology weakness the SPIRT paper targets).
+    /// A master crash delays the fetch+aggregate+re-publish chain itself.
+    /// Dropped updates are simply absent from the aggregate.
     pub fn sync_round(
         &self,
         env: &mut ClusterEnv,
@@ -36,37 +43,49 @@ impl AllReduce {
     ) -> Result<()> {
         let w_count = env.num_workers();
 
-        // Every worker uploads its gradient.
+        // Every worker uploads its gradient (late if it just restarted,
+        // never if the update is dropped in transit).
+        let mut keys: Vec<String> = Vec::with_capacity(w_count);
         for w in 0..w_count {
+            env.sync_crash(w);
+            if env.update_dropped(w) {
+                continue;
+            }
             let key = format!("{round_tag}/g{w}");
             let t0 = env.workers[w].clock;
             let done = env.store.put(t0, &key, grads[w].clone(), &mut env.ledger, &mut env.comm);
             let dt = done - t0;
             env.workers[w].clock = done;
             env.stages.add(Stage::Synchronize, dt);
+            keys.push(key);
+        }
+        if keys.is_empty() {
+            // Every update was lost: nothing to aggregate this round.
+            return Ok(());
         }
 
         // Master bulk-fetches all gradients (pipelined over one connection,
         // still serialized on its clock — the Fig. 2 bottleneck), averages.
         let m = self.master;
-        let keys: Vec<String> = (0..w_count).map(|w| format!("{round_tag}/g{w}")).collect();
         let t0 = env.workers[m].clock;
         let (done, fetched) = env.store.get_many(t0, &keys, &mut env.ledger, &mut env.comm)?;
         env.stages.add(Stage::Synchronize, done - t0);
         env.workers[m].clock = done;
-        let agg_secs = env.local_agg_secs(w_count);
+        let agg_secs = env.local_agg_secs(keys.len());
         env.workers[m].clock += agg_secs;
         env.stages.add(Stage::Synchronize, agg_secs);
-        let mean = Slab::mean(&fetched)?;
+        let mean = env.aggregate(m, &fetched)?;
         let t0 = env.workers[m].clock;
-        let done = env.store.put(t0, &format!("{round_tag}/agg"), mean, &mut env.ledger, &mut env.comm);
+        let done =
+            env.store.put(t0, &format!("{round_tag}/agg"), mean, &mut env.ledger, &mut env.comm);
         env.stages.add(Stage::Synchronize, done - t0);
         env.workers[m].clock = done;
 
         // Everyone fetches the aggregate and applies it.
         for w in 0..w_count {
             let t0 = env.workers[w].clock;
-            let (done, agg) = env.store.get(t0, &format!("{round_tag}/agg"), &mut env.ledger, &mut env.comm)?;
+            let (done, agg) =
+                env.store.get(t0, &format!("{round_tag}/agg"), &mut env.ledger, &mut env.comm)?;
             env.stages.add(Stage::Synchronize, done - t0);
             env.workers[w].clock = done;
             // Gradients were already averaged by the master: inv_k = 1.
@@ -100,7 +119,10 @@ impl Strategy for AllReduce {
                 env.workers[w].clock = inv.body_start;
                 invs.push(inv);
                 env.state_load(w);
-                let g = env.compute_grad(w, Device::LambdaCpu)?;
+                let mut g = env.compute_grad(w, Device::LambdaCpu)?;
+                if env.crash_in_compute(w) {
+                    g = env.recover_invocation(w, Device::LambdaCpu)?;
+                }
                 if let Some(l) = g.loss {
                     loss_sum += l;
                     loss_n += 1;
@@ -181,6 +203,58 @@ mod tests {
         // Master (w0) fetched W grads per round; its clock must lead or tie.
         let m = e.workers[0].clock;
         assert!(e.workers.iter().all(|w| w.clock <= m));
+    }
+
+    #[test]
+    fn mid_epoch_crash_stalls_the_whole_round() {
+        use crate::faults::FaultPlan;
+        let mut clean = env(4);
+        let c = AllReduce::new().run_epoch(&mut clean).unwrap();
+
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 4)
+            .unwrap()
+            .with_faults(FaultPlan::none().crash(2, 1, 12));
+        let mut faulty = ClusterEnv::new(cfg).unwrap();
+        let f = AllReduce::new().run_epoch(&mut faulty).unwrap();
+
+        // The master waits for every gradient, so the epoch degrades by at
+        // least the crashed worker's full restart (cold start + reload +
+        // recompute), not just its own delay.
+        let restart_stall = crate::cloud::calibration::LAMBDA_COLD_START;
+        assert!(
+            f.epoch_secs > c.epoch_secs + restart_stall,
+            "faulty {:.1}s vs clean {:.1}s",
+            f.epoch_secs,
+            c.epoch_secs
+        );
+        // The stall propagates: the *master* (worker 0, which did not
+        // crash) is also delayed by more than the restart, because its
+        // round fetch blocks on the crashed worker's late upload.
+        assert!(
+            faulty.workers[0].clock.secs() > clean.workers[0].clock.secs() + restart_stall,
+            "master must stall behind the restart: {:.1}s vs {:.1}s",
+            faulty.workers[0].clock.secs(),
+            clean.workers[0].clock.secs()
+        );
+        assert_eq!(faulty.recovery.invocation_retries, 1);
+        assert!(faulty.recovery.cost_usd > 0.0);
+        assert!(faulty.ledger.total_paper() > clean.ledger.total_paper());
+    }
+
+    #[test]
+    fn dropped_update_falls_out_of_the_aggregate() {
+        use crate::faults::FaultPlan;
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 4)
+            .unwrap()
+            .with_faults(FaultPlan::none().drop_updates(3, 1, 0, Some(24)));
+        let mut e = ClusterEnv::new(cfg).unwrap();
+        AllReduce::new().run_epoch(&mut e).unwrap();
+        assert_eq!(e.recovery.dropped_updates, 24);
+        // Fewer uploads crossed the wire than the clean 24 × 4 per epoch.
+        let mut clean = env(4);
+        AllReduce::new().run_epoch(&mut clean).unwrap();
+        use crate::metrics::CommKind;
+        assert!(e.comm.ops(CommKind::Put) < clean.comm.ops(CommKind::Put));
     }
 
     #[test]

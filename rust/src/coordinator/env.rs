@@ -11,12 +11,15 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use crate::cloud::calibration::{self, FrameworkKind, ModelProfile};
-use crate::cloud::{GpuFleet, LambdaRuntime, MessageQueue, ObjectStore, Redis, StepFunctions};
+use crate::cloud::{
+    GpuFleet, LambdaRuntime, MessageQueue, ObjectStore, recovery, Redis, StepFunctions,
+};
 use crate::data::{Dataset, SyntheticCifar, IMG_ELEMS};
-use crate::metrics::{CommStats, Ledger, Stage, StageTimer};
+use crate::faults::{FaultPlan, FaultSchedule};
+use crate::metrics::{CommStats, Ledger, RecoveryStats, Stage, StageTimer};
 use crate::runtime::{Engine, PjrtMath};
 use crate::sim::VTime;
-use crate::tensor::Slab;
+use crate::tensor::{AggregationRule, Slab};
 use crate::util::rng::Rng;
 
 /// Local (in-function) aggregation memory bandwidth, bytes/sec — the speed
@@ -62,11 +65,19 @@ pub struct EnvConfig {
     pub profile: ModelProfile,
     pub grad_mode: GradMode,
     pub seed: u64,
+    /// Planned fault injection (empty = fault-free run).
+    pub fault_plan: FaultPlan,
+    /// How worker updates are combined (robust rules defend poisoning).
+    pub agg: AggregationRule,
 }
 
 impl EnvConfig {
     /// Paper-scale, size-only config (cost/communication experiments).
-    pub fn virtual_paper(framework: FrameworkKind, arch: &str, workers: usize) -> Result<EnvConfig> {
+    pub fn virtual_paper(
+        framework: FrameworkKind,
+        arch: &str,
+        workers: usize,
+    ) -> Result<EnvConfig> {
         let profile = calibration::profile(arch)
             .ok_or_else(|| anyhow::anyhow!("unknown architecture {arch}"))?;
         Ok(EnvConfig {
@@ -78,7 +89,21 @@ impl EnvConfig {
             profile,
             grad_mode: GradMode::Virtual,
             seed: 0x5157,
+            fault_plan: FaultPlan::none(),
+            agg: AggregationRule::Mean,
         })
+    }
+
+    /// Install a fault plan (builder style).
+    pub fn with_faults(mut self, plan: FaultPlan) -> EnvConfig {
+        self.fault_plan = plan;
+        self
+    }
+
+    /// Select the update-aggregation rule (builder style).
+    pub fn with_aggregation(mut self, agg: AggregationRule) -> EnvConfig {
+        self.agg = agg;
+        self
     }
 
     /// End-to-end config over an executed model (real gradients). The
@@ -110,6 +135,8 @@ impl EnvConfig {
             profile,
             grad_mode: GradMode::Real { engine, model: model.to_string(), train, test },
             seed,
+            fault_plan: FaultPlan::none(),
+            agg: AggregationRule::Mean,
         })
     }
 }
@@ -160,6 +187,12 @@ pub struct ClusterEnv {
     pub ledger: Ledger,
     pub comm: CommStats,
     pub stages: StageTimer,
+    pub recovery: RecoveryStats,
+
+    // Fault engine + aggregation policy (consulted at the fetch/compute/
+    // sync/update boundaries; see the `faults` module).
+    pub faults: FaultSchedule,
+    pub agg: AggregationRule,
 
     grad_mode: GradMode,
     pub rng: Rng,
@@ -231,6 +264,9 @@ impl ClusterEnv {
             ledger: Ledger::new(),
             comm: CommStats::new(),
             stages: StageTimer::new(),
+            recovery: RecoveryStats::new(),
+            faults: FaultSchedule::new(cfg.fault_plan, cfg.workers)?,
+            agg: cfg.agg,
             grad_mode: cfg.grad_mode,
             rng: Rng::fork(&rng, 1),
         })
@@ -249,9 +285,11 @@ impl ClusterEnv {
         self.n_params as u64 * 4
     }
 
-    /// Begin a new epoch: reshuffle shards, bump counter.
+    /// Begin a new epoch: reshuffle shards, bump counter, re-arm the fault
+    /// engine's round counters.
     pub fn begin_epoch(&mut self) {
         self.epoch += 1;
+        self.faults.begin_epoch(self.epoch);
         let mut rng = self.rng.fork(0xE70C ^ self.epoch as u64);
         for w in &mut self.workers {
             rng.shuffle(&mut w.shard);
@@ -273,15 +311,21 @@ impl ClusterEnv {
 
     /// Compute one gradient batch for worker `w` on `device`. Advances the
     /// worker clock by the modeled duration; returns the (real or virtual)
-    /// gradient.
+    /// gradient. Fault hooks: an active straggler event inflates the
+    /// duration; an active poison event corrupts the returned gradient.
     pub fn compute_grad(&mut self, w: usize, device: Device) -> Result<GradResult> {
         let per_sample = match device {
             Device::LambdaCpu => self.profile.lambda_secs_per_sample,
             Device::GpuT4 => self.profile.gpu_secs_per_sample,
         };
-        let secs = per_sample * self.batch_size as f64;
+        let round = self.faults.note_compute(w);
+        let factor = self.faults.compute_factor(w, round, self.workers[w].clock);
+        let secs = per_sample * self.batch_size as f64 * factor;
+        if factor > 1.0 {
+            self.recovery.straggler_secs += secs * (1.0 - 1.0 / factor);
+        }
 
-        let out = match &self.grad_mode {
+        let mut out = match &self.grad_mode {
             GradMode::Virtual => GradResult {
                 grad: Slab::virtual_of(self.n_params),
                 loss: None,
@@ -311,9 +355,159 @@ impl ClusterEnv {
                 }
             }
         };
+        if let Some(mode) = self.faults.poison(w, round, self.workers[w].clock) {
+            mode.apply(&mut out.grad);
+            self.recovery.poisoned_grads += 1;
+        }
         self.workers[w].clock += secs;
         self.stages.add(Stage::ComputeGradients, secs);
         Ok(out)
+    }
+
+    /// Did the fault plan crash `w`'s in-flight invocation (the one whose
+    /// gradient was just computed)? Consumes the event when it fires.
+    pub fn crash_in_compute(&mut self, w: usize) -> bool {
+        let round = self.faults.current_round(w);
+        let now = self.workers[w].clock;
+        self.faults.crash_compute(w, round, now)
+    }
+
+    /// Platform retry after a compute-phase crash: the worker pays a cold
+    /// start (Lambda) or instance reboot (GPU), re-loads state and
+    /// recomputes the same round's gradient. The retry is billed as a fresh
+    /// invocation; the wasted first attempt stays on the clock (it was
+    /// in-flight when it died).
+    pub fn recover_invocation(&mut self, w: usize, device: Device) -> Result<GradResult> {
+        let t0 = self.workers[w].clock;
+        let down = match device {
+            Device::LambdaCpu => calibration::LAMBDA_COLD_START,
+            Device::GpuT4 => self.fleet.provision_secs,
+        };
+        self.workers[w].clock += down;
+        self.recovery.cold_restarts += 1;
+        self.recovery.downtime_secs += down;
+        // The wasted attempt's gradient is discarded; if a poison window is
+        // active on this round, the recompute will count it again — undo the
+        // discarded attempt's tally so stats reflect delivered gradients.
+        let wasted_round = self.faults.current_round(w);
+        if self.faults.poison(w, wasted_round, self.workers[w].clock).is_some() {
+            self.recovery.poisoned_grads = self.recovery.poisoned_grads.saturating_sub(1);
+        }
+        // The retry re-runs the same protocol round (and, in real mode, the
+        // same batch slice).
+        self.faults.redo_round(w);
+        if self.is_real() {
+            let b = self.batch_size;
+            let cursor = &mut self.workers[w].cursor;
+            *cursor = cursor.saturating_sub(b);
+        }
+        if device == Device::LambdaCpu {
+            // Stateless function: the retry re-loads model + batch. The GPU
+            // baseline's data is already resident on instance disk — its
+            // reboot cost is the provisioning time alone.
+            self.state_load(w);
+        }
+        let g = self.compute_grad(w, device)?;
+        let retry_secs = self.workers[w].clock - t0;
+        self.recovery.invocation_retries += 1;
+        if device == Device::LambdaCpu {
+            let mb = self.allocated_mb();
+            recovery::lambda_retry(retry_secs, mb, &mut self.ledger, &mut self.recovery);
+        }
+        // GPU: instance time is already billed by epoch wall time; the
+        // reboot shows up as a longer (and costlier) epoch.
+        Ok(g)
+    }
+
+    /// Sync-phase crash hook: if planned for `w` this epoch, the worker
+    /// goes down entering synchronization and restarts after a cold start
+    /// plus a model snapshot restore (GPU: an instance reboot). In the
+    /// barriered storage topologies (AllReduce, ScatterReduce, GPU) the
+    /// peers re-poll shared storage while it is away and those requests are
+    /// billed; SPIRT peers reroute and MLLess workers wait only on the
+    /// supervisor, so neither pays repolls. Returns the downtime added to
+    /// `w`'s clock.
+    pub fn sync_crash(&mut self, w: usize) -> Option<f64> {
+        let now = self.workers[w].clock;
+        if !self.faults.crash_sync(w, now) {
+            return None;
+        }
+        let waiters = self.num_workers().saturating_sub(1);
+        let down = if self.framework == FrameworkKind::GpuBaseline {
+            let down = self.fleet.provision_secs;
+            recovery::storage_repolls(down, waiters, &mut self.ledger, &mut self.recovery);
+            down
+        } else {
+            let restore = recovery::redis_snapshot_restore(
+                self.grad_bytes(),
+                &mut self.ledger,
+                &mut self.recovery,
+            );
+            let down = calibration::LAMBDA_COLD_START + restore;
+            // The restarted worker function is a fresh billed invocation.
+            let mb = self.allocated_mb();
+            if self.framework == FrameworkKind::Spirt {
+                // SPIRT's sync stage runs after its minibatch invocations
+                // were finished/billed: no open span carries the restart,
+                // so its duration is billed here in full.
+                recovery::lambda_restart_billed(down, mb, &mut self.ledger, &mut self.recovery);
+            } else {
+                recovery::lambda_retry(down, mb, &mut self.ledger, &mut self.recovery);
+            }
+            match self.framework {
+                // SPIRT reroutes around the dead peer; MLLess peers wait on
+                // the supervisor, not on each other: no one polls for `w`.
+                FrameworkKind::Spirt | FrameworkKind::MlLess => {}
+                _ => recovery::storage_repolls(down, waiters, &mut self.ledger, &mut self.recovery),
+            }
+            down
+        };
+        self.workers[w].clock += down;
+        self.recovery.cold_restarts += 1;
+        self.recovery.downtime_secs += down;
+        self.stages.add(Stage::Synchronize, down);
+        Some(down)
+    }
+
+    /// MLLess supervisor crash hook at (current epoch, `round`): returns
+    /// the supervisor restart delay (cold start + re-poll of the round's
+    /// worker reports), billed as a fresh supervisor invocation.
+    pub fn supervisor_crash(&mut self, round: usize, now: VTime) -> Option<f64> {
+        if !self.faults.crash_supervisor(round, now) {
+            return None;
+        }
+        let down = calibration::LAMBDA_COLD_START;
+        let mb = self.allocated_mb();
+        recovery::lambda_retry(down, mb, &mut self.ledger, &mut self.recovery);
+        recovery::queue_repolls(down, self.num_workers(), &mut self.ledger, &mut self.recovery);
+        self.recovery.supervisor_restarts += 1;
+        self.recovery.downtime_secs += down;
+        Some(down)
+    }
+
+    /// Is `w`'s most recently computed update dropped by the fault plan?
+    pub fn update_dropped(&mut self, w: usize) -> bool {
+        let round = self.faults.current_round(w);
+        let now = self.workers[w].clock;
+        if self.faults.drop_update(w, round, now) {
+            self.recovery.dropped_updates += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Combine worker updates under the configured aggregation rule. The
+    /// strategies already charge the plain-mean aggregation time; robust
+    /// rules charge their extra slab passes here on `w`'s clock, sized by
+    /// the actual payloads (ScatterReduce aggregates chunk-sized slabs).
+    pub fn aggregate(&mut self, w: usize, slabs: &[Slab]) -> Result<Slab> {
+        let bytes: u64 = slabs.iter().map(|s| s.nbytes()).sum();
+        let extra = (self.agg.cost_multiplier() - 1.0) * bytes as f64 / LOCAL_AGG_BW;
+        if extra > 0.0 {
+            self.charge_sync(w, extra);
+        }
+        self.agg.apply(slabs)
     }
 
     /// Apply `theta -= lr * inv_k * gsum` on worker `w`'s replica. In real
@@ -456,6 +650,80 @@ mod tests {
         b.begin_epoch();
         assert_eq!(a.epoch, 1);
         assert_eq!(a.workers[0].shard, b.workers[0].shard);
+    }
+
+    #[test]
+    fn straggler_inflates_compute_time() {
+        let mut plain = virt_env(2);
+        let base = plain.compute_grad(0, Device::LambdaCpu).unwrap().secs;
+
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2)
+            .unwrap()
+            .with_faults(crate::faults::FaultPlan::none().straggler(0, 1, 0, 4.0, Some(1)));
+        let mut env = ClusterEnv::new(cfg).unwrap();
+        env.begin_epoch();
+        let slow = env.compute_grad(0, Device::LambdaCpu).unwrap().secs;
+        assert!((slow - 4.0 * base).abs() < 1e-9, "{slow} vs 4x{base}");
+        assert!(env.recovery.straggler_secs > 0.0);
+        // Window over: next round is back to normal.
+        let next = env.compute_grad(0, Device::LambdaCpu).unwrap().secs;
+        assert!((next - base).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_crash_fires_and_recovery_bills_retry() {
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2)
+            .unwrap()
+            .with_faults(crate::faults::FaultPlan::none().crash(1, 1, 0));
+        let mut env = ClusterEnv::new(cfg).unwrap();
+        env.begin_epoch();
+        env.compute_grad(1, Device::LambdaCpu).unwrap();
+        assert!(env.crash_in_compute(1));
+        assert!(!env.crash_in_compute(1), "one-shot");
+        let before = env.workers[1].clock;
+        env.recover_invocation(1, Device::LambdaCpu).unwrap();
+        let stall = env.workers[1].clock - before;
+        assert!(
+            stall > crate::cloud::calibration::LAMBDA_COLD_START,
+            "retry pays cold start + reload + recompute, got {stall}"
+        );
+        assert_eq!(env.recovery.invocation_retries, 1);
+        assert!(env.recovery.cost_usd > 0.0);
+        // Worker 0 is untouched.
+        assert_eq!(env.workers[0].clock.secs(), 0.0);
+    }
+
+    #[test]
+    fn drop_and_poison_hooks_count() {
+        use crate::faults::{FaultPlan, PoisonMode};
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2)
+            .unwrap()
+            .with_faults(
+                FaultPlan::none()
+                    .drop_updates(0, 1, 0, Some(1))
+                    .poison(1, 1, PoisonMode::SignFlip),
+            );
+        let mut env = ClusterEnv::new(cfg).unwrap();
+        env.begin_epoch();
+        env.compute_grad(0, Device::LambdaCpu).unwrap();
+        env.compute_grad(1, Device::LambdaCpu).unwrap();
+        assert!(env.update_dropped(0));
+        assert!(!env.update_dropped(1));
+        assert_eq!(env.recovery.dropped_updates, 1);
+        assert_eq!(env.recovery.poisoned_grads, 1);
+    }
+
+    #[test]
+    fn robust_aggregation_charges_extra_time() {
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2)
+            .unwrap()
+            .with_aggregation(crate::tensor::AggregationRule::CoordMedian);
+        let mut env = ClusterEnv::new(cfg).unwrap();
+        let slabs = vec![Slab::virtual_of(env.n_params), Slab::virtual_of(env.n_params)];
+        let before = env.workers[0].clock;
+        let out = env.aggregate(0, &slabs).unwrap();
+        assert_eq!(out.len(), env.n_params);
+        assert!(env.workers[0].clock > before, "median pays extra slab passes");
     }
 
     #[test]

@@ -8,7 +8,6 @@
 
 use crate::cloud::FrameworkKind;
 use crate::metrics::Stage;
-use crate::tensor::Slab;
 use crate::Result;
 
 use super::env::{ClusterEnv, Device};
@@ -39,9 +38,15 @@ impl Strategy for GpuBaseline {
             let tag = format!("gpu/e{}/r{}", env.epoch, round);
 
             // Compute on the T4s (data already resident on instance disk).
+            // A crashed step costs an instance *reboot* — and the instance
+            // keeps billing by the hour while it boots, which is the
+            // always-on half of the paper's cost argument.
             let mut grads = Vec::with_capacity(w_count);
             for w in 0..w_count {
-                let g = env.compute_grad(w, Device::GpuT4)?;
+                let mut g = env.compute_grad(w, Device::GpuT4)?;
+                if env.crash_in_compute(w) {
+                    g = env.recover_invocation(w, Device::GpuT4)?;
+                }
                 if let Some(l) = g.loss {
                     loss_sum += l;
                     loss_n += 1;
@@ -50,7 +55,15 @@ impl Strategy for GpuBaseline {
             }
 
             // All-gather through the shared bucket (EC2-side bandwidth).
+            // Every peer needs every gradient, so a rebooting instance
+            // stalls the whole fleet; dropped uploads fall out of the mean.
+            let mut dropped = vec![false; w_count];
             for w in 0..w_count {
+                env.sync_crash(w);
+                if env.update_dropped(w) {
+                    dropped[w] = true;
+                    continue;
+                }
                 let key = format!("{tag}/g{w}");
                 let t0 = env.workers[w].clock;
                 let done = env
@@ -63,7 +76,11 @@ impl Strategy for GpuBaseline {
                 let mut fetched = Vec::with_capacity(w_count);
                 for j in 0..w_count {
                     if j == w {
+                        // The local copy survives even if the upload dropped.
                         fetched.push(grads[w].clone());
+                        continue;
+                    }
+                    if dropped[j] {
                         continue;
                     }
                     let key = format!("{tag}/g{j}");
@@ -74,7 +91,7 @@ impl Strategy for GpuBaseline {
                     env.workers[w].clock = done;
                     fetched.push(g);
                 }
-                let mean = Slab::mean(&fetched)?;
+                let mean = env.aggregate(w, &fetched)?;
                 env.apply_update(w, &mean, 1.0)?;
                 env.charge_sync(w, self.kind().batch_overhead());
             }

@@ -101,7 +101,10 @@ impl Strategy for MlLess {
                 env.workers[w].clock = inv.body_start;
                 invs.push(inv);
                 env.state_load(w);
-                let g = env.compute_grad(w, Device::LambdaCpu)?;
+                let mut g = env.compute_grad(w, Device::LambdaCpu)?;
+                if env.crash_in_compute(w) {
+                    g = env.recover_invocation(w, Device::LambdaCpu)?;
+                }
                 if let Some(l) = g.loss {
                     loss_sum += l;
                     loss_n += 1;
@@ -115,6 +118,10 @@ impl Strategy for MlLess {
                     // Size-only gradients: model the filter's pass rate.
                     env.rng.bernoulli(self.virtual_publish_rate).then_some(g.grad)
                 };
+                // An injected message drop loses the update *after* the
+                // filter drained it — the signal is gone, not delayed.
+                let dropped = offer.is_some() && env.update_dropped(w);
+                let offer = if dropped { None } else { offer };
                 let report = if let Some(update) = offer {
                     self.updates_published += 1;
                     let key = format!("u/e{epoch}/r{round}/w{w}");
@@ -139,10 +146,17 @@ impl Strategy for MlLess {
             }
 
             // -- supervisor: wait for all reports, authorize fetch ---------
+            // The supervisor is MLLess's single point of coordination: when
+            // it crashes, *every* worker idles until it restarts and
+            // re-polls the round's reports — there is no peer to reroute
+            // through (contrast with SPIRT's P2P sync above).
             let t0 = self.supervisor_clock;
-            let t = env
+            let mut t = env
                 .queues
                 .wait_for(t0, &sup_topic, w_count, &mut env.ledger, &mut env.comm)?;
+            if let Some(restart) = env.supervisor_crash(round, t) {
+                t = t + restart;
+            }
             self.supervisor_clock = t + 0.010; // decision processing
             let _ = env.queues.publish(
                 self.supervisor_clock,
@@ -158,6 +172,10 @@ impl Strategy for MlLess {
 
             // -- workers: wait for authorization, fetch + aggregate --------
             for w in 0..w_count {
+                // A sync-phase crash restarts this worker before it polls;
+                // the others proceed without waiting for it (they only wait
+                // on the supervisor's proceed message).
+                env.sync_crash(w);
                 let t0 = env.workers[w].clock;
                 let t = env
                     .queues
@@ -184,7 +202,7 @@ impl Strategy for MlLess {
                 if !updates.is_empty() {
                     let agg_secs = env.local_agg_secs(updates.len());
                     env.charge_sync(w, agg_secs);
-                    let mean = Slab::mean(&updates)?;
+                    let mean = env.aggregate(w, &updates)?;
                     env.apply_update(w, &mean, 1.0)?;
                 }
 

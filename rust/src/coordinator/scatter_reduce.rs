@@ -25,6 +25,12 @@ impl ScatterReduce {
     }
 
     /// One chunked synchronization round (factored out for Fig. 2).
+    ///
+    /// Fault semantics: a sync-phase crash makes the crashed worker a late
+    /// *chunk owner* — every peer needs its partial aggregate, so all of
+    /// them stall behind its restart. A dropped update removes that
+    /// worker's gradient (its outgoing chunks and its own kept chunk) from
+    /// the round's aggregate.
     pub fn sync_round(
         &self,
         env: &mut ClusterEnv,
@@ -36,7 +42,13 @@ impl ScatterReduce {
 
         // Scatter: worker w uploads chunk j (j != w) for peer j; keeps own.
         let mut own_chunks: Vec<Option<Slab>> = vec![None; w_count];
+        let mut dropped = vec![false; w_count];
         for w in 0..w_count {
+            env.sync_crash(w);
+            if env.update_dropped(w) {
+                dropped[w] = true;
+                continue;
+            }
             let chunks = plan.split(&grads[w])?;
             for (j, chunk) in chunks.into_iter().enumerate() {
                 if j == w {
@@ -53,9 +65,9 @@ impl ScatterReduce {
 
         // Reduce: worker w aggregates everyone's chunk w, uploads partial.
         for w in 0..w_count {
-            let mut parts = vec![own_chunks[w].take().expect("own chunk kept")];
+            let mut parts: Vec<Slab> = own_chunks[w].take().into_iter().collect();
             for j in 0..w_count {
-                if j == w {
+                if j == w || dropped[j] {
                     continue;
                 }
                 let key = format!("{round_tag}/c{j}to{w}");
@@ -69,7 +81,16 @@ impl ScatterReduce {
                 w_count as f64 * (plan.chunk_len(w) as f64 * 4.0) / super::env::LOCAL_AGG_BW;
             env.workers[w].clock += agg_secs;
             env.stages.add(Stage::Synchronize, agg_secs);
-            let partial = Slab::mean(&parts)?;
+            let partial = if parts.is_empty() {
+                // Every contribution to this chunk was dropped: zero update.
+                if env.is_real() {
+                    Slab::zeros(plan.chunk_len(w))
+                } else {
+                    Slab::virtual_of(plan.chunk_len(w))
+                }
+            } else {
+                env.aggregate(w, &parts)?
+            };
             let t0 = env.workers[w].clock;
             let done = env.store.put(
                 t0,
@@ -123,7 +144,10 @@ impl Strategy for ScatterReduce {
                 env.workers[w].clock = inv.body_start;
                 invs.push(inv);
                 env.state_load(w);
-                let g = env.compute_grad(w, Device::LambdaCpu)?;
+                let mut g = env.compute_grad(w, Device::LambdaCpu)?;
+                if env.crash_in_compute(w) {
+                    g = env.recover_invocation(w, Device::LambdaCpu)?;
+                }
                 if let Some(l) = g.loss {
                     loss_sum += l;
                     loss_n += 1;

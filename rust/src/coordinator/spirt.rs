@@ -75,17 +75,34 @@ impl Strategy for Spirt {
             let mut gsum_ready = VTime::ZERO;
 
             // Phase A — fan out: every minibatch invocation starts at `base`
-            // and computes independently (Lambda scales horizontally).
+            // and computes independently (Lambda scales horizontally). A
+            // crashed minibatch function is retried by the platform — the
+            // retry lands late but the *other* minibatches keep going, so
+            // the epoch absorbs the restart instead of stalling on it (the
+            // fault-tolerance property the SPIRT paper claims). A dropped
+            // minibatch gradient never reaches the database: its signal is
+            // lost but the function still ran and bills.
             let mut arrivals = Vec::with_capacity(env.batches_per_epoch);
+            let mut dropped_done = VTime::ZERO;
             for m in 0..env.batches_per_epoch {
                 env.workers[w].clock = base;
                 let inv = env.lambda.begin_invocation(base, w);
                 env.workers[w].clock = inv.body_start;
                 env.state_load(w);
-                let g = env.compute_grad(w, Device::LambdaCpu)?;
+                let mut g = env.compute_grad(w, Device::LambdaCpu)?;
+                if env.crash_in_compute(w) {
+                    g = env.recover_invocation(w, Device::LambdaCpu)?;
+                }
                 if let Some(l) = g.loss {
                     loss_sum += l;
                     loss_n += 1;
+                }
+                if env.update_dropped(w) {
+                    let end = env.workers[w].clock + self.kind().batch_overhead();
+                    env.stages.add(Stage::Synchronize, self.kind().batch_overhead());
+                    env.lambda.finish_invocation(inv, end, alloc_mb, &mut env.ledger);
+                    dropped_done = dropped_done.max(end);
+                    continue;
                 }
                 arrivals.push((env.workers[w].clock, m, inv, g.grad));
             }
@@ -98,7 +115,18 @@ impl Strategy for Spirt {
             // acks; the database chews through the accumulation chain in the
             // background and the *epoch* waits for it, not the functions.
             arrivals.sort_by(|a, b| a.0.cmp(&b.0));
-            let mut fn_done = VTime::ZERO;
+            if arrivals.is_empty() {
+                // Every minibatch gradient was dropped: seed an empty sum so
+                // the averaging/update stages still run (a zero update).
+                let zero = if env.is_real() {
+                    Slab::zeros(env.n_params)
+                } else {
+                    Slab::virtual_of(env.n_params)
+                };
+                let t0 = base.max(dropped_done);
+                gsum_ready = env.worker_redis[w].set(t0, "gsum", zero, &mut env.comm);
+            }
+            let mut fn_done = dropped_done;
             for (i, (arrive, m, inv, grad)) in arrivals.into_iter().enumerate() {
                 let gkey = format!("g/e{epoch}/m{m}");
                 let t = env.worker_redis[w].set(arrive, &gkey, grad, &mut env.comm);
@@ -138,6 +166,18 @@ impl Strategy for Spirt {
         }
 
         // ---- Stage 3: sync queue + P2P fetch of averaged gradients -------
+        // Fault semantics: a worker that crashes entering sync restarts
+        // (its clock absorbs the downtime and its model is restored from
+        // its own Redis snapshot), but its *peers do not wait* — they count
+        // only live workers on the sync queue and reroute the P2P exchange
+        // around the dead peer's average. That is SPIRT's P2P advantage
+        // over the master/supervisor topologies, made measurable.
+        let mut down = vec![false; w_count];
+        for (w, d) in down.iter_mut().enumerate() {
+            *d = env.sync_crash(w).is_some();
+        }
+        let live = down.iter().filter(|d| !**d).count().max(1);
+
         let topic = format!("spirt/sync/e{epoch}");
         for w in 0..w_count {
             let t0 = env.stepfn.enter_stage(env.workers[w].clock, "sync", &mut env.ledger);
@@ -150,7 +190,7 @@ impl Strategy for Spirt {
             let t0 = env.workers[w].clock;
             let t = env
                 .queues
-                .wait_for(t0, &topic, w_count, &mut env.ledger, &mut env.comm)?;
+                .wait_for(t0, &topic, live, &mut env.ledger, &mut env.comm)?;
             env.stages.add(Stage::Synchronize, t - t0);
             env.workers[w].clock = t;
         }
@@ -164,6 +204,11 @@ impl Strategy for Spirt {
                 if j == w {
                     continue;
                 }
+                if down[j] {
+                    // Reroute: skip the dead peer's average this epoch.
+                    env.recovery.rerouted_fetches += 1;
+                    continue;
+                }
                 let t0 = env.workers[w].clock;
                 let (t, g) = env.worker_redis[j].get(t0, &avg_key, &mut env.comm)?;
                 env.stages.add(Stage::Synchronize, t - t0);
@@ -172,11 +217,12 @@ impl Strategy for Spirt {
             }
 
             // Second-level aggregation, stored locally.
-            let agg_secs = env.local_agg_secs(w_count);
+            let agg_secs = env.local_agg_secs(avgs.len());
             env.charge_sync(w, agg_secs);
-            let final_grad = Slab::mean(&avgs)?;
+            let final_grad = env.aggregate(w, &avgs)?;
             let t0 = env.workers[w].clock;
-            let t = env.worker_redis[w].set(t0, &format!("final/e{epoch}"), final_grad, &mut env.comm);
+            let t =
+                env.worker_redis[w].set(t0, &format!("final/e{epoch}"), final_grad, &mut env.comm);
             env.stages.add(Stage::Synchronize, t - t0);
             env.workers[w].clock = t;
 
@@ -280,6 +326,53 @@ mod tests {
         // Aggregation happened in the database, not over the wire: in-DB
         // bytes exceed Get bytes (P2P avg fetches).
         assert!(e.comm.bytes(CommKind::InDb) > e.comm.bytes(CommKind::Get));
+    }
+
+    #[test]
+    fn minibatch_crash_is_absorbed_by_the_fanout() {
+        use crate::faults::FaultPlan;
+        let mut clean = env("mobilenet");
+        let c = Spirt::new().run_epoch(&mut clean).unwrap();
+
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::Spirt, "mobilenet", 4)
+            .unwrap()
+            .with_faults(FaultPlan::none().crash(1, 1, 12));
+        let mut faulty = ClusterEnv::new(cfg).unwrap();
+        let f = Spirt::new().run_epoch(&mut faulty).unwrap();
+
+        assert_eq!(faulty.recovery.invocation_retries, 1);
+        // The other 23 minibatch functions ran in parallel: the epoch
+        // stays within 20% of fault-free (the resilience headline).
+        assert!(
+            f.epoch_secs < c.epoch_secs * 1.20,
+            "faulty {:.1}s vs clean {:.1}s",
+            f.epoch_secs,
+            c.epoch_secs
+        );
+    }
+
+    #[test]
+    fn sync_crash_reroutes_around_the_dead_peer() {
+        use crate::faults::FaultPlan;
+        let mut clean = env("mobilenet");
+        let c = Spirt::new().run_epoch(&mut clean).unwrap();
+
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::Spirt, "mobilenet", 4)
+            .unwrap()
+            .with_faults(FaultPlan::none().sync_crash(2, 1));
+        let mut faulty = ClusterEnv::new(cfg).unwrap();
+        let f = Spirt::new().run_epoch(&mut faulty).unwrap();
+
+        // Three live peers each skipped the dead peer's average.
+        assert_eq!(faulty.recovery.rerouted_fetches, 3);
+        assert_eq!(faulty.recovery.snapshot_restores, 1);
+        // Live peers did not stall on the restart: epoch within 20%.
+        assert!(
+            f.epoch_secs < c.epoch_secs * 1.20,
+            "faulty {:.1}s vs clean {:.1}s",
+            f.epoch_secs,
+            c.epoch_secs
+        );
     }
 
     #[test]

@@ -66,9 +66,16 @@ pub fn run(worker_counts: &[usize]) -> Result<Vec<Point>> {
 }
 
 pub fn render(points: &[Point]) -> String {
-    let mut t = Table::new(&["Model", "Workers", "AllReduce (s)", "ScatterReduce (s)", "Winner", "Paper (AR/SR)"])
-        .title("Fig. 2 — Communication time per synchronization round")
-        .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Left, Align::Right]);
+    let mut t = Table::new(&[
+        "Model",
+        "Workers",
+        "AllReduce (s)",
+        "ScatterReduce (s)",
+        "Winner",
+        "Paper (AR/SR)",
+    ])
+    .title("Fig. 2 — Communication time per synchronization round")
+    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Left, Align::Right]);
     let mut last_arch = String::new();
     for p in points {
         if p.arch != last_arch {

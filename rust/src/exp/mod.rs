@@ -11,6 +11,7 @@ pub mod spirt_indb;
 pub mod table1;
 pub mod table2;
 pub mod table3;
+pub mod table4_faults;
 
 /// Relative error helper for paper-vs-measured columns.
 pub fn rel_err(measured: f64, paper: f64) -> f64 {
@@ -20,8 +21,13 @@ pub fn rel_err(measured: f64, paper: f64) -> f64 {
     (measured - paper).abs() / paper.abs()
 }
 
-/// Format a measured-vs-paper cell: `measured (paper, ±err%)`.
+/// Format a measured-vs-paper cell: `measured (paper, ±err%)`. A zero paper
+/// value has no meaningful relative error (and dividing by it would render
+/// `inf`/`NaN`), so the percentage is omitted for that cell.
 pub fn vs_paper(measured: f64, paper: f64, digits: usize) -> String {
+    if paper == 0.0 {
+        return format!("{measured:.prec$} (paper {paper:.prec$})", prec = digits);
+    }
     format!(
         "{measured:.prec$} (paper {paper:.prec$}, {:+.1}%)",
         (measured - paper) / paper * 100.0,
@@ -43,5 +49,12 @@ mod tests {
     fn vs_paper_formats() {
         let s = vs_paper(14.0, 14.343, 2);
         assert!(s.starts_with("14.00 (paper 14.34"), "{s}");
+    }
+
+    #[test]
+    fn vs_paper_zero_paper_value_has_no_inf_or_nan() {
+        let s = vs_paper(5.0, 0.0, 1);
+        assert_eq!(s, "5.0 (paper 0.0)");
+        assert!(!s.contains("inf") && !s.contains("NaN"), "{s}");
     }
 }

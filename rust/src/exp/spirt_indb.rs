@@ -124,12 +124,18 @@ pub fn run(engine: Option<(Rc<Engine>, &str)>, minibatches: usize) -> Result<Out
 }
 
 pub fn render(o: &Outcome) -> String {
-    let mut t = Table::new(&["Operation", "Naive (s)", "In-DB (s)", "Speedup", "Paper (naive->in-DB)"])
-        .title(format!(
-            "SPIRT in-database ops vs naive fetch-update-store ({} params, {} minibatches)",
-            o.n_params, o.minibatches
-        ))
-        .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    let mut t = Table::new(&[
+        "Operation",
+        "Naive (s)",
+        "In-DB (s)",
+        "Speedup",
+        "Paper (naive->in-DB)",
+    ])
+    .title(format!(
+        "SPIRT in-database ops vs naive fetch-update-store ({} params, {} minibatches)",
+        o.n_params, o.minibatches
+    ))
+    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
     t.row(vec![
         "Gradient averaging".into(),
         format!("{:.2}", o.naive_avg_secs),
@@ -167,7 +173,11 @@ mod tests {
         let o = run(None, 24).unwrap();
         assert!(rel_err(o.naive_avg_secs, PAPER.naive_avg) < 0.10, "{:.1}", o.naive_avg_secs);
         assert!(rel_err(o.indb_avg_secs, PAPER.indb_avg) < 0.10, "{:.1}", o.indb_avg_secs);
-        assert!(rel_err(o.naive_update_secs, PAPER.naive_update) < 0.15, "{:.1}", o.naive_update_secs);
+        assert!(
+            rel_err(o.naive_update_secs, PAPER.naive_update) < 0.15,
+            "{:.1}",
+            o.naive_update_secs
+        );
         assert!(rel_err(o.indb_update_secs, PAPER.indb_update) < 0.15, "{:.2}", o.indb_update_secs);
     }
 

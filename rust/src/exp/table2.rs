@@ -138,8 +138,9 @@ mod tests {
                 .total_cost_usd
         };
         // Finding 1: serverless (LambdaML) beats GPU on cost for MobileNet…
-        assert!(cost(FrameworkKind::ScatterReduce, "mobilenet") < cost(FrameworkKind::GpuBaseline, "mobilenet"));
-        assert!(cost(FrameworkKind::AllReduce, "mobilenet") < cost(FrameworkKind::GpuBaseline, "mobilenet"));
+        let gpu_mobilenet = cost(FrameworkKind::GpuBaseline, "mobilenet");
+        assert!(cost(FrameworkKind::ScatterReduce, "mobilenet") < gpu_mobilenet);
+        assert!(cost(FrameworkKind::AllReduce, "mobilenet") < gpu_mobilenet);
         // …but GPU wins for ResNet-18 (crossover).
         for fw in [
             FrameworkKind::Spirt,
@@ -154,7 +155,9 @@ mod tests {
         }
         // Finding 2: MLLess is the most expensive serverless variant.
         for arch in ["mobilenet", "resnet18"] {
-            for fw in [FrameworkKind::Spirt, FrameworkKind::AllReduce, FrameworkKind::ScatterReduce] {
+            for fw in
+                [FrameworkKind::Spirt, FrameworkKind::AllReduce, FrameworkKind::ScatterReduce]
+            {
                 assert!(cost(FrameworkKind::MlLess, arch) > cost(fw, arch));
             }
         }

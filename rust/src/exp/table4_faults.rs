@@ -1,0 +1,381 @@
+//! Table 4 (extension): per-architecture resilience under injected faults.
+//!
+//! The paper compares the five architectures on time/cost/accuracy; SPIRT's
+//! companion papers (arXiv:2309.14148, arXiv:2302.13995) argue the real
+//! differentiator is what happens when things break. This driver makes that
+//! a table: every architecture runs the same paper-scale workload under the
+//! same deterministic fault scenarios, and the per-scenario deltas against
+//! the fault-free run expose the topology differences —
+//!
+//! * SPIRT's parallel minibatch fan-out absorbs a worker crash and its P2P
+//!   sync reroutes around a dead peer (time-to-target within ~20% of
+//!   fault-free);
+//! * AllReduce's master waits on every gradient, so one crash stalls the
+//!   whole round by more than the restart itself;
+//! * ScatterReduce stalls on a late chunk owner;
+//! * MLLess stalls on its supervisor (single point of coordination);
+//! * the GPU fleet pays instance reboot time at always-on rates.
+//!
+//! The poisoning half of the table runs on real gradients via
+//! [`crate::faults::poison_demo`] (accuracy is meaningless on size-only
+//! slabs): naive mean vs the robust rules in [`crate::tensor::robust`].
+
+use crate::cloud::FrameworkKind;
+use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use crate::faults::{FaultPlan, poison_demo, PoisonMode};
+use crate::metrics::RecoveryStats;
+use crate::train::{run_session, SessionConfig};
+use crate::util::table::{Align, Table};
+use crate::Result;
+
+/// The injected fault scenarios (one column family of the table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// No faults — the baseline every delta is computed against.
+    FaultFree,
+    /// Worker 1's invocation crashes mid-training (epoch 2, round 12) and
+    /// is retried after a cold start.
+    WorkerCrash,
+    /// Worker 1 dies entering epoch 2's synchronization and restarts from
+    /// a snapshot.
+    SyncCrash,
+    /// Worker 1 computes 4× slower for all of epoch 2.
+    Straggler,
+    /// Worker 1's updates are dropped for the first 6 rounds of epoch 2.
+    UpdateDrop,
+    /// The MLLess supervisor crashes at epoch 2, round 12 (no-op for the
+    /// other architectures — they have no supervisor to lose).
+    SupervisorCrash,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 6] = [
+        Scenario::FaultFree,
+        Scenario::WorkerCrash,
+        Scenario::SyncCrash,
+        Scenario::Straggler,
+        Scenario::UpdateDrop,
+        Scenario::SupervisorCrash,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::FaultFree => "fault-free",
+            Scenario::WorkerCrash => "worker crash",
+            Scenario::SyncCrash => "sync crash",
+            Scenario::Straggler => "straggler 4x",
+            Scenario::UpdateDrop => "update drop",
+            Scenario::SupervisorCrash => "supervisor crash",
+        }
+    }
+}
+
+/// Experiment knobs.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    pub arch: String,
+    pub workers: usize,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { arch: "mobilenet".into(), workers: 4, epochs: 3, seed: 42 }
+    }
+}
+
+/// Build the deterministic fault plan for a scenario. The faulty epoch is
+/// the middle of the run ("mid-training"); the faulty worker is 1 (never
+/// the AllReduce master, so the master-stall effect is the topology's, not
+/// the trivial "the master itself died" case).
+pub fn plan_for(scenario: Scenario, cfg: &FaultConfig) -> FaultPlan {
+    let epoch = (cfg.epochs / 2 + 1).min(cfg.epochs);
+    let worker = 1usize.min(cfg.workers - 1);
+    match scenario {
+        Scenario::FaultFree => FaultPlan::none(),
+        Scenario::WorkerCrash => FaultPlan::none().crash(worker, epoch, 12),
+        Scenario::SyncCrash => FaultPlan::none().sync_crash(worker, epoch),
+        Scenario::Straggler => FaultPlan::none().straggler(worker, epoch, 0, 4.0, Some(24)),
+        Scenario::UpdateDrop => FaultPlan::none().drop_updates(worker, epoch, 0, Some(6)),
+        Scenario::SupervisorCrash => FaultPlan::none().supervisor_crash(epoch, 12),
+    }
+}
+
+/// One (framework, scenario) measurement.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub framework: FrameworkKind,
+    pub scenario: Scenario,
+    pub vtime_secs: f64,
+    pub cost_usd: f64,
+    pub recovery: RecoveryStats,
+}
+
+/// The full resilience run: 5 architectures × scenarios, plus the
+/// poisoning/robust-aggregation accuracy contrast.
+#[derive(Debug, Clone)]
+pub struct Table4 {
+    pub cells: Vec<Cell>,
+    pub poison: poison_demo::PoisonReport,
+}
+
+fn run_one(fw: FrameworkKind, scenario: Scenario, cfg: &FaultConfig) -> Result<Cell> {
+    let mut env_cfg = EnvConfig::virtual_paper(fw, &cfg.arch, cfg.workers)?
+        .with_faults(plan_for(scenario, cfg));
+    env_cfg.seed = cfg.seed;
+    let mut env = ClusterEnv::new(env_cfg)?;
+    let mut strategy = strategy_for(fw);
+    let session = SessionConfig {
+        max_epochs: cfg.epochs,
+        target_acc: 2.0, // unreachable: run the full epoch budget
+        patience: cfg.epochs + 1,
+        evaluate: false,
+    };
+    let report = run_session(&mut env, strategy.as_mut(), &session)?;
+    Ok(Cell {
+        framework: fw,
+        scenario,
+        vtime_secs: report.total_vtime_secs,
+        cost_usd: report.total_cost_usd,
+        recovery: env.recovery.clone(),
+    })
+}
+
+/// Run the full table.
+pub fn run(cfg: &FaultConfig) -> Result<Table4> {
+    let mut cells = Vec::new();
+    for fw in FrameworkKind::ALL {
+        for scenario in Scenario::ALL {
+            cells.push(run_one(fw, scenario, cfg)?);
+        }
+    }
+    let poison = poison_demo::run(cfg.seed, poison_demo::DEMO_WORKERS, PoisonMode::Scale(-8.0))?;
+    Ok(Table4 { cells, poison })
+}
+
+/// Fault-free baseline cell for a framework.
+fn baseline(cells: &[Cell], fw: FrameworkKind) -> &Cell {
+    cells
+        .iter()
+        .find(|c| c.framework == fw && c.scenario == Scenario::FaultFree)
+        .expect("fault-free baseline present")
+}
+
+fn recovery_summary(r: &RecoveryStats) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    if r.invocation_retries > 0 {
+        parts.push(format!("{} retried", r.invocation_retries));
+    }
+    if r.supervisor_restarts > 0 {
+        parts.push(format!("{} sup restart", r.supervisor_restarts));
+    }
+    if r.snapshot_restores > 0 {
+        parts.push(format!("{} restored", r.snapshot_restores));
+    }
+    if r.rerouted_fetches > 0 {
+        parts.push(format!("{} rerouted", r.rerouted_fetches));
+    }
+    if r.dropped_updates > 0 {
+        parts.push(format!("{} dropped", r.dropped_updates));
+    }
+    if r.poisoned_grads > 0 {
+        parts.push(format!("{} poisoned", r.poisoned_grads));
+    }
+    if r.straggler_secs > 0.0 {
+        parts.push(format!("+{:.0}s straggle", r.straggler_secs));
+    }
+    if r.downtime_secs > 0.0 {
+        parts.push(format!("{:.1}s down", r.downtime_secs));
+    }
+    if parts.is_empty() {
+        "-".into()
+    } else {
+        parts.join(", ")
+    }
+}
+
+/// Render the resilience table plus the poisoning contrast.
+pub fn render(t4: &Table4, cfg: &FaultConfig) -> String {
+    let mut t = Table::new(&[
+        "Framework",
+        "Scenario",
+        "Time (s)",
+        "dTime",
+        "Cost ($)",
+        "dCost",
+        "Recovery",
+    ])
+    .title(format!(
+        "Table 4 — Resilience under injected faults ({}, {} workers, {} epochs, seed {}; \
+         deltas vs each framework's fault-free run)",
+        cfg.arch, cfg.workers, cfg.epochs, cfg.seed
+    ))
+    .align(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+    ]);
+
+    for fw in FrameworkKind::ALL {
+        let base = baseline(&t4.cells, fw).clone();
+        for cell in t4.cells.iter().filter(|c| c.framework == fw) {
+            let dt = cell.vtime_secs - base.vtime_secs;
+            let dc = cell.cost_usd - base.cost_usd;
+            t.row(vec![
+                fw.name().to_string(),
+                cell.scenario.name().to_string(),
+                format!("{:.1}", cell.vtime_secs),
+                if cell.scenario == Scenario::FaultFree {
+                    "-".into()
+                } else {
+                    format!("{:+.1}% ({dt:+.1}s)", dt / base.vtime_secs * 100.0)
+                },
+                format!("{:.4}", cell.cost_usd),
+                if cell.scenario == Scenario::FaultFree {
+                    "-".into()
+                } else {
+                    format!("{:+.1}%", dc / base.cost_usd.max(1e-12) * 100.0)
+                },
+                recovery_summary(&cell.recovery),
+            ]);
+        }
+        t.rule();
+    }
+
+    let mut p = Table::new(&["Aggregation", "Final acc (%)", "d vs fault-free (pts)"])
+        .title(format!(
+            "Poisoned-gradient recovery — 1 of {} workers submits {:?}-scaled updates \
+             (real gradients, logistic task, seed {})",
+            t4.poison.workers, t4.poison.mode, cfg.seed
+        ))
+        .align(&[Align::Left, Align::Right, Align::Right]);
+    p.row(vec![
+        "fault-free (mean)".into(),
+        format!("{:.1}", t4.poison.fault_free_acc * 100.0),
+        "-".into(),
+    ]);
+    for row in &t4.poison.rows {
+        p.row(vec![
+            row.rule.name().to_string(),
+            format!("{:.1}", row.final_acc * 100.0),
+            format!("{:+.1}", (row.final_acc - t4.poison.fault_free_acc) * 100.0),
+        ]);
+    }
+
+    format!("{}\n{}", t.render(), p.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::calibration::LAMBDA_COLD_START;
+
+    fn small() -> FaultConfig {
+        FaultConfig { epochs: 3, ..Default::default() }
+    }
+
+    /// The acceptance headline: a mid-training worker crash leaves SPIRT's
+    /// time within 20% of fault-free while AllReduce degrades by more than
+    /// the restart stall — and a seeded run is bit-for-bit reproducible.
+    #[test]
+    fn crash_asymmetry_and_reproducibility() {
+        let cfg = small();
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(
+                ca.vtime_secs.to_bits(),
+                cb.vtime_secs.to_bits(),
+                "{:?}/{:?} must be bit-identical",
+                ca.framework,
+                ca.scenario
+            );
+            assert_eq!(ca.cost_usd.to_bits(), cb.cost_usd.to_bits());
+        }
+
+        let cell = |fw, s| {
+            a.cells
+                .iter()
+                .find(|c| c.framework == fw && c.scenario == s)
+                .unwrap()
+        };
+        let spirt_base = cell(FrameworkKind::Spirt, Scenario::FaultFree);
+        let spirt_crash = cell(FrameworkKind::Spirt, Scenario::WorkerCrash);
+        assert!(
+            spirt_crash.vtime_secs < spirt_base.vtime_secs * 1.20,
+            "SPIRT crash {:.1}s vs base {:.1}s",
+            spirt_crash.vtime_secs,
+            spirt_base.vtime_secs
+        );
+
+        let ar_base = cell(FrameworkKind::AllReduce, Scenario::FaultFree);
+        let ar_crash = cell(FrameworkKind::AllReduce, Scenario::WorkerCrash);
+        assert!(
+            ar_crash.vtime_secs - ar_base.vtime_secs > LAMBDA_COLD_START,
+            "AllReduce must stall by more than the restart: +{:.1}s",
+            ar_crash.vtime_secs - ar_base.vtime_secs
+        );
+    }
+
+    #[test]
+    fn supervisor_crash_only_hurts_mlless() {
+        let cfg = small();
+        let t4 = run(&cfg).unwrap();
+        for fw in FrameworkKind::ALL {
+            let base = baseline(&t4.cells, fw);
+            let sup = t4
+                .cells
+                .iter()
+                .find(|c| c.framework == fw && c.scenario == Scenario::SupervisorCrash)
+                .unwrap();
+            if fw == FrameworkKind::MlLess {
+                assert!(sup.vtime_secs > base.vtime_secs + 1.0, "MLLess stalls");
+                assert_eq!(sup.recovery.supervisor_restarts, 1);
+            } else {
+                assert_eq!(
+                    sup.vtime_secs.to_bits(),
+                    base.vtime_secs.to_bits(),
+                    "{fw:?} has no supervisor to lose"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn faults_always_cost_money_never_save_it() {
+        let cfg = small();
+        let t4 = run(&cfg).unwrap();
+        for fw in FrameworkKind::ALL {
+            let base = baseline(&t4.cells, fw);
+            for s in [Scenario::WorkerCrash, Scenario::SyncCrash, Scenario::Straggler] {
+                let c = t4
+                    .cells
+                    .iter()
+                    .find(|c| c.framework == fw && c.scenario == s)
+                    .unwrap();
+                assert!(
+                    c.cost_usd >= base.cost_usd - 1e-12,
+                    "{fw:?}/{s:?}: {:.6} vs base {:.6}",
+                    c.cost_usd,
+                    base.cost_usd
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn render_includes_both_tables() {
+        let cfg = FaultConfig { epochs: 1, ..Default::default() };
+        let t4 = run(&cfg).unwrap();
+        let s = render(&t4, &cfg);
+        assert!(s.contains("Table 4"));
+        assert!(s.contains("Poisoned-gradient recovery"));
+        assert!(s.contains("SPIRT"));
+        assert!(s.contains("coord-median"));
+    }
+}

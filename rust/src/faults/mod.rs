@@ -1,0 +1,28 @@
+//! Deterministic fault injection — the robustness half of the comparison.
+//!
+//! The paper's argument for SPIRT is not only cost/performance but *fault
+//! tolerance*: P2P serverless training survives worker crashes and tolerates
+//! gradient poisoning, while master-aggregated (AllReduce), chunk-owned
+//! (ScatterReduce) and supervisor-coordinated (MLLess) topologies each have
+//! a stall point, and an always-on GPU fleet pays reboot time at on-demand
+//! rates (SPIRT: Barrak et al., arXiv:2309.14148; P2P fault tolerance:
+//! arXiv:2302.13995). This module makes those claims measurable:
+//!
+//! * [`plan`] — [`FaultPlan`] / [`FaultSchedule`]: seeded, virtual-time-
+//!   deterministic injection of worker crashes (with cold-start restarts),
+//!   straggler slowdowns, update drops, and gradient poisoning, planned at
+//!   protocol coordinates (epoch/round) or virtual times.
+//! * [`poison_demo`] — a dependency-free distributed training task that
+//!   shows robust aggregation (`tensor::robust`) recovering accuracy under
+//!   a poisoned worker while the naive mean degrades.
+//!
+//! The hooks live in `coordinator::env::ClusterEnv` (fetch/compute/sync/
+//! update boundaries) and in each `Strategy`; recovery *costs* are billed
+//! through `cloud::recovery` into the ledger and tallied in
+//! `metrics::RecoveryStats`. `exp::table4_faults` renders the resulting
+//! per-architecture resilience table.
+
+pub mod plan;
+pub mod poison_demo;
+
+pub use plan::{FaultEvent, FaultKind, FaultPlan, FaultSchedule, PoisonMode, SUPERVISOR, Trigger};

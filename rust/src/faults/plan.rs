@@ -1,0 +1,483 @@
+//! Fault plans and the deterministic runtime schedule.
+//!
+//! A [`FaultPlan`] is *data*: a list of [`FaultEvent`]s that say which
+//! worker misbehaves, how, and when — either at protocol coordinates
+//! (epoch/round, the natural unit every strategy shares) or at a planned
+//! virtual time on the worker's clock. A [`FaultSchedule`] is the plan
+//! armed for one run: it tracks the per-worker round counters and which
+//! one-shot events already fired. All queries are pure scans over the event
+//! list, so a given (plan, seed, config) produces bit-identical virtual
+//! timelines on every run — the property the determinism integration test
+//! locks in.
+
+use anyhow::{bail, Result};
+
+use crate::sim::VTime;
+use crate::tensor::Slab;
+
+/// Sentinel worker id for events that target the MLLess supervisor rather
+/// than a training worker.
+pub const SUPERVISOR: usize = usize::MAX;
+
+/// How a poisoned worker corrupts its gradient before submitting it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PoisonMode {
+    /// Multiply the update by a factor (|f| > 1 amplifies, f < 0 reverses).
+    Scale(f32),
+    /// Flip the sign of every coordinate (Scale(-1) with intent spelled out).
+    SignFlip,
+}
+
+impl PoisonMode {
+    /// Corrupt `grad` in place. Virtual slabs pass through numerically
+    /// (size-only experiments track the poisoning in RecoveryStats instead).
+    pub fn apply(&self, grad: &mut Slab) {
+        match self {
+            PoisonMode::Scale(f) => grad.scale(*f),
+            PoisonMode::SignFlip => grad.scale(-1.0),
+        }
+    }
+}
+
+/// What goes wrong.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The worker's in-flight invocation dies mid-compute. The platform
+    /// retries it: cold start + state re-load + recompute, billed again.
+    CrashCompute,
+    /// The worker dies entering the synchronization stage and restarts
+    /// after a cold start + snapshot restore. Peer behaviour is the
+    /// architectural difference: SPIRT reroutes around the dead peer,
+    /// barriered frameworks stall until it is back.
+    CrashSync,
+    /// The MLLess supervisor process dies; the round stalls until it
+    /// restarts and re-polls the worker reports. No-op elsewhere.
+    CrashSupervisor,
+    /// Compute runs `factor`× slower while active (degraded vCPU,
+    /// co-tenancy, thermal throttling).
+    Straggler { factor: f64 },
+    /// The worker's produced update is lost before synchronization while
+    /// active (message/object drop).
+    DropUpdate,
+    /// The worker submits corrupted gradients while active.
+    Poison(PoisonMode),
+}
+
+/// When a fault triggers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Protocol coordinates: 1-based epoch, 0-based round/minibatch within
+    /// it. Sync-phase crashes ignore the round (they fire at that epoch's
+    /// synchronization stage).
+    Round { epoch: usize, round: usize },
+    /// First hook consultation at or after this virtual time on the
+    /// affected worker's clock.
+    VTime(f64),
+}
+
+/// One planned fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Target worker (or [`SUPERVISOR`]).
+    pub worker: usize,
+    pub kind: FaultKind,
+    pub at: Trigger,
+    /// For persistent kinds (straggler/drop/poison) triggered by round:
+    /// how many consecutive rounds of that epoch stay affected; `None`
+    /// means from the trigger to the end of the run (all later epochs).
+    /// Ignored for crashes and for `VTime` triggers (always to end of run).
+    pub rounds: Option<usize>,
+}
+
+/// A declarative set of fault events (builder-style construction).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: a fault-free run.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn with(mut self, event: FaultEvent) -> FaultPlan {
+        self.events.push(event);
+        self
+    }
+
+    /// Compute-phase crash of `worker` at (epoch, round).
+    pub fn crash(self, worker: usize, epoch: usize, round: usize) -> FaultPlan {
+        self.with(FaultEvent {
+            worker,
+            kind: FaultKind::CrashCompute,
+            at: Trigger::Round { epoch, round },
+            rounds: None,
+        })
+    }
+
+    /// Compute-phase crash of `worker` at the first invocation at or after
+    /// virtual time `secs`.
+    pub fn crash_at_vtime(self, worker: usize, secs: f64) -> FaultPlan {
+        self.with(FaultEvent {
+            worker,
+            kind: FaultKind::CrashCompute,
+            at: Trigger::VTime(secs),
+            rounds: None,
+        })
+    }
+
+    /// Sync-phase crash of `worker` in `epoch`.
+    pub fn sync_crash(self, worker: usize, epoch: usize) -> FaultPlan {
+        self.with(FaultEvent {
+            worker,
+            kind: FaultKind::CrashSync,
+            at: Trigger::Round { epoch, round: 0 },
+            rounds: None,
+        })
+    }
+
+    /// MLLess supervisor crash at (epoch, round).
+    pub fn supervisor_crash(self, epoch: usize, round: usize) -> FaultPlan {
+        self.with(FaultEvent {
+            worker: SUPERVISOR,
+            kind: FaultKind::CrashSupervisor,
+            at: Trigger::Round { epoch, round },
+            rounds: None,
+        })
+    }
+
+    /// `worker` computes `factor`× slower for `rounds` rounds from
+    /// (epoch, round); `None` = for the rest of the run.
+    pub fn straggler(
+        self,
+        worker: usize,
+        epoch: usize,
+        round: usize,
+        factor: f64,
+        rounds: Option<usize>,
+    ) -> FaultPlan {
+        self.with(FaultEvent {
+            worker,
+            kind: FaultKind::Straggler { factor },
+            at: Trigger::Round { epoch, round },
+            rounds,
+        })
+    }
+
+    /// `worker`'s updates are dropped for `rounds` rounds from (epoch, round).
+    pub fn drop_updates(
+        self,
+        worker: usize,
+        epoch: usize,
+        round: usize,
+        rounds: Option<usize>,
+    ) -> FaultPlan {
+        self.with(FaultEvent {
+            worker,
+            kind: FaultKind::DropUpdate,
+            at: Trigger::Round { epoch, round },
+            rounds,
+        })
+    }
+
+    /// `worker` submits poisoned gradients from `epoch` onwards.
+    pub fn poison(self, worker: usize, epoch: usize, mode: PoisonMode) -> FaultPlan {
+        self.with(FaultEvent {
+            worker,
+            kind: FaultKind::Poison(mode),
+            at: Trigger::Round { epoch, round: 0 },
+            rounds: None,
+        })
+    }
+}
+
+/// A [`FaultPlan`] armed for one run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+    /// One-shot consumption flags (crashes fire exactly once).
+    fired: Vec<bool>,
+    /// Per-worker compute-round counter, reset each epoch.
+    round_of: Vec<usize>,
+    epoch: usize,
+}
+
+impl FaultSchedule {
+    pub fn new(plan: FaultPlan, workers: usize) -> Result<FaultSchedule> {
+        for ev in &plan.events {
+            let is_supervisor = matches!(ev.kind, FaultKind::CrashSupervisor);
+            if is_supervisor {
+                if ev.worker != SUPERVISOR {
+                    bail!("supervisor crash events must target SUPERVISOR");
+                }
+            } else if ev.worker >= workers {
+                bail!("fault event targets worker {} of {workers}", ev.worker);
+            }
+            if let FaultKind::Straggler { factor } = ev.kind {
+                if !(factor >= 1.0 && factor.is_finite()) {
+                    bail!("straggler factor must be >= 1, got {factor}");
+                }
+            }
+        }
+        let fired = vec![false; plan.events.len()];
+        Ok(FaultSchedule {
+            events: plan.events,
+            fired,
+            round_of: vec![0; workers],
+            epoch: 0,
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// New epoch: reset the per-worker round counters.
+    pub fn begin_epoch(&mut self, epoch: usize) {
+        self.epoch = epoch;
+        for r in &mut self.round_of {
+            *r = 0;
+        }
+    }
+
+    /// A worker starts computing its next gradient; returns the 0-based
+    /// round index within the current epoch.
+    pub fn note_compute(&mut self, worker: usize) -> usize {
+        let r = self.round_of[worker];
+        self.round_of[worker] += 1;
+        r
+    }
+
+    /// A retry re-runs the same round: undo one `note_compute` so the
+    /// recomputation does not shift later round coordinates.
+    pub fn redo_round(&mut self, worker: usize) {
+        self.round_of[worker] = self.round_of[worker].saturating_sub(1);
+    }
+
+    /// The round the worker most recently computed (0 before any compute).
+    pub fn current_round(&self, worker: usize) -> usize {
+        self.round_of[worker].saturating_sub(1)
+    }
+
+    /// Is a persistent event active at (this epoch, `round`, `now`)?
+    fn active(&self, ev: &FaultEvent, round: usize, now: VTime) -> bool {
+        match ev.at {
+            Trigger::VTime(t) => now.secs() >= t,
+            Trigger::Round { epoch, round: r0 } => {
+                if self.epoch < epoch {
+                    return false;
+                }
+                if self.epoch > epoch {
+                    // Later epochs: only open-ended windows persist.
+                    return ev.rounds.is_none();
+                }
+                match ev.rounds {
+                    None => round >= r0,
+                    Some(n) => round >= r0 && round < r0 + n,
+                }
+            }
+        }
+    }
+
+    /// Compute slowdown multiplier for `worker` at `round` (product of all
+    /// active straggler events; 1.0 when none).
+    pub fn compute_factor(&self, worker: usize, round: usize, now: VTime) -> f64 {
+        self.events
+            .iter()
+            .filter(|ev| ev.worker == worker)
+            .filter_map(|ev| match ev.kind {
+                FaultKind::Straggler { factor } if self.active(ev, round, now) => Some(factor),
+                _ => None,
+            })
+            .product()
+    }
+
+    /// Active poison mode for `worker` at `round` (first match wins).
+    pub fn poison(&self, worker: usize, round: usize, now: VTime) -> Option<PoisonMode> {
+        self.events
+            .iter()
+            .filter(|ev| ev.worker == worker)
+            .find_map(|ev| match ev.kind {
+                FaultKind::Poison(mode) if self.active(ev, round, now) => Some(mode),
+                _ => None,
+            })
+    }
+
+    /// Is `worker`'s update at `round` dropped?
+    pub fn drop_update(&self, worker: usize, round: usize, now: VTime) -> bool {
+        self.events.iter().any(|ev| {
+            ev.worker == worker
+                && matches!(ev.kind, FaultKind::DropUpdate)
+                && self.active(ev, round, now)
+        })
+    }
+
+    /// One-shot matcher: fire (and consume) the first unfired event of
+    /// `kind` for `worker` whose trigger matches.
+    fn fire(
+        &mut self,
+        worker: usize,
+        kind: FaultKind,
+        round: Option<usize>,
+        now: VTime,
+    ) -> bool {
+        for (i, ev) in self.events.iter().enumerate() {
+            if self.fired[i] || ev.worker != worker || ev.kind != kind {
+                continue;
+            }
+            let hit = match ev.at {
+                Trigger::VTime(t) => now.secs() >= t,
+                Trigger::Round { epoch, round: r0 } => {
+                    self.epoch == epoch && round.map(|r| r == r0).unwrap_or(true)
+                }
+            };
+            if hit {
+                self.fired[i] = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Does `worker`'s invocation crash at `round`? Consumes the event.
+    pub fn crash_compute(&mut self, worker: usize, round: usize, now: VTime) -> bool {
+        self.fire(worker, FaultKind::CrashCompute, Some(round), now)
+    }
+
+    /// Does `worker` crash entering this epoch's sync stage? Consumes.
+    pub fn crash_sync(&mut self, worker: usize, now: VTime) -> bool {
+        self.fire(worker, FaultKind::CrashSync, None, now)
+    }
+
+    /// Does the supervisor crash at `round`? Consumes.
+    pub fn crash_supervisor(&mut self, round: usize, now: VTime) -> bool {
+        self.fire(SUPERVISOR, FaultKind::CrashSupervisor, Some(round), now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(secs: f64) -> VTime {
+        VTime::from_secs(secs)
+    }
+
+    #[test]
+    fn round_counters_track_per_worker_per_epoch() {
+        let mut s = FaultSchedule::new(FaultPlan::none(), 2).unwrap();
+        s.begin_epoch(1);
+        assert_eq!(s.note_compute(0), 0);
+        assert_eq!(s.note_compute(0), 1);
+        assert_eq!(s.note_compute(1), 0);
+        assert_eq!(s.current_round(0), 1);
+        s.redo_round(0);
+        assert_eq!(s.note_compute(0), 1, "retry re-runs the same round");
+        s.begin_epoch(2);
+        assert_eq!(s.note_compute(0), 0);
+    }
+
+    #[test]
+    fn compute_crash_fires_once_at_its_round() {
+        let plan = FaultPlan::none().crash(1, 2, 3);
+        let mut s = FaultSchedule::new(plan, 4).unwrap();
+        s.begin_epoch(1);
+        assert!(!s.crash_compute(1, 3, t(0.0)), "wrong epoch");
+        s.begin_epoch(2);
+        assert!(!s.crash_compute(1, 2, t(0.0)), "wrong round");
+        assert!(!s.crash_compute(0, 3, t(0.0)), "wrong worker");
+        assert!(s.crash_compute(1, 3, t(0.0)));
+        assert!(!s.crash_compute(1, 3, t(0.0)), "one-shot");
+    }
+
+    #[test]
+    fn vtime_crash_fires_at_first_consultation_after_t() {
+        let plan = FaultPlan::none().crash_at_vtime(0, 100.0);
+        let mut s = FaultSchedule::new(plan, 1).unwrap();
+        s.begin_epoch(1);
+        assert!(!s.crash_compute(0, 0, t(99.9)));
+        assert!(s.crash_compute(0, 5, t(100.5)));
+        assert!(!s.crash_compute(0, 6, t(200.0)));
+    }
+
+    #[test]
+    fn straggler_window_is_bounded_in_rounds() {
+        let plan = FaultPlan::none().straggler(0, 1, 2, 4.0, Some(3));
+        let mut s = FaultSchedule::new(plan, 1).unwrap();
+        s.begin_epoch(1);
+        assert_eq!(s.compute_factor(0, 1, t(0.0)), 1.0);
+        assert_eq!(s.compute_factor(0, 2, t(0.0)), 4.0);
+        assert_eq!(s.compute_factor(0, 4, t(0.0)), 4.0);
+        assert_eq!(s.compute_factor(0, 5, t(0.0)), 1.0);
+        s.begin_epoch(2);
+        assert_eq!(s.compute_factor(0, 2, t(0.0)), 1.0, "window was epoch-local");
+    }
+
+    #[test]
+    fn open_ended_poison_persists_across_epochs() {
+        let plan = FaultPlan::none().poison(2, 2, PoisonMode::SignFlip);
+        let mut s = FaultSchedule::new(plan, 3).unwrap();
+        s.begin_epoch(1);
+        assert!(s.poison(2, 0, t(0.0)).is_none());
+        s.begin_epoch(2);
+        assert_eq!(s.poison(2, 0, t(0.0)), Some(PoisonMode::SignFlip));
+        s.begin_epoch(7);
+        assert_eq!(s.poison(2, 23, t(0.0)), Some(PoisonMode::SignFlip));
+        assert!(s.poison(1, 0, t(0.0)).is_none());
+    }
+
+    #[test]
+    fn drop_and_sync_and_supervisor_events() {
+        let plan = FaultPlan::none()
+            .drop_updates(1, 1, 0, Some(2))
+            .sync_crash(0, 3)
+            .supervisor_crash(2, 5);
+        let mut s = FaultSchedule::new(plan, 2).unwrap();
+        s.begin_epoch(1);
+        assert!(s.drop_update(1, 0, t(0.0)));
+        assert!(s.drop_update(1, 1, t(0.0)));
+        assert!(!s.drop_update(1, 2, t(0.0)));
+        assert!(!s.crash_sync(0, t(0.0)));
+        s.begin_epoch(2);
+        assert!(!s.crash_supervisor(4, t(0.0)));
+        assert!(s.crash_supervisor(5, t(0.0)));
+        assert!(!s.crash_supervisor(5, t(0.0)), "one-shot");
+        s.begin_epoch(3);
+        assert!(s.crash_sync(0, t(0.0)));
+        assert!(!s.crash_sync(0, t(0.0)), "one-shot");
+    }
+
+    #[test]
+    fn poison_modes_corrupt_real_slabs_only() {
+        let mut g = Slab::from_vec(vec![1.0, -2.0]);
+        PoisonMode::SignFlip.apply(&mut g);
+        assert_eq!(g.as_slice().unwrap(), &[-1.0, 2.0]);
+        PoisonMode::Scale(-4.0).apply(&mut g);
+        assert_eq!(g.as_slice().unwrap(), &[4.0, -8.0]);
+        let mut v = Slab::virtual_of(3);
+        PoisonMode::Scale(-4.0).apply(&mut v);
+        assert_eq!(v.len(), 3);
+        assert!(!v.is_real());
+    }
+
+    #[test]
+    fn invalid_plans_are_rejected() {
+        assert!(FaultSchedule::new(FaultPlan::none().crash(5, 1, 0), 4).is_err());
+        assert!(
+            FaultSchedule::new(FaultPlan::none().straggler(0, 1, 0, 0.5, None), 4).is_err(),
+            "speedup straggler makes no sense"
+        );
+        let bad = FaultPlan::none().with(FaultEvent {
+            worker: 0,
+            kind: FaultKind::CrashSupervisor,
+            at: Trigger::Round { epoch: 1, round: 0 },
+            rounds: None,
+        });
+        assert!(FaultSchedule::new(bad, 4).is_err());
+    }
+}

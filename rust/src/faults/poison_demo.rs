@@ -1,0 +1,228 @@
+//! Gradient-poisoning recovery demo: robust aggregation on a real
+//! (dependency-free) distributed learning task.
+//!
+//! The accuracy effect of poisoning cannot be shown on size-only gradients,
+//! and the PJRT artifacts are not always available — so this module trains
+//! an actual model with pure-Rust math: logistic regression on a seeded
+//! synthetic binary task, data-parallel across `workers` shards, gradients
+//! aggregated per round exactly like the frameworks aggregate slabs. One
+//! worker is Byzantine ([`PoisonMode`] applied to its submitted gradient);
+//! the aggregation rule is the variable under test.
+//!
+//! Expected (and asserted) outcome: with the naive mean a single scaled
+//! sign-flipped worker drives the global step in the wrong direction and
+//! accuracy collapses; clipped mean bounds its influence and recovers to
+//! within 2 accuracy points of the fault-free run, and the coordinate
+//! median recovers almost as closely (it carries a small estimator bias —
+//! median-of-shards vs mean-of-shards) — the SPIRT robustness claim,
+//! reproduced in miniature.
+
+use anyhow::Result;
+
+use crate::faults::PoisonMode;
+use crate::tensor::{AggregationRule, Slab};
+use crate::util::rng::Rng;
+
+/// Demo dimensions: small enough to run in milliseconds, large enough that
+/// accuracies are stable across seeds.
+const DIM: usize = 24;
+const TRAIN: usize = 1024;
+const TEST: usize = 512;
+const ROUNDS: usize = 100;
+const LR: f32 = 0.5;
+
+/// Default worker count for the demo: one Byzantine worker out of eight.
+/// At 4 workers (25% Byzantine) even robust estimators carry a visible
+/// equilibrium bias; 1-of-8 is the regime the 2-point recovery claim is
+/// calibrated for.
+pub const DEMO_WORKERS: usize = 8;
+
+/// One aggregation rule's outcome under a poisoned worker.
+#[derive(Debug, Clone)]
+pub struct PoisonRow {
+    pub rule: AggregationRule,
+    pub final_acc: f64,
+}
+
+/// Full demo outcome.
+#[derive(Debug, Clone)]
+pub struct PoisonReport {
+    pub workers: usize,
+    pub mode: PoisonMode,
+    /// Accuracy of the fault-free run (naive mean, no adversary).
+    pub fault_free_acc: f64,
+    pub rows: Vec<PoisonRow>,
+}
+
+/// Seeded synthetic binary task: labels follow a fixed ground-truth linear
+/// separator with margin noise.
+struct Task {
+    x: Vec<f32>, // n × DIM
+    y: Vec<f32>, // ±1
+}
+
+impl Task {
+    /// Draw `n` samples labeled by the shared ground-truth separator
+    /// `w_true` (train and test must come from the same separator).
+    fn generate(rng: &mut Rng, n: usize, w_true: &[f32]) -> Task {
+        let mut x = Vec::with_capacity(n * DIM);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let xi: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let margin: f32 = xi.iter().zip(w_true).map(|(a, b)| a * b).sum::<f32>()
+                + rng.normal_f32(0.0, 0.5);
+            y.push(if margin >= 0.0 { 1.0 } else { -1.0 });
+            x.extend_from_slice(&xi);
+        }
+        Task { x, y }
+    }
+
+    fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Mean logistic-loss gradient of `theta` over samples [lo, hi).
+    fn grad(&self, theta: &[f32], lo: usize, hi: usize) -> Slab {
+        let mut g = vec![0.0f32; DIM];
+        for i in lo..hi {
+            let xi = &self.x[i * DIM..(i + 1) * DIM];
+            let yi = self.y[i];
+            let m: f32 = xi.iter().zip(theta).map(|(a, b)| a * b).sum();
+            // d/dw ln(1+exp(-y w·x)) = -y x σ(-y w·x)
+            let s = 1.0 / (1.0 + (yi * m).exp());
+            let c = -yi * s / (hi - lo) as f32;
+            for (gj, xj) in g.iter_mut().zip(xi) {
+                *gj += c * xj;
+            }
+        }
+        Slab::from_vec(g)
+    }
+
+    fn accuracy(&self, theta: &[f32]) -> f64 {
+        let correct = (0..self.len())
+            .filter(|&i| {
+                let xi = &self.x[i * DIM..(i + 1) * DIM];
+                let m: f32 = xi.iter().zip(theta).map(|(a, b)| a * b).sum();
+                (m >= 0.0) == (self.y[i] >= 0.0)
+            })
+            .count();
+        correct as f64 / self.len() as f64
+    }
+}
+
+/// Train with `workers` data-parallel shards; worker `poisoned` (if any)
+/// corrupts its gradient with `mode` before submission; `rule` combines the
+/// submissions. Returns test accuracy.
+fn train(
+    train: &Task,
+    test: &Task,
+    workers: usize,
+    poisoned: Option<(usize, PoisonMode)>,
+    rule: AggregationRule,
+) -> Result<f64> {
+    let mut theta = vec![0.0f32; DIM];
+    let shard = train.len() / workers;
+    for _ in 0..ROUNDS {
+        let mut grads = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let mut g = train.grad(&theta, w * shard, (w + 1) * shard);
+            if let Some((pw, mode)) = poisoned {
+                if pw == w {
+                    mode.apply(&mut g);
+                }
+            }
+            grads.push(g);
+        }
+        let step = rule.apply(&grads)?;
+        for (t, s) in theta.iter_mut().zip(step.as_slice()?) {
+            *t -= LR * s;
+        }
+    }
+    Ok(test.accuracy(&theta))
+}
+
+/// Run the full demo: fault-free baseline, then each rule against one
+/// poisoned worker out of `workers`.
+pub fn run(seed: u64, workers: usize, mode: PoisonMode) -> Result<PoisonReport> {
+    assert!(workers >= 3, "need a Byzantine minority");
+    let mut rng = Rng::new(seed ^ 0xB12A_57);
+    let w_true: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let train_set = Task::generate(&mut rng, TRAIN, &w_true);
+    let test_set = Task::generate(&mut rng, TEST, &w_true);
+
+    let fault_free_acc =
+        train(&train_set, &test_set, workers, None, AggregationRule::Mean)?;
+    let mut rows = Vec::new();
+    for rule in [
+        AggregationRule::Mean,
+        AggregationRule::ClippedMean { ratio: 1.0 },
+        AggregationRule::CoordMedian,
+    ] {
+        let final_acc = train(&train_set, &test_set, workers, Some((1, mode)), rule)?;
+        rows.push(PoisonRow { rule, final_acc });
+    }
+    Ok(PoisonReport { workers, mode, fault_free_acc, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline robustness claim, asserted: robust aggregation
+    /// (clipped mean) recovers final accuracy to within 2 points of the
+    /// fault-free run while the naive mean measurably degrades. The
+    /// coordinate median also recovers but carries a small estimator bias
+    /// (median-of-shards vs mean-of-shards), so its bound is looser.
+    #[test]
+    fn robust_rules_recover_naive_mean_degrades() {
+        let report = run(42, DEMO_WORKERS, PoisonMode::Scale(-8.0)).unwrap();
+        assert!(
+            report.fault_free_acc > 0.85,
+            "fault-free baseline should learn the task, got {:.3}",
+            report.fault_free_acc
+        );
+        for row in &report.rows {
+            match row.rule {
+                AggregationRule::Mean => assert!(
+                    row.final_acc < report.fault_free_acc - 0.05,
+                    "naive mean should degrade measurably: {:.3} vs {:.3}",
+                    row.final_acc,
+                    report.fault_free_acc
+                ),
+                AggregationRule::ClippedMean { .. } => assert!(
+                    row.final_acc >= report.fault_free_acc - 0.02,
+                    "clipped mean should recover within 2 points: {:.3} vs {:.3}",
+                    row.final_acc,
+                    report.fault_free_acc
+                ),
+                AggregationRule::CoordMedian => assert!(
+                    row.final_acc >= report.fault_free_acc - 0.04,
+                    "coord median should recover within 4 points: {:.3} vs {:.3}",
+                    row.final_acc,
+                    report.fault_free_acc
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = run(7, DEMO_WORKERS, PoisonMode::SignFlip).unwrap();
+        let b = run(7, DEMO_WORKERS, PoisonMode::SignFlip).unwrap();
+        assert_eq!(a.fault_free_acc.to_bits(), b.fault_free_acc.to_bits());
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra.final_acc.to_bits(), rb.final_acc.to_bits());
+        }
+    }
+
+    #[test]
+    fn sign_flip_alone_is_tolerated_by_median() {
+        let report = run(3, DEMO_WORKERS, PoisonMode::SignFlip).unwrap();
+        let median = report
+            .rows
+            .iter()
+            .find(|r| r.rule == AggregationRule::CoordMedian)
+            .unwrap();
+        assert!(median.final_acc >= report.fault_free_acc - 0.02);
+    }
+}

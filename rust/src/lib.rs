@@ -16,9 +16,14 @@
 //!   never runs at request time.
 //! * [`sim`] — the virtual-time core: worker clocks, queueing resources,
 //!   the calibrated compute-duration model.
+//! * [`faults`] — deterministic fault injection (crashes with cold-start
+//!   restarts, stragglers, update drops, gradient poisoning) consulted by
+//!   the coordinator at every workflow-stage boundary, plus the
+//!   poisoning/robust-aggregation demo.
 //! * [`train`] — the epoch/step driver that wires data, strategy, substrates
 //!   and runtime into a training session.
-//! * [`exp`] — drivers that regenerate every table and figure of the paper.
+//! * [`exp`] — drivers that regenerate every table and figure of the paper,
+//!   plus the fault-resilience table (`exp::table4_faults`).
 //!
 //! Time in experiment outputs is *virtual* (the paper's AWS time axis,
 //! calibrated from the paper's own measurements — see
@@ -29,6 +34,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod faults;
 pub mod metrics;
 pub mod runtime;
 pub mod sim;

@@ -8,6 +8,7 @@
 //! slsgpu exp fig3-real [--model mobilenet_s] # MLLess real-gradient contrast
 //! slsgpu exp spirt-indb [--real]             # §4.2 in-DB vs naive
 //! slsgpu exp table3 [--model mobilenet_s] [--epochs 20] [--csv out.csv]
+//! slsgpu fault-tolerance [--arch mobilenet] [--workers 4] [--epochs 3]
 //! slsgpu train --framework spirt --model mobilenet_s --epochs 5
 //! slsgpu artifacts                            # list compiled artifacts
 //! ```
@@ -61,6 +62,7 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("exp") => run_exp(&args),
+        Some("fault-tolerance") => run_fault_tolerance(&args),
         Some("train") => run_train(&args),
         Some("artifacts") => {
             let engine = engine_from(&args)?;
@@ -79,13 +81,30 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand {other:?} (exp|train|artifacts)"),
+        Some(other) => bail!("unknown subcommand {other:?} (exp|fault-tolerance|train|artifacts)"),
         None => {
             println!("slsgpu — serverless-vs-GPU training testbed (see README)");
-            println!("subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, train, artifacts");
+            println!(
+                "subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, \
+                 fault-tolerance, train, artifacts"
+            );
             Ok(())
         }
     }
+}
+
+/// The resilience table: five architectures under deterministic injected
+/// faults, plus the poisoning/robust-aggregation accuracy contrast.
+fn run_fault_tolerance(args: &Args) -> Result<()> {
+    let cfg = exp::table4_faults::FaultConfig {
+        arch: args.get_or("arch", "mobilenet").to_string(),
+        workers: args.get_usize("workers", 4)?,
+        epochs: args.get_usize("epochs", 3)?,
+        seed: args.get_usize("seed", 42)? as u64,
+    };
+    let t4 = exp::table4_faults::run(&cfg)?;
+    print!("{}", exp::table4_faults::render(&t4, &cfg));
+    Ok(())
 }
 
 fn run_exp(args: &Args) -> Result<()> {
@@ -93,7 +112,11 @@ fn run_exp(args: &Args) -> Result<()> {
         .positional
         .first()
         .map(|s| s.as_str())
-        .ok_or_else(|| anyhow::anyhow!("usage: slsgpu exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>"))?;
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "usage: slsgpu exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>"
+            )
+        })?;
     match which {
         "table1" => {
             print!("{}", exp::table1::render());

@@ -153,6 +153,76 @@ impl CommStats {
     }
 }
 
+/// What the fault-injection engine did and what it cost — the measurement
+/// plane of the resilience experiments (`faults`, `exp::table4_faults`).
+/// Substrate/recovery code increments these alongside the normal [`Ledger`]
+/// charges so "cost of recovery" is reportable separately from base cost.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryStats {
+    /// Lambda invocations retried after a crash (billed again).
+    pub invocation_retries: u64,
+    /// Cold starts paid by crash restarts (compute- or sync-phase).
+    pub cold_restarts: u64,
+    /// Model-state restores from a Redis snapshot after a restart.
+    pub snapshot_restores: u64,
+    /// Bytes moved by snapshot restores.
+    pub restore_bytes: u64,
+    /// Extra storage GETs issued while peers re-polled for late objects.
+    pub storage_repolls: u64,
+    /// Extra queue polls issued while peers re-polled for late messages.
+    pub queue_repolls: u64,
+    /// MLLess supervisor restarts.
+    pub supervisor_restarts: u64,
+    /// SPIRT P2P fetches rerouted around a down peer.
+    pub rerouted_fetches: u64,
+    /// Updates dropped by injected message loss.
+    pub dropped_updates: u64,
+    /// Gradients corrupted by injected poisoning.
+    pub poisoned_grads: u64,
+    /// Straggler-inflated compute seconds (extra over the fault-free time).
+    pub straggler_secs: f64,
+    /// Total downtime injected by crashes (virtual seconds).
+    pub downtime_secs: f64,
+    /// USD charged specifically for recovery actions (subset of the ledger).
+    pub cost_usd: f64,
+}
+
+impl RecoveryStats {
+    pub fn new() -> RecoveryStats {
+        RecoveryStats::default()
+    }
+
+    /// Any fault fired or any recovery action was taken.
+    pub fn any(&self) -> bool {
+        self.invocation_retries
+            + self.cold_restarts
+            + self.snapshot_restores
+            + self.supervisor_restarts
+            + self.rerouted_fetches
+            + self.dropped_updates
+            + self.poisoned_grads
+            > 0
+            || self.straggler_secs > 0.0
+            || self.downtime_secs > 0.0
+    }
+
+    pub fn merge(&mut self, other: &RecoveryStats) {
+        self.invocation_retries += other.invocation_retries;
+        self.cold_restarts += other.cold_restarts;
+        self.snapshot_restores += other.snapshot_restores;
+        self.restore_bytes += other.restore_bytes;
+        self.storage_repolls += other.storage_repolls;
+        self.queue_repolls += other.queue_repolls;
+        self.supervisor_restarts += other.supervisor_restarts;
+        self.rerouted_fetches += other.rerouted_fetches;
+        self.dropped_updates += other.dropped_updates;
+        self.poisoned_grads += other.poisoned_grads;
+        self.straggler_secs += other.straggler_secs;
+        self.downtime_secs += other.downtime_secs;
+        self.cost_usd += other.cost_usd;
+    }
+}
+
 /// The paper's Table-1 training stages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Stage {
@@ -250,6 +320,23 @@ mod tests {
         assert_eq!(c.wire_bytes(), 150);
         assert_eq!(c.total_ops(), 3);
         assert_eq!(c.bytes(CommKind::InDb), 10_000);
+    }
+
+    #[test]
+    fn recovery_stats_merge_and_any() {
+        let mut a = RecoveryStats::new();
+        assert!(!a.any());
+        a.invocation_retries = 2;
+        a.cost_usd = 0.01;
+        let mut b = RecoveryStats::new();
+        b.downtime_secs = 5.0;
+        b.rerouted_fetches = 1;
+        a.merge(&b);
+        assert!(a.any());
+        assert_eq!(a.invocation_retries, 2);
+        assert_eq!(a.rerouted_fetches, 1);
+        assert!((a.downtime_secs - 5.0).abs() < 1e-12);
+        assert!((a.cost_usd - 0.01).abs() < 1e-12);
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+/// Stub engine for builds without the vendored `xla` crate: `Engine::load`
+/// errors with guidance, the cost-model experiments never notice.
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod manifest;
 

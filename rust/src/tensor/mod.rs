@@ -9,10 +9,12 @@
 //! and "virtualness" so the two modes traverse identical protocol code.
 
 pub mod chunk;
+pub mod robust;
 pub mod significance;
 pub mod slab;
 
 pub use chunk::ChunkPlan;
+pub use robust::AggregationRule;
 pub use significance::SignificanceFilter;
 pub use slab::Slab;
 

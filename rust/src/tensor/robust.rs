@@ -1,0 +1,219 @@
+//! Robust aggregation rules — the defense side of the gradient-poisoning
+//! scenarios (SPIRT §6 "Byzantine tolerance"; Barrak et al. 2309.14148).
+//!
+//! A poisoned worker submits a scaled or sign-flipped update; the naive
+//! arithmetic mean lets a single such worker steer the global step
+//! arbitrarily. Two standard robust estimators bound that influence:
+//!
+//! * **Clipped mean** — every contribution's L2 norm is clipped to a
+//!   multiple of the *median* contribution norm before averaging, so one
+//!   worker's influence is bounded by `ratio × median / k` regardless of
+//!   how large its update is.
+//! * **Coordinate-wise median** — each parameter takes the median across
+//!   workers, ignoring up to `(k-1)/2` arbitrary outliers per coordinate.
+//!
+//! Both preserve the slab contract: virtual (size-only) inputs produce a
+//! virtual output of the same length, so the cost-model experiments traverse
+//! the identical code path the end-to-end runs use.
+
+use anyhow::{bail, Result};
+
+use super::slab::Slab;
+
+/// How a set of worker updates is combined into one gradient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AggregationRule {
+    /// Plain arithmetic mean (the paper's baseline in every framework).
+    Mean,
+    /// Norm-clip each contribution to `ratio × median norm`, then average.
+    ClippedMean { ratio: f64 },
+    /// Coordinate-wise median across contributions.
+    CoordMedian,
+}
+
+impl AggregationRule {
+    /// Parse a CLI spec: `mean`, `clipped`, `clipped:<ratio>`, `median`.
+    pub fn parse(spec: &str) -> Result<AggregationRule> {
+        let spec = spec.trim().to_ascii_lowercase();
+        Ok(match spec.as_str() {
+            "mean" => AggregationRule::Mean,
+            "clipped" => AggregationRule::ClippedMean { ratio: 1.0 },
+            "median" | "coord-median" => AggregationRule::CoordMedian,
+            other => match other.strip_prefix("clipped:") {
+                Some(r) => AggregationRule::ClippedMean { ratio: r.parse()? },
+                None => bail!("unknown aggregation rule {other:?} (mean|clipped[:r]|median)"),
+            },
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregationRule::Mean => "mean",
+            AggregationRule::ClippedMean { .. } => "clipped-mean",
+            AggregationRule::CoordMedian => "coord-median",
+        }
+    }
+
+    /// Relative in-function compute cost vs the plain mean (extra slab
+    /// passes: norm computation + clip for the clipped mean, per-coordinate
+    /// sorting for the median). The env charges this on the virtual clock.
+    pub fn cost_multiplier(&self) -> f64 {
+        match self {
+            AggregationRule::Mean => 1.0,
+            AggregationRule::ClippedMean { .. } => 2.0,
+            AggregationRule::CoordMedian => 4.0,
+        }
+    }
+
+    /// Combine `slabs` under this rule.
+    pub fn apply(&self, slabs: &[Slab]) -> Result<Slab> {
+        match self {
+            AggregationRule::Mean => Slab::mean(slabs),
+            AggregationRule::ClippedMean { ratio } => clipped_mean(slabs, *ratio),
+            AggregationRule::CoordMedian => coordinate_median(slabs),
+        }
+    }
+}
+
+fn check(slabs: &[Slab]) -> Result<(usize, bool)> {
+    if slabs.is_empty() {
+        bail!("aggregation of zero slabs");
+    }
+    let len = slabs[0].len();
+    if slabs.iter().any(|s| s.len() != len) {
+        bail!("slab length mismatch in aggregation");
+    }
+    Ok((len, slabs.iter().all(|s| s.is_real())))
+}
+
+/// Median of a sorted-in-place value list (mean of middles for even k).
+fn median_of(values: &mut [f64]) -> f64 {
+    values.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    let k = values.len();
+    if k % 2 == 1 {
+        values[k / 2]
+    } else {
+        0.5 * (values[k / 2 - 1] + values[k / 2])
+    }
+}
+
+/// Mean of `slabs` with each contribution's L2 norm clipped to
+/// `ratio × median(norms)`. Virtual if any input is.
+pub fn clipped_mean(slabs: &[Slab], ratio: f64) -> Result<Slab> {
+    let (len, real) = check(slabs)?;
+    if !real {
+        return Ok(Slab::virtual_of(len));
+    }
+    let norms: Vec<f64> = slabs.iter().map(|s| s.l2_norm_sq().sqrt()).collect();
+    let mut sorted = norms.clone();
+    let clip = ratio * median_of(&mut sorted);
+    let inv_k = 1.0 / slabs.len() as f32;
+    let mut acc = Slab::zeros(len);
+    for (s, norm) in slabs.iter().zip(norms.iter()) {
+        let w = if *norm > clip && *norm > 0.0 { (clip / norm) as f32 } else { 1.0 };
+        acc.axpy(s, w * inv_k)?;
+    }
+    Ok(acc)
+}
+
+/// Coordinate-wise median across `slabs`. Virtual if any input is.
+pub fn coordinate_median(slabs: &[Slab]) -> Result<Slab> {
+    let (len, real) = check(slabs)?;
+    if !real {
+        return Ok(Slab::virtual_of(len));
+    }
+    let views: Vec<&[f32]> = slabs.iter().map(|s| s.as_slice()).collect::<Result<_>>()?;
+    let mut out = Vec::with_capacity(len);
+    let mut column: Vec<f64> = Vec::with_capacity(views.len());
+    for j in 0..len {
+        column.clear();
+        column.extend(views.iter().map(|v| v[j] as f64));
+        out.push(median_of(&mut column) as f32);
+    }
+    Ok(Slab::from_vec(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slab(v: &[f32]) -> Slab {
+        Slab::from_vec(v.to_vec())
+    }
+
+    #[test]
+    fn clipped_mean_bounds_an_outlier() {
+        // Three honest unit-ish updates, one 100× outlier: the outlier's
+        // influence is clipped to the median norm, so the mean stays near
+        // the honest direction instead of being dragged 25× away.
+        let honest = [slab(&[1.0, 0.0]), slab(&[1.1, 0.0]), slab(&[0.9, 0.0])];
+        let poison = slab(&[-100.0, 0.0]);
+        let all = [honest[0].clone(), honest[1].clone(), honest[2].clone(), poison];
+        let naive = Slab::mean(&all).unwrap();
+        assert!(naive.as_slice().unwrap()[0] < -20.0, "naive mean is hijacked");
+        let robust = clipped_mean(&all, 1.0).unwrap();
+        let x = robust.as_slice().unwrap()[0];
+        assert!(x > 0.3 && x < 1.0, "clipped mean stays honest, got {x}");
+    }
+
+    #[test]
+    fn coord_median_ignores_minority_outliers() {
+        let m = coordinate_median(&[
+            slab(&[1.0, 5.0]),
+            slab(&[2.0, 6.0]),
+            slab(&[1000.0, -1000.0]),
+        ])
+        .unwrap();
+        assert_eq!(m.as_slice().unwrap(), &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn median_even_count_averages_middles() {
+        let m = coordinate_median(&[slab(&[1.0]), slab(&[3.0]), slab(&[5.0]), slab(&[100.0])])
+            .unwrap();
+        assert_eq!(m.as_slice().unwrap(), &[4.0]);
+    }
+
+    #[test]
+    fn rules_match_mean_on_clean_identical_inputs() {
+        let xs = [slab(&[2.0, -4.0]), slab(&[2.0, -4.0]), slab(&[2.0, -4.0])];
+        for rule in [
+            AggregationRule::Mean,
+            AggregationRule::ClippedMean { ratio: 1.0 },
+            AggregationRule::CoordMedian,
+        ] {
+            let out = rule.apply(&xs).unwrap();
+            assert_eq!(out.as_slice().unwrap(), &[2.0, -4.0], "{}", rule.name());
+        }
+    }
+
+    #[test]
+    fn virtual_slabs_pass_through() {
+        for rule in [
+            AggregationRule::Mean,
+            AggregationRule::ClippedMean { ratio: 1.0 },
+            AggregationRule::CoordMedian,
+        ] {
+            let out = rule.apply(&[Slab::virtual_of(7), Slab::virtual_of(7)]).unwrap();
+            assert!(!out.is_real());
+            assert_eq!(out.len(), 7);
+        }
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(AggregationRule::parse("mean").unwrap(), AggregationRule::Mean);
+        assert_eq!(
+            AggregationRule::parse("clipped:1.5").unwrap(),
+            AggregationRule::ClippedMean { ratio: 1.5 }
+        );
+        assert_eq!(AggregationRule::parse("median").unwrap(), AggregationRule::CoordMedian);
+        assert!(AggregationRule::parse("krum").is_err());
+    }
+
+    #[test]
+    fn mismatched_lengths_error() {
+        assert!(coordinate_median(&[slab(&[1.0]), slab(&[1.0, 2.0])]).is_err());
+        assert!(clipped_mean(&[], 1.0).is_err());
+    }
+}

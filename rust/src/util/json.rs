@@ -192,8 +192,10 @@ impl<'a> Parser<'a> {
                         let mut code = 0u32;
                         for _ in 0..4 {
                             let d = self.bump()?;
-                            code = code * 16
-                                + (d as char).to_digit(16).ok_or_else(|| anyhow!("bad \\u escape"))?;
+                            let digit = (d as char)
+                                .to_digit(16)
+                                .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                            code = code * 16 + digit;
                         }
                         out.push(char::from_u32(code).ok_or_else(|| anyhow!("bad codepoint"))?);
                     }

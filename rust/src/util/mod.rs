@@ -29,7 +29,12 @@ pub fn fmt_bytes(bytes: u64) -> String {
 /// Format seconds as `h:mm:ss.s` / `m:ss.s` / `s.s` depending on magnitude.
 pub fn fmt_duration(secs: f64) -> String {
     if secs >= 3600.0 {
-        format!("{}h{:02}m{:04.1}s", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64, secs % 60.0)
+        format!(
+            "{}h{:02}m{:04.1}s",
+            (secs / 3600.0) as u64,
+            ((secs % 3600.0) / 60.0) as u64,
+            secs % 60.0
+        )
     } else if secs >= 60.0 {
         format!("{}m{:04.1}s", (secs / 60.0) as u64, secs % 60.0)
     } else {

@@ -1,0 +1,106 @@
+//! Determinism integration test: the same seed and config must produce
+//! bit-identical `SessionReport` virtual-time and cost traces across two
+//! runs, for all five strategies, with and without an active `FaultPlan`.
+//!
+//! This is the property the whole testbed stands on — every experiment
+//! table is reproducible, and the fault engine (which injects events at
+//! epoch/round coordinates and virtual times) must not introduce any
+//! run-to-run variation of its own.
+
+use slsgpu::cloud::FrameworkKind;
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use slsgpu::faults::{FaultPlan, PoisonMode};
+use slsgpu::tensor::AggregationRule;
+use slsgpu::train::{run_session, SessionConfig, SessionReport};
+
+const EPOCHS: usize = 3;
+
+fn session(fw: FrameworkKind, plan: &FaultPlan, agg: AggregationRule) -> SessionReport {
+    let cfg = EnvConfig::virtual_paper(fw, "mobilenet", 4)
+        .unwrap()
+        .with_faults(plan.clone())
+        .with_aggregation(agg);
+    let mut env = ClusterEnv::new(cfg).unwrap();
+    let mut strategy = strategy_for(fw);
+    let session_cfg = SessionConfig {
+        max_epochs: EPOCHS,
+        target_acc: 2.0,
+        patience: EPOCHS + 1,
+        evaluate: false,
+    };
+    run_session(&mut env, strategy.as_mut(), &session_cfg).unwrap()
+}
+
+fn assert_bit_identical(a: &SessionReport, b: &SessionReport, label: &str) {
+    assert_eq!(a.reports.len(), b.reports.len(), "{label}: epoch count");
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(
+            ra.vtime_secs.to_bits(),
+            rb.vtime_secs.to_bits(),
+            "{label}: epoch {} vtime {} vs {}",
+            ra.epoch,
+            ra.vtime_secs,
+            rb.vtime_secs
+        );
+        assert_eq!(
+            ra.cost_usd.to_bits(),
+            rb.cost_usd.to_bits(),
+            "{label}: epoch {} cost",
+            ra.epoch
+        );
+        assert_eq!(ra.epoch_secs.to_bits(), rb.epoch_secs.to_bits(), "{label}: epoch secs");
+    }
+    assert_eq!(a.total_vtime_secs.to_bits(), b.total_vtime_secs.to_bits(), "{label}: total");
+    assert_eq!(a.total_cost_usd.to_bits(), b.total_cost_usd.to_bits(), "{label}: total cost");
+}
+
+/// A busy plan touching every fault kind (worker 1 crashes in compute,
+/// worker 2 crashes at sync, worker 3 straggles and poisons, drops on 0).
+fn busy_plan() -> FaultPlan {
+    FaultPlan::none()
+        .crash(1, 2, 5)
+        .sync_crash(2, 2)
+        .straggler(3, 1, 0, 3.0, Some(8))
+        .drop_updates(0, 2, 0, Some(4))
+        .poison(3, 1, PoisonMode::Scale(-4.0))
+        .supervisor_crash(2, 10)
+}
+
+#[test]
+fn fault_free_sessions_are_bit_identical() {
+    for fw in FrameworkKind::ALL {
+        let a = session(fw, &FaultPlan::none(), AggregationRule::Mean);
+        let b = session(fw, &FaultPlan::none(), AggregationRule::Mean);
+        assert_bit_identical(&a, &b, fw.name());
+    }
+}
+
+#[test]
+fn faulty_sessions_are_bit_identical() {
+    let plan = busy_plan();
+    for fw in FrameworkKind::ALL {
+        let a = session(fw, &plan, AggregationRule::ClippedMean { ratio: 1.0 });
+        let b = session(fw, &plan, AggregationRule::ClippedMean { ratio: 1.0 });
+        assert_bit_identical(&a, &b, fw.name());
+    }
+}
+
+#[test]
+fn faults_change_the_trace_but_only_the_faults() {
+    // Sanity check that the fault plan is actually exercised: the faulty
+    // trace must differ from the fault-free one for every serverless
+    // framework (the GPU baseline ignores the supervisor/queue events but
+    // still pays crash/straggler time).
+    let plan = busy_plan();
+    for fw in FrameworkKind::ALL {
+        let clean = session(fw, &FaultPlan::none(), AggregationRule::Mean);
+        let faulty = session(fw, &plan, AggregationRule::Mean);
+        assert!(
+            faulty.total_vtime_secs > clean.total_vtime_secs,
+            "{}: faults must add virtual time ({} vs {})",
+            fw.name(),
+            faulty.total_vtime_secs,
+            clean.total_vtime_secs
+        );
+    }
+}
