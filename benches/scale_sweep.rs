@@ -1,0 +1,61 @@
+//! Host-side simulator throughput on the scale-sweep path (plain harness;
+//! criterion is unavailable offline). Reports protocol rounds simulated per
+//! wall-second — the number that bounds how far the sweep axes (workers ×
+//! modes × architectures) can be pushed. Feeds EXPERIMENTS.md §Scale sweep.
+
+use std::time::Instant;
+
+use slsgpu::cloud::FrameworkKind;
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
+use slsgpu::exp::scale_sweep::{run, SweepConfig};
+
+/// Simulate `epochs` epochs of one (framework, W, mode) point and report
+/// rounds/second of host wall time.
+fn bench_point(fw: FrameworkKind, workers: usize, mode: SyncMode, batches: usize) {
+    let mut cfg = EnvConfig::virtual_paper(fw, "mobilenet", workers).unwrap().with_sync(mode);
+    cfg.batches_per_epoch = batches;
+    let mut env = ClusterEnv::new(cfg).unwrap();
+    let mut strategy = strategy_for(fw);
+    let t0 = Instant::now();
+    strategy.run_epoch(&mut env).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<14} W={:<4} {:<8} {:>6} rounds  {:>10.1} rounds/s  {:>8} ops",
+        fw.name(),
+        workers,
+        mode.label(),
+        batches,
+        batches as f64 / secs,
+        env.comm.total_ops()
+    );
+}
+
+fn main() {
+    println!("-- single points (one epoch each) --");
+    for fw in [FrameworkKind::AllReduce, FrameworkKind::ScatterReduce, FrameworkKind::Spirt] {
+        for workers in [16, 64, 256] {
+            for mode in [SyncMode::Bsp, SyncMode::Async { staleness: 2 }] {
+                bench_point(fw, workers, mode, 24);
+            }
+        }
+    }
+
+    println!("-- threaded sweep (5 architectures x W x 2 modes) --");
+    for workers in [vec![4, 16], vec![4, 16, 64]] {
+        let cfg = SweepConfig {
+            worker_counts: workers.clone(),
+            batches_per_epoch: 24,
+            threads: 0,
+            ..SweepConfig::default()
+        };
+        let points = cfg.worker_counts.len() * cfg.modes.len() * 5;
+        let rounds = points * cfg.batches_per_epoch;
+        let t0 = Instant::now();
+        run(&cfg).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "sweep W={workers:?}: {points:>3} points  {:>8.1} rounds/s  {secs:.2}s total",
+            rounds as f64 / secs
+        );
+    }
+}

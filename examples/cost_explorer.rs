@@ -41,6 +41,7 @@ fn epoch_cost(fw: FrameworkKind, profile: ModelProfile) -> anyhow::Result<f64> {
         seed: 7,
         fault_plan: slsgpu::faults::FaultPlan::none(),
         agg: slsgpu::tensor::AggregationRule::Mean,
+        sync: slsgpu::coordinator::SyncMode::Bsp,
     };
     let mut env = ClusterEnv::new(cfg)?;
     strategy_for(fw).run_epoch(&mut env)?;

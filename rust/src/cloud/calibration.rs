@@ -263,8 +263,13 @@ mod tests {
         for (fw, model, paper) in cases {
             let got = peak_ram_mb(fw, &model, 512);
             let err = (got - paper).abs() / paper;
-            assert!(err < 0.07, "{:?}/{}: model {got:.0} vs paper {paper} ({:.1}%)",
-                fw, model.name, err * 100.0);
+            assert!(
+                err < 0.07,
+                "{:?}/{}: model {got:.0} vs paper {paper} ({:.1}%)",
+                fw,
+                model.name,
+                err * 100.0
+            );
         }
     }
 
@@ -293,8 +298,12 @@ mod tests {
             let sync = 4.0 * grad_bytes / GPU_S3_BW + 4.0 * GPU_S3_LATENCY;
             let got = 24.0 * (512.0 * model.gpu_secs_per_sample + sync);
             let err = (got - paper_epoch).abs() / paper_epoch;
-            assert!(err < 0.15, "{}: {got:.1} vs {paper_epoch} ({:.1}%)",
-                model.name, err * 100.0);
+            assert!(
+                err < 0.15,
+                "{}: {got:.1} vs {paper_epoch} ({:.1}%)",
+                model.name,
+                err * 100.0
+            );
         }
     }
 

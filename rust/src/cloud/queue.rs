@@ -82,8 +82,10 @@ impl MessageQueue {
         comm: &mut CommStats,
     ) -> Result<VTime> {
         let Some(t) = self.kth_visible(topic, count) else {
-            bail!("queue[{topic}]: only {} messages, waiting for {count}",
-                self.topics.get(topic).map(|m| m.len()).unwrap_or(0));
+            bail!(
+                "queue[{topic}]: only {} messages, waiting for {count}",
+                self.topics.get(topic).map(|m| m.len()).unwrap_or(0)
+            );
         };
         let done = now.max(t) + self.latency;
         ledger.charge(CostKind::QueueMessages, pricing::queue_cost(1));

@@ -22,6 +22,8 @@ use crate::sim::VTime;
 use crate::tensor::{AggregationRule, Slab};
 use crate::util::rng::Rng;
 
+use super::protocol::SyncMode;
+
 /// Local (in-function) aggregation memory bandwidth, bytes/sec — the speed
 /// of summing gradient slabs inside a worker (NumPy-level memory-bound op).
 pub const LOCAL_AGG_BW: f64 = 2.0e9;
@@ -69,6 +71,8 @@ pub struct EnvConfig {
     pub fault_plan: FaultPlan,
     /// How worker updates are combined (robust rules defend poisoning).
     pub agg: AggregationRule,
+    /// Round-synchronization policy (BSP barriers or bounded staleness).
+    pub sync: SyncMode,
 }
 
 impl EnvConfig {
@@ -91,12 +95,19 @@ impl EnvConfig {
             seed: 0x5157,
             fault_plan: FaultPlan::none(),
             agg: AggregationRule::Mean,
+            sync: SyncMode::Bsp,
         })
     }
 
     /// Install a fault plan (builder style).
     pub fn with_faults(mut self, plan: FaultPlan) -> EnvConfig {
         self.fault_plan = plan;
+        self
+    }
+
+    /// Select the round-synchronization policy (builder style).
+    pub fn with_sync(mut self, sync: SyncMode) -> EnvConfig {
+        self.sync = sync;
         self
     }
 
@@ -137,6 +148,7 @@ impl EnvConfig {
             seed,
             fault_plan: FaultPlan::none(),
             agg: AggregationRule::Mean,
+            sync: SyncMode::Bsp,
         })
     }
 }
@@ -193,6 +205,8 @@ pub struct ClusterEnv {
     // sync/update boundaries; see the `faults` module).
     pub faults: FaultSchedule,
     pub agg: AggregationRule,
+    /// Round-synchronization policy the strategies consult at sync points.
+    pub sync: SyncMode,
 
     grad_mode: GradMode,
     pub rng: Rng,
@@ -267,6 +281,7 @@ impl ClusterEnv {
             recovery: RecoveryStats::new(),
             faults: FaultSchedule::new(cfg.fault_plan, cfg.workers)?,
             agg: cfg.agg,
+            sync: cfg.sync,
             grad_mode: cfg.grad_mode,
             rng: Rng::fork(&rng, 1),
         })

@@ -5,12 +5,19 @@
 //! averages locally before updating. No Lambda billing — the instances are
 //! on for the whole epoch (hourly billing), which is exactly the
 //! always-on-vs-pay-per-use contrast the paper studies.
+//!
+//! Under [`SyncMode::Async`] each instance averages the earliest-visible
+//! quorum of peer gradients (its own local copy always included) instead of
+//! waiting for the full all-gather — the asynchronous-SGD variant of the
+//! baseline.
 
 use crate::cloud::FrameworkKind;
 use crate::metrics::Stage;
+use crate::tensor::Slab;
 use crate::Result;
 
 use super::env::{ClusterEnv, Device};
+use super::protocol::{store_quorum, StoreSel, SyncMode};
 use super::{EpochStats, Strategy};
 
 #[derive(Debug, Default)]
@@ -31,6 +38,7 @@ impl Strategy for GpuBaseline {
         env.begin_epoch();
         let w_count = env.num_workers();
         let start = env.max_clock();
+        let mode = env.sync;
         let mut loss_sum = 0.0;
         let mut loss_n = 0usize;
 
@@ -59,41 +67,70 @@ impl Strategy for GpuBaseline {
             // stalls the whole fleet; dropped uploads fall out of the mean.
             let mut dropped = vec![false; w_count];
             for w in 0..w_count {
-                env.sync_crash(w);
-                if env.update_dropped(w) {
+                let mut tl = env.timeline(w);
+                if tl.enter_sync() {
                     dropped[w] = true;
                     continue;
                 }
                 let key = format!("{tag}/g{w}");
-                let t0 = env.workers[w].clock;
-                let done = env
-                    .gpu_store
-                    .put(t0, &key, grads[w].clone(), &mut env.ledger, &mut env.comm);
-                env.stages.add(Stage::Synchronize, done - t0);
-                env.workers[w].clock = done;
+                tl.put(StoreSel::Gpu, Stage::Synchronize, &key, grads[w].share());
             }
+
+            // Async mode: one earliest-visible quorum of uploads per round;
+            // every instance fetches that subset (plus its own local copy).
+            // BSP drives its fetches off `dropped` directly, so `picked`
+            // stays empty there.
+            let uploaded: Vec<usize> = (0..w_count).filter(|&j| !dropped[j]).collect();
+            let up_keys: Vec<String> =
+                uploaded.iter().map(|&j| format!("{tag}/g{j}")).collect();
+            let picked: Vec<usize> = match mode {
+                SyncMode::Bsp => Vec::new(),
+                SyncMode::Async { .. } => {
+                    let sub = store_quorum(env, StoreSel::Gpu, &up_keys, mode, round, 0);
+                    env.comm.stale_skips += (uploaded.len() - sub.len()) as u64;
+                    sub.into_iter().map(|i| uploaded[i]).collect()
+                }
+            };
+
             for w in 0..w_count {
                 let mut fetched = Vec::with_capacity(w_count);
-                for j in 0..w_count {
-                    if j == w {
-                        // The local copy survives even if the upload dropped.
-                        fetched.push(grads[w].clone());
-                        continue;
+                match mode {
+                    SyncMode::Bsp => {
+                        let mut tl = env.timeline(w);
+                        for j in 0..w_count {
+                            if j == w {
+                                // The local copy survives even if the
+                                // upload dropped.
+                                fetched.push(grads[w].share());
+                                continue;
+                            }
+                            if dropped[j] {
+                                continue;
+                            }
+                            let key = format!("{tag}/g{j}");
+                            fetched.push(tl.get(StoreSel::Gpu, Stage::Synchronize, &key)?);
+                        }
                     }
-                    if dropped[j] {
-                        continue;
+                    SyncMode::Async { .. } => {
+                        fetched.push(grads[w].share());
+                        let mut tl = env.timeline(w);
+                        for &j in &picked {
+                            if j == w {
+                                continue;
+                            }
+                            let key = format!("{tag}/g{j}");
+                            fetched.push(tl.get(StoreSel::Gpu, Stage::Synchronize, &key)?);
+                        }
                     }
-                    let key = format!("{tag}/g{j}");
-                    let t0 = env.workers[w].clock;
-                    let (done, g) =
-                        env.gpu_store.get(t0, &key, &mut env.ledger, &mut env.comm)?;
-                    env.stages.add(Stage::Synchronize, done - t0);
-                    env.workers[w].clock = done;
-                    fetched.push(g);
                 }
                 let mean = env.aggregate(w, &fetched)?;
                 env.apply_update(w, &mean, 1.0)?;
                 env.charge_sync(w, self.kind().batch_overhead());
+            }
+
+            // The round's uploads are consumed; free them (timeline-neutral).
+            for key in &up_keys {
+                env.gpu_store.delete(key);
             }
         }
 
@@ -170,5 +207,25 @@ mod tests {
         .unwrap();
         let astats = super::super::allreduce::AllReduce::new().run_epoch(&mut a).unwrap();
         assert!(gstats.epoch_secs * 2.0 < astats.epoch_secs);
+    }
+
+    #[test]
+    fn async_all_gather_fetches_fewer_gradients() {
+        let mut bsp = ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::GpuBaseline, "mobilenet", 8).unwrap(),
+        )
+        .unwrap();
+        let b = GpuBaseline::new().run_epoch(&mut bsp).unwrap();
+        let mut asy = ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::GpuBaseline, "mobilenet", 8)
+                .unwrap()
+                .with_sync(SyncMode::Async { staleness: 3 }),
+        )
+        .unwrap();
+        let a = GpuBaseline::new().run_epoch(&mut asy).unwrap();
+        use crate::metrics::CommKind;
+        assert!(asy.comm.ops(CommKind::Get) < bsp.comm.ops(CommKind::Get));
+        assert_eq!(asy.comm.stale_skips, 3 * 24);
+        assert!(a.epoch_secs <= b.epoch_secs, "async {} vs {}", a.epoch_secs, b.epoch_secs);
     }
 }

@@ -19,6 +19,7 @@ use crate::tensor::{SignificanceFilter, Slab};
 use crate::Result;
 
 use super::env::{ClusterEnv, Device};
+use super::protocol::{quorum_subset, RedisSel, SyncMode};
 use super::{EpochStats, Strategy};
 
 /// Default relative-norm threshold (calibrated so early epochs publish
@@ -96,6 +97,7 @@ impl Strategy for MlLess {
             // -- compute + filter + report --------------------------------
             let mut invs = Vec::with_capacity(w_count);
             let mut published: Vec<Option<(String, Slab)>> = Vec::with_capacity(w_count);
+            let mut report_done: Vec<VTime> = Vec::with_capacity(w_count);
             for w in 0..w_count {
                 let inv = env.lambda.begin_invocation(env.workers[w].clock, w);
                 env.workers[w].clock = inv.body_start;
@@ -111,9 +113,8 @@ impl Strategy for MlLess {
                 }
 
                 self.updates_proposed += 1;
-                let theta = env.workers[w].theta.clone();
                 let offer = if g.grad.is_real() {
-                    self.filters[w].offer(g.grad, &theta)
+                    self.filters[w].offer(g.grad, &env.workers[w].theta)
                 } else {
                     // Size-only gradients: model the filter's pass rate.
                     env.rng.bernoulli(self.virtual_publish_rate).then_some(g.grad)
@@ -125,35 +126,33 @@ impl Strategy for MlLess {
                 let report = if let Some(update) = offer {
                     self.updates_published += 1;
                     let key = format!("u/e{epoch}/r{round}/w{w}");
-                    let t0 = env.workers[w].clock;
-                    let t = env.shared_redis.set(t0, &key, update.clone(), &mut env.comm);
-                    env.stages.add(Stage::Synchronize, t - t0);
-                    env.workers[w].clock = t;
+                    env.timeline(w).redis_set(
+                        RedisSel::Shared,
+                        Stage::Synchronize,
+                        &key,
+                        update.share(),
+                    );
                     published.push(Some((key.clone(), update)));
                     key
                 } else {
                     published.push(None);
                     "none".to_string()
                 };
-                let t = env.queues.publish(
-                    env.workers[w].clock,
-                    &sup_topic,
-                    report,
-                    &mut env.ledger,
-                    &mut env.comm,
-                );
-                env.workers[w].clock = t;
+                report_done.push(env.timeline(w).notify(&sup_topic, report));
             }
 
-            // -- supervisor: wait for all reports, authorize fetch ---------
+            // -- supervisor: wait for reports, authorize fetch -------------
             // The supervisor is MLLess's single point of coordination: when
             // it crashes, *every* worker idles until it restarts and
             // re-polls the round's reports — there is no peer to reroute
-            // through (contrast with SPIRT's P2P sync above).
+            // through (contrast with SPIRT's P2P sync above). In async mode
+            // it authorizes the fetch once a bounded-staleness quorum of
+            // reports is in; late updates are skipped for the round.
+            let wait_count = env.sync.quorum(w_count);
             let t0 = self.supervisor_clock;
             let mut t = env
                 .queues
-                .wait_for(t0, &sup_topic, w_count, &mut env.ledger, &mut env.comm)?;
+                .wait_for(t0, &sup_topic, wait_count, &mut env.ledger, &mut env.comm)?;
             if let Some(restart) = env.supervisor_crash(round, t) {
                 t = t + restart;
             }
@@ -166,9 +165,29 @@ impl Strategy for MlLess {
                 &mut env.comm,
             );
 
-            // Keys published this round (the supervisor's fetch list).
-            let keys: Vec<String> =
-                published.iter().flatten().map(|(k, _)| k.clone()).collect();
+            // Workers whose reports made the quorum (all of them in BSP),
+            // then the published keys among them (the supervisor's fetch
+            // list). Quorum-excluded published updates are lost for the
+            // round, exactly like a late report in the real system.
+            let included: Vec<usize> = match env.sync {
+                SyncMode::Bsp => (0..w_count).collect(),
+                SyncMode::Async { .. } => {
+                    let mut sel = quorum_subset(&report_done, wait_count, round);
+                    sel.sort_unstable();
+                    sel
+                }
+            };
+            if env.sync.is_async() {
+                for w in 0..w_count {
+                    if !included.contains(&w) && published[w].is_some() {
+                        env.comm.stale_skips += 1;
+                    }
+                }
+            }
+            let keys: Vec<String> = included
+                .iter()
+                .filter_map(|&i| published[i].as_ref().map(|(k, _)| k.clone()))
+                .collect();
 
             // -- workers: wait for authorization, fetch + aggregate --------
             for w in 0..w_count {
@@ -176,26 +195,19 @@ impl Strategy for MlLess {
                 // the others proceed without waiting for it (they only wait
                 // on the supervisor's proceed message).
                 env.sync_crash(w);
-                let t0 = env.workers[w].clock;
-                let t = env
-                    .queues
-                    .wait_for(t0, &proceed_topic, 1, &mut env.ledger, &mut env.comm)?;
-                env.stages.add(Stage::Synchronize, t - t0);
-                env.workers[w].clock = t;
+                env.timeline(w).poll(&proceed_topic, 1)?;
 
                 let mut updates: Vec<Slab> = Vec::new();
                 for key in &keys {
                     // Own update is already local — no fetch needed.
                     if let Some((own_key, own)) = &published[w] {
                         if own_key == key {
-                            updates.push(own.clone());
+                            updates.push(own.share());
                             continue;
                         }
                     }
-                    let t0 = env.workers[w].clock;
-                    let (t, u) = env.shared_redis.get(t0, key, &mut env.comm)?;
-                    env.stages.add(Stage::Synchronize, t - t0);
-                    env.workers[w].clock = t;
+                    let u =
+                        env.timeline(w).redis_get(RedisSel::Shared, Stage::Synchronize, key)?;
                     updates.push(u);
                 }
 
@@ -216,8 +228,9 @@ impl Strategy for MlLess {
                 env.lambda.finish_invocation(invs[w], end, alloc_mb, &mut env.ledger);
             }
 
-            // Published updates are consumed; drop them from the store.
-            for key in &keys {
+            // Published updates are consumed (or quorum-skipped); drop them
+            // from the store.
+            for (key, _) in published.iter().flatten() {
                 env.shared_redis.delete(key);
             }
         }
@@ -295,5 +308,25 @@ mod tests {
         MlLess::new(0.0).run_epoch(&mut e).unwrap();
         // per round: W reports + 1 proceed -> at least 24 * 5 messages.
         assert!(e.queues.total_published() >= 24 * 5);
+    }
+
+    #[test]
+    fn async_quorum_trims_the_supervisor_round() {
+        use crate::coordinator::protocol::SyncMode;
+        let mut bsp = env(true);
+        let b = MlLess::new(0.0).run_epoch(&mut bsp).unwrap();
+
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::MlLess, "mobilenet", 4)
+            .unwrap()
+            .with_sync(SyncMode::Async { staleness: 1 });
+        let mut asy = ClusterEnv::new(cfg).unwrap();
+        let a = MlLess::new(0.0).run_epoch(&mut asy).unwrap();
+
+        // One published update per round misses the 3-of-4 quorum.
+        assert_eq!(asy.comm.stale_skips, 24);
+        use crate::metrics::CommKind;
+        assert!(asy.comm.ops(CommKind::Get) < bsp.comm.ops(CommKind::Get));
+        // Fewer scheduled updates -> lower per-round supervisor overhead.
+        assert!(a.epoch_secs < b.epoch_secs, "async {} vs bsp {}", a.epoch_secs, b.epoch_secs);
     }
 }

@@ -15,12 +15,20 @@
 //!
 //! Gradients are real slabs in end-to-end mode and size-only in cost-model
 //! mode; both traverse identical protocol code (see `tensor::Slab`).
+//!
+//! The clock/stage/ledger/fault bookkeeping around every substrate call is
+//! shared: strategies drive per-worker [`protocol::Timeline`] handles
+//! rather than hand-rolling it, and consult [`protocol::SyncMode`] at each
+//! synchronization point — [`SyncMode::Bsp`] reproduces the paper's
+//! bulk-synchronous rounds, [`SyncMode::Async`] relaxes them to a
+//! bounded-staleness quorum.
 
 pub mod allreduce;
 pub mod convergence;
 pub mod env;
 pub mod gpu;
 pub mod mlless;
+pub mod protocol;
 pub mod scatter_reduce;
 pub mod spirt;
 
@@ -30,6 +38,7 @@ use crate::Result;
 
 pub use convergence::EarlyStopper;
 pub use env::{ClusterEnv, EnvConfig, GradMode, WorkerState};
+pub use protocol::{Op, OpOut, RedisSel, StoreSel, SyncMode, Timeline};
 
 /// Per-epoch outcome of a strategy run.
 #[derive(Debug, Clone, Default)]

@@ -1,0 +1,560 @@
+//! Shared protocol plumbing: per-worker timelines, typed ops, sync policy.
+//!
+//! Every strategy used to hand-roll the same four-line sequence around each
+//! substrate call — read the worker clock, issue the op at that time, charge
+//! the elapsed span to a workflow stage, write the completion time back to
+//! the clock. That bookkeeping now lives in exactly one place: a
+//! [`Timeline`] is a borrowed handle on one worker's clock that executes
+//! protocol operations against the [`ClusterEnv`]'s substrates and does the
+//! clock-advance / stage-charge / ledger / fault-hook bookkeeping itself.
+//!
+//! Operations exist in two equivalent forms:
+//!
+//! * direct methods (`tl.put(..)`, `tl.poll(..)`) — what the strategies
+//!   call on their hot paths;
+//! * the [`Op`] value type executed via [`Timeline::exec`] — a typed,
+//!   inspectable description of the same operations (`Put`, `Get`,
+//!   `GetMany`, `Notify`, `Poll`, `RedisOp`, `Barrier`), used where a
+//!   protocol step is built up as data (tests, trace tooling).
+//!
+//! The module also owns the synchronization policy. [`SyncMode::Bsp`] is
+//! the paper's bulk-synchronous execution: every round waits for every
+//! contribution. [`SyncMode::Async`] relaxes the round barrier to a
+//! bounded-staleness quorum: a gather step must incorporate the earliest
+//! `participants - staleness` contributions (never fewer than one) and
+//! skips the rest, so a straggling or restarting worker delays nobody but
+//! itself. Skipped contributions are counted in
+//! [`CommStats::stale_skips`](crate::metrics::CommStats) — they are the
+//! price async pays in lost signal, and the scale sweep reports them next
+//! to the time/cost wins.
+
+use anyhow::Result;
+
+use crate::metrics::Stage;
+use crate::sim::VTime;
+use crate::tensor::Slab;
+
+use super::env::ClusterEnv;
+
+/// Round-synchronization policy — how long a worker waits at a sync point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Bulk-synchronous parallel: every round incorporates every live
+    /// contribution (the paper's execution model).
+    Bsp,
+    /// Bounded staleness: a gather proceeds once all but `staleness`
+    /// contributions are in; the stragglers' updates are skipped for the
+    /// round instead of stalling it.
+    Async { staleness: usize },
+}
+
+impl SyncMode {
+    /// How many of `participants` contributions a gather must wait for.
+    pub fn quorum(&self, participants: usize) -> usize {
+        match self {
+            SyncMode::Bsp => participants,
+            SyncMode::Async { staleness } => {
+                if participants == 0 {
+                    0
+                } else {
+                    participants.saturating_sub(*staleness).max(1)
+                }
+            }
+        }
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self, SyncMode::Async { .. })
+    }
+
+    /// Parse a CLI spec: `bsp`, `async` (staleness 2), or `async:<k>`.
+    pub fn parse(spec: &str) -> Result<SyncMode> {
+        let spec = spec.trim().to_ascii_lowercase();
+        Ok(match spec.as_str() {
+            "bsp" | "sync" => SyncMode::Bsp,
+            "async" => SyncMode::Async { staleness: 2 },
+            other => match other.strip_prefix("async:") {
+                Some(k) => SyncMode::Async { staleness: k.parse()? },
+                None => anyhow::bail!("unknown sync mode {other:?} (bsp|async[:k])"),
+            },
+        })
+    }
+
+    /// Short label for tables/CSV (`bsp`, `async:2`).
+    pub fn label(&self) -> String {
+        match self {
+            SyncMode::Bsp => "bsp".to_string(),
+            SyncMode::Async { staleness } => format!("async:{staleness}"),
+        }
+    }
+}
+
+/// Which object store a `Put`/`Get` targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreSel {
+    /// The shared gradient bucket (LambdaML AllReduce/ScatterReduce).
+    Shared,
+    /// The GPU-side bucket (EC2 bandwidth profile).
+    Gpu,
+}
+
+/// Which Redis instance a `RedisOp` targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RedisSel {
+    /// The timeline worker's own instance (SPIRT P2P database).
+    Own,
+    /// A peer worker's instance.
+    Peer(usize),
+    /// The shared instance (MLLess update store, LambdaML model store).
+    Shared,
+}
+
+/// A Redis operation payload for [`Op::RedisOp`].
+#[derive(Debug, Clone)]
+pub enum RedisVerb {
+    Set { key: String, payload: Slab },
+    Get { key: String },
+}
+
+/// A typed protocol operation, executable on a [`Timeline`].
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Upload a payload to an object store.
+    Put { store: StoreSel, stage: Stage, key: String, payload: Slab },
+    /// Download a payload (blocks on visibility).
+    Get { store: StoreSel, stage: Stage, key: String },
+    /// Pipelined bulk download over one connection.
+    GetMany { store: StoreSel, stage: Stage, keys: Vec<String> },
+    /// Publish a message to a queue topic (no stage charge; publishes are
+    /// fire-and-forget on the worker's clock).
+    Notify { topic: String, body: String },
+    /// Block until `count` messages are visible on a topic.
+    Poll { topic: String, count: usize },
+    /// Network transfer in or out of a Redis instance.
+    RedisOp { sel: RedisSel, stage: Stage, verb: RedisVerb },
+    /// Align every worker clock to the cluster maximum.
+    Barrier,
+}
+
+/// Result of executing one [`Op`].
+#[derive(Debug, Clone)]
+pub enum OpOut {
+    /// Completion time (ops that return no payload).
+    At(VTime),
+    /// A downloaded payload.
+    Payload(Slab),
+    /// Bulk-downloaded payloads.
+    Payloads(Vec<Slab>),
+}
+
+impl OpOut {
+    pub fn at(&self) -> Option<VTime> {
+        match self {
+            OpOut::At(t) => Some(*t),
+            _ => None,
+        }
+    }
+
+    pub fn into_payload(self) -> Option<Slab> {
+        match self {
+            OpOut::Payload(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Pick the `quorum` earliest-visible contributions.
+///
+/// Ties (identical visibility times — common in virtual mode, where
+/// homogeneous workers finish simultaneously) are broken by index *rotated
+/// by `rot`*, so repeated rounds spread the skipped slots across workers
+/// instead of starving a fixed suffix. Returns the chosen indices in
+/// visibility order — the order an async gather fetches them.
+pub fn quorum_subset(vis: &[VTime], quorum: usize, rot: usize) -> Vec<usize> {
+    let n = vis.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let r = rot % n;
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by_key(|&i| (vis[i], (i + n - r) % n));
+    idx.truncate(quorum.min(n));
+    idx
+}
+
+/// Async-gather selection over uploaded store keys: indices of the
+/// earliest-visible quorum among `keys`, where the quorum target counts
+/// `held` contributions the gatherer already has locally (ScatterReduce's
+/// kept chunk). Every key must already be uploaded. The BSP arms do not
+/// use this — they fetch everything in index order.
+pub fn store_quorum(
+    env: &ClusterEnv,
+    store: StoreSel,
+    keys: &[String],
+    mode: SyncMode,
+    rot: usize,
+    held: usize,
+) -> Vec<usize> {
+    let s = match store {
+        StoreSel::Shared => &env.store,
+        StoreSel::Gpu => &env.gpu_store,
+    };
+    let vis: Vec<VTime> =
+        keys.iter().map(|k| s.visible_at(k).expect("key not uploaded")).collect();
+    let need = mode.quorum(keys.len() + held).saturating_sub(held);
+    quorum_subset(&vis, need, rot)
+}
+
+/// A per-worker handle on the cluster: executes protocol ops at the
+/// worker's current virtual time and owns all the resulting bookkeeping.
+pub struct Timeline<'e> {
+    env: &'e mut ClusterEnv,
+    w: usize,
+}
+
+impl ClusterEnv {
+    /// Borrow worker `w`'s timeline handle.
+    pub fn timeline(&mut self, w: usize) -> Timeline<'_> {
+        Timeline { env: self, w }
+    }
+}
+
+impl Timeline<'_> {
+    pub fn worker(&self) -> usize {
+        self.w
+    }
+
+    /// The worker's current virtual time.
+    pub fn now(&self) -> VTime {
+        self.env.workers[self.w].clock
+    }
+
+    /// Advance the clock by `secs`, charging the span to `stage`.
+    pub fn advance(&mut self, stage: Stage, secs: f64) {
+        self.env.workers[self.w].clock += secs;
+        self.env.stages.add(stage, secs);
+    }
+
+    /// Fault hooks at a synchronization boundary: fire a planned sync-phase
+    /// crash (the worker restarts; its clock absorbs the downtime), then
+    /// report whether the worker's pending update is dropped in transit.
+    pub fn enter_sync(&mut self) -> bool {
+        self.env.sync_crash(self.w);
+        self.env.update_dropped(self.w)
+    }
+
+    /// Upload to an object store; completion time becomes the new clock.
+    pub fn put(&mut self, store: StoreSel, stage: Stage, key: &str, payload: Slab) -> VTime {
+        let env = &mut *self.env;
+        let t0 = env.workers[self.w].clock;
+        let s = match store {
+            StoreSel::Shared => &mut env.store,
+            StoreSel::Gpu => &mut env.gpu_store,
+        };
+        let done = s.put(t0, key, payload, &mut env.ledger, &mut env.comm);
+        env.stages.add(stage, done - t0);
+        env.workers[self.w].clock = done;
+        done
+    }
+
+    /// Download from an object store (blocks on visibility).
+    pub fn get(&mut self, store: StoreSel, stage: Stage, key: &str) -> Result<Slab> {
+        let env = &mut *self.env;
+        let t0 = env.workers[self.w].clock;
+        let s = match store {
+            StoreSel::Shared => &mut env.store,
+            StoreSel::Gpu => &mut env.gpu_store,
+        };
+        let (done, slab) = s.get(t0, key, &mut env.ledger, &mut env.comm)?;
+        env.stages.add(stage, done - t0);
+        env.workers[self.w].clock = done;
+        Ok(slab)
+    }
+
+    /// Pipelined bulk download over one connection (the AllReduce master's
+    /// reduce fetch).
+    pub fn get_many(
+        &mut self,
+        store: StoreSel,
+        stage: Stage,
+        keys: &[String],
+    ) -> Result<Vec<Slab>> {
+        let env = &mut *self.env;
+        let t0 = env.workers[self.w].clock;
+        let s = match store {
+            StoreSel::Shared => &mut env.store,
+            StoreSel::Gpu => &mut env.gpu_store,
+        };
+        let (done, slabs) = s.get_many(t0, keys, &mut env.ledger, &mut env.comm)?;
+        env.stages.add(stage, done - t0);
+        env.workers[self.w].clock = done;
+        Ok(slabs)
+    }
+
+    /// Transfer a payload into a Redis instance.
+    pub fn redis_set(&mut self, sel: RedisSel, stage: Stage, key: &str, payload: Slab) -> VTime {
+        let env = &mut *self.env;
+        let t0 = env.workers[self.w].clock;
+        let r = match sel {
+            RedisSel::Own => &mut env.worker_redis[self.w],
+            RedisSel::Peer(j) => &mut env.worker_redis[j],
+            RedisSel::Shared => &mut env.shared_redis,
+        };
+        let done = r.set(t0, key, payload, &mut env.comm);
+        env.stages.add(stage, done - t0);
+        env.workers[self.w].clock = done;
+        done
+    }
+
+    /// Transfer a payload out of a Redis instance (blocks on visibility).
+    pub fn redis_get(&mut self, sel: RedisSel, stage: Stage, key: &str) -> Result<Slab> {
+        let env = &mut *self.env;
+        let t0 = env.workers[self.w].clock;
+        let r = match sel {
+            RedisSel::Own => &mut env.worker_redis[self.w],
+            RedisSel::Peer(j) => &mut env.worker_redis[j],
+            RedisSel::Shared => &mut env.shared_redis,
+        };
+        let (done, slab) = r.get(t0, key, &mut env.comm)?;
+        env.stages.add(stage, done - t0);
+        env.workers[self.w].clock = done;
+        Ok(slab)
+    }
+
+    /// Publish to a queue topic; the clock jumps to the message's
+    /// visibility time. Publishes are not charged to a stage (they are
+    /// sub-millisecond next to the payload transfers around them).
+    pub fn notify(&mut self, topic: &str, body: impl Into<String>) -> VTime {
+        let env = &mut *self.env;
+        let t0 = env.workers[self.w].clock;
+        let t = env.queues.publish(t0, topic, body, &mut env.ledger, &mut env.comm);
+        env.workers[self.w].clock = t;
+        t
+    }
+
+    /// Block until `count` messages are visible on `topic`; the wait is
+    /// charged as synchronization time.
+    pub fn poll(&mut self, topic: &str, count: usize) -> Result<VTime> {
+        let env = &mut *self.env;
+        let t0 = env.workers[self.w].clock;
+        let t = env.queues.wait_for(t0, topic, count, &mut env.ledger, &mut env.comm)?;
+        env.stages.add(Stage::Synchronize, t - t0);
+        env.workers[self.w].clock = t;
+        Ok(t)
+    }
+
+    /// Execute a typed [`Op`].
+    pub fn exec(&mut self, op: Op) -> Result<OpOut> {
+        Ok(match op {
+            Op::Put { store, stage, key, payload } => {
+                OpOut::At(self.put(store, stage, &key, payload))
+            }
+            Op::Get { store, stage, key } => OpOut::Payload(self.get(store, stage, &key)?),
+            Op::GetMany { store, stage, keys } => {
+                OpOut::Payloads(self.get_many(store, stage, &keys)?)
+            }
+            Op::Notify { topic, body } => OpOut::At(self.notify(&topic, body)),
+            Op::Poll { topic, count } => OpOut::At(self.poll(&topic, count)?),
+            Op::RedisOp { sel, stage, verb } => match verb {
+                RedisVerb::Set { key, payload } => {
+                    OpOut::At(self.redis_set(sel, stage, &key, payload))
+                }
+                RedisVerb::Get { key } => OpOut::Payload(self.redis_get(sel, stage, &key)?),
+            },
+            Op::Barrier => OpOut::At(self.env.barrier()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::FrameworkKind;
+    use crate::coordinator::env::EnvConfig;
+    use crate::metrics::CommKind;
+
+    fn env(workers: usize) -> ClusterEnv {
+        ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", workers).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn quorum_math() {
+        assert_eq!(SyncMode::Bsp.quorum(8), 8);
+        assert_eq!(SyncMode::Async { staleness: 2 }.quorum(8), 6);
+        assert_eq!(SyncMode::Async { staleness: 10 }.quorum(8), 1);
+        assert_eq!(SyncMode::Async { staleness: 0 }.quorum(8), 8);
+        assert_eq!(SyncMode::Async { staleness: 3 }.quorum(0), 0);
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        assert_eq!(SyncMode::parse("bsp").unwrap(), SyncMode::Bsp);
+        assert_eq!(SyncMode::parse("async").unwrap(), SyncMode::Async { staleness: 2 });
+        assert_eq!(SyncMode::parse("async:5").unwrap(), SyncMode::Async { staleness: 5 });
+        assert!(SyncMode::parse("bulk").is_err());
+        assert_eq!(SyncMode::Async { staleness: 5 }.label(), "async:5");
+        assert_eq!(SyncMode::Bsp.label(), "bsp");
+    }
+
+    #[test]
+    fn quorum_subset_orders_by_visibility_then_rotated_index() {
+        let vis = vec![
+            VTime::from_secs(3.0),
+            VTime::from_secs(1.0),
+            VTime::from_secs(2.0),
+            VTime::from_secs(1.0),
+        ];
+        // rot 0: ties by plain index -> 1 before 3.
+        assert_eq!(quorum_subset(&vis, 3, 0), vec![1, 3, 2]);
+        // rot 3 reorders the tie: (i + n - 3) % n maps 3 -> 0, 1 -> 2.
+        assert_eq!(quorum_subset(&vis, 3, 3), vec![3, 1, 2]);
+        // quorum larger than n is clamped.
+        assert_eq!(quorum_subset(&vis, 9, 0).len(), 4);
+        assert!(quorum_subset(&[], 3, 0).is_empty());
+    }
+
+    #[test]
+    fn store_quorum_selects_earliest_uploads_minus_held() {
+        let mut e = env(3);
+        let n = e.n_params;
+        let keys: Vec<String> = (0..3).map(|w| format!("g{w}")).collect();
+        // Stagger visibility: worker 2 uploads much later.
+        e.timeline(0).put(StoreSel::Shared, Stage::Synchronize, "g0", Slab::virtual_of(n));
+        e.timeline(1).put(StoreSel::Shared, Stage::Synchronize, "g1", Slab::virtual_of(n));
+        e.timeline(2).advance(Stage::Synchronize, 100.0);
+        e.timeline(2).put(StoreSel::Shared, Stage::Synchronize, "g2", Slab::virtual_of(n));
+
+        let mode = SyncMode::Async { staleness: 1 };
+        // quorum(3) = 2: the two early uploads, late one skipped.
+        let sel = store_quorum(&e, StoreSel::Shared, &keys, mode, 0, 0);
+        assert_eq!(sel.len(), 2);
+        assert!(!sel.contains(&2), "the late upload must be skipped: {sel:?}");
+        // One contribution already held: quorum(3+1)=3, minus held -> 2.
+        let sel = store_quorum(&e, StoreSel::Shared, &keys, mode, 0, 1);
+        assert_eq!(sel.len(), 2);
+        // BSP-equivalent quorum via staleness 0 takes everything.
+        let zero = SyncMode::Async { staleness: 0 };
+        assert_eq!(store_quorum(&e, StoreSel::Shared, &keys, zero, 0, 0).len(), 3);
+    }
+
+    #[test]
+    fn timeline_put_advances_clock_and_charges_stage() {
+        let mut e = env(2);
+        let n = e.n_params;
+        let done = e.timeline(0).put(
+            StoreSel::Shared,
+            Stage::Synchronize,
+            "k",
+            Slab::virtual_of(n),
+        );
+        assert_eq!(e.workers[0].clock, done);
+        assert!(done.secs() > 0.0);
+        assert_eq!(e.workers[1].clock, VTime::ZERO, "peer untouched");
+        assert!(e.stages.get(Stage::Synchronize) > 0.0);
+        assert_eq!(e.comm.ops(CommKind::Put), 1);
+        assert!(e.ledger.total_paper() > 0.0, "request fee charged");
+    }
+
+    #[test]
+    fn timeline_get_blocks_on_visibility() {
+        let mut e = env(2);
+        let n = e.n_params;
+        e.timeline(0).put(StoreSel::Shared, Stage::Synchronize, "k", Slab::virtual_of(n));
+        let vis = e.store.visible_at("k").unwrap();
+        let g = e.timeline(1).get(StoreSel::Shared, Stage::Synchronize, "k").unwrap();
+        assert_eq!(g.len(), n);
+        assert!(e.workers[1].clock > vis, "reader waits for the writer");
+    }
+
+    #[test]
+    fn timeline_notify_poll_roundtrip() {
+        let mut e = env(2);
+        e.timeline(0).notify("t", "w0");
+        e.timeline(1).notify("t", "w1");
+        let t = e.timeline(0).poll("t", 2).unwrap();
+        assert_eq!(e.workers[0].clock, t);
+        assert!(e.stages.get(Stage::Synchronize) > 0.0);
+    }
+
+    #[test]
+    fn exec_matches_direct_methods() {
+        // The typed-op façade and the direct methods must produce identical
+        // timelines for the same op sequence.
+        let mut a = env(2);
+        let mut b = env(2);
+        let n = a.n_params;
+
+        a.timeline(0).put(StoreSel::Shared, Stage::Synchronize, "k", Slab::virtual_of(n));
+        let ga = a.timeline(1).get(StoreSel::Shared, Stage::Synchronize, "k").unwrap();
+
+        let out = b
+            .timeline(0)
+            .exec(Op::Put {
+                store: StoreSel::Shared,
+                stage: Stage::Synchronize,
+                key: "k".into(),
+                payload: Slab::virtual_of(n),
+            })
+            .unwrap();
+        assert!(out.at().is_some());
+        let gb = b
+            .timeline(1)
+            .exec(Op::Get {
+                store: StoreSel::Shared,
+                stage: Stage::Synchronize,
+                key: "k".into(),
+            })
+            .unwrap()
+            .into_payload()
+            .unwrap();
+
+        assert_eq!(ga.len(), gb.len());
+        for w in 0..2 {
+            assert_eq!(
+                a.workers[w].clock.secs().to_bits(),
+                b.workers[w].clock.secs().to_bits(),
+                "worker {w} clock must be bit-identical across the two forms"
+            );
+        }
+    }
+
+    #[test]
+    fn exec_barrier_aligns_clocks() {
+        let mut e = env(3);
+        e.timeline(1).advance(Stage::Synchronize, 5.0);
+        let out = e.timeline(0).exec(Op::Barrier).unwrap();
+        assert_eq!(out.at().unwrap().secs(), 5.0);
+        assert!(e.workers.iter().all(|w| w.clock.secs() == 5.0));
+    }
+
+    #[test]
+    fn timeline_redis_ops_move_payloads() {
+        let mut e = env(2);
+        e.timeline(0).redis_set(
+            RedisSel::Own,
+            Stage::Synchronize,
+            "g",
+            Slab::from_vec(vec![1.0, 2.0]),
+        );
+        let g = e.timeline(1).redis_get(RedisSel::Peer(0), Stage::Synchronize, "g").unwrap();
+        assert_eq!(g.as_slice().unwrap(), &[1.0, 2.0]);
+        assert!(e.workers[1].clock > VTime::ZERO);
+    }
+
+    #[test]
+    fn enter_sync_consults_fault_hooks() {
+        use crate::faults::FaultPlan;
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2)
+            .unwrap()
+            .with_faults(FaultPlan::none().drop_updates(1, 1, 0, Some(1)));
+        let mut e = ClusterEnv::new(cfg).unwrap();
+        e.begin_epoch();
+        e.faults.note_compute(0);
+        e.faults.note_compute(1);
+        assert!(!e.timeline(0).enter_sync());
+        assert!(e.timeline(1).enter_sync(), "planned drop must surface");
+    }
+}

@@ -7,6 +7,12 @@
 //! the request count grows as `O(W)` per worker per round — which is why
 //! AllReduce overtakes it for small models at high worker counts while
 //! ScatterReduce wins on large models (Fig. 2).
+//!
+//! Under [`SyncMode::Async`] each chunk owner reduces over the
+//! earliest-visible quorum of incoming chunks instead of all of them. The
+//! all-gather still needs every partial (each covers a distinct parameter
+//! range), so the chunk *owner's* lateness survives async — a structural
+//! property of the topology the scale sweep makes visible.
 
 use crate::cloud::FrameworkKind;
 use crate::metrics::Stage;
@@ -14,6 +20,7 @@ use crate::tensor::{ChunkPlan, Slab};
 use crate::Result;
 
 use super::env::{ClusterEnv, Device};
+use super::protocol::{store_quorum, StoreSel, SyncMode};
 use super::{EpochStats, Strategy};
 
 #[derive(Debug, Default)]
@@ -24,41 +31,42 @@ impl ScatterReduce {
         ScatterReduce
     }
 
-    /// One chunked synchronization round (factored out for Fig. 2).
+    /// One chunked synchronization round (factored out for Fig. 2). `round`
+    /// seeds the async quorum's tie-rotation only; BSP ignores it.
     ///
     /// Fault semantics: a sync-phase crash makes the crashed worker a late
     /// *chunk owner* — every peer needs its partial aggregate, so all of
     /// them stall behind its restart. A dropped update removes that
     /// worker's gradient (its outgoing chunks and its own kept chunk) from
-    /// the round's aggregate.
+    /// the round's aggregate. In async mode late *incoming* chunks fall out
+    /// of the owner's quorum, but a late owner still stalls the all-gather.
     pub fn sync_round(
         &self,
         env: &mut ClusterEnv,
+        round: usize,
         round_tag: &str,
         grads: Vec<Slab>,
     ) -> Result<()> {
         let w_count = env.num_workers();
+        let mode = env.sync;
         let plan = ChunkPlan::new(env.n_params, w_count)?;
 
         // Scatter: worker w uploads chunk j (j != w) for peer j; keeps own.
         let mut own_chunks: Vec<Option<Slab>> = vec![None; w_count];
         let mut dropped = vec![false; w_count];
-        for w in 0..w_count {
-            env.sync_crash(w);
-            if env.update_dropped(w) {
+        for (w, grad) in grads.into_iter().enumerate() {
+            let mut tl = env.timeline(w);
+            if tl.enter_sync() {
                 dropped[w] = true;
                 continue;
             }
-            let chunks = plan.split(&grads[w])?;
+            let chunks = plan.split(&grad)?;
             for (j, chunk) in chunks.into_iter().enumerate() {
                 if j == w {
                     own_chunks[w] = Some(chunk);
                 } else {
                     let key = format!("{round_tag}/c{w}to{j}");
-                    let t0 = env.workers[w].clock;
-                    let done = env.store.put(t0, &key, chunk, &mut env.ledger, &mut env.comm);
-                    env.stages.add(Stage::Synchronize, done - t0);
-                    env.workers[w].clock = done;
+                    tl.put(StoreSel::Shared, Stage::Synchronize, &key, chunk);
                 }
             }
         }
@@ -66,21 +74,27 @@ impl ScatterReduce {
         // Reduce: worker w aggregates everyone's chunk w, uploads partial.
         for w in 0..w_count {
             let mut parts: Vec<Slab> = own_chunks[w].take().into_iter().collect();
-            for j in 0..w_count {
-                if j == w || dropped[j] {
-                    continue;
+            let contrib: Vec<String> = (0..w_count)
+                .filter(|&j| j != w && !dropped[j])
+                .map(|j| format!("{round_tag}/c{j}to{w}"))
+                .collect();
+            let picked: Vec<usize> = match mode {
+                SyncMode::Bsp => (0..contrib.len()).collect(),
+                // The quorum counts the owner's kept chunk too.
+                SyncMode::Async { .. } => {
+                    store_quorum(env, StoreSel::Shared, &contrib, mode, round + w, parts.len())
                 }
-                let key = format!("{round_tag}/c{j}to{w}");
-                let t0 = env.workers[w].clock;
-                let (done, c) = env.store.get(t0, &key, &mut env.ledger, &mut env.comm)?;
-                env.stages.add(Stage::Synchronize, done - t0);
-                env.workers[w].clock = done;
-                parts.push(c);
+            };
+            env.comm.stale_skips += (contrib.len() - picked.len()) as u64;
+            {
+                let mut tl = env.timeline(w);
+                for &i in &picked {
+                    parts.push(tl.get(StoreSel::Shared, Stage::Synchronize, &contrib[i])?);
+                }
             }
             let agg_secs =
                 w_count as f64 * (plan.chunk_len(w) as f64 * 4.0) / super::env::LOCAL_AGG_BW;
-            env.workers[w].clock += agg_secs;
-            env.stages.add(Stage::Synchronize, agg_secs);
+            env.timeline(w).advance(Stage::Synchronize, agg_secs);
             let partial = if parts.is_empty() {
                 // Every contribution to this chunk was dropped: zero update.
                 if env.is_real() {
@@ -91,32 +105,39 @@ impl ScatterReduce {
             } else {
                 env.aggregate(w, &parts)?
             };
-            let t0 = env.workers[w].clock;
-            let done = env.store.put(
-                t0,
+            env.timeline(w).put(
+                StoreSel::Shared,
+                Stage::Synchronize,
                 &format!("{round_tag}/agg{w}"),
                 partial,
-                &mut env.ledger,
-                &mut env.comm,
             );
-            env.stages.add(Stage::Synchronize, done - t0);
-            env.workers[w].clock = done;
         }
 
         // All-gather: everyone downloads the other partials, reassembles,
-        // and applies the full mean gradient.
+        // and applies the full mean gradient. Every partial covers a
+        // distinct parameter range, so all W are required in both modes.
         for w in 0..w_count {
-            let mut parts: Vec<Option<Slab>> = vec![None; w_count];
-            for j in 0..w_count {
-                let key = format!("{round_tag}/agg{j}");
-                let t0 = env.workers[w].clock;
-                let (done, c) = env.store.get(t0, &key, &mut env.ledger, &mut env.comm)?;
-                env.stages.add(Stage::Synchronize, done - t0);
-                env.workers[w].clock = done;
-                parts[j] = Some(c);
+            let mut parts: Vec<Slab> = Vec::with_capacity(w_count);
+            {
+                let mut tl = env.timeline(w);
+                for j in 0..w_count {
+                    let key = format!("{round_tag}/agg{j}");
+                    parts.push(tl.get(StoreSel::Shared, Stage::Synchronize, &key)?);
+                }
             }
-            let full = plan.concat(&parts.into_iter().map(|c| c.unwrap()).collect::<Vec<_>>())?;
+            let full = plan.concat(&parts)?;
             env.apply_update(w, &full, 1.0)?;
+        }
+
+        // The round's chunks and partials are consumed; free them
+        // (timeline-neutral).
+        for w in 0..w_count {
+            for j in 0..w_count {
+                if j != w {
+                    env.store.delete(&format!("{round_tag}/c{w}to{j}"));
+                }
+            }
+            env.store.delete(&format!("{round_tag}/agg{w}"));
         }
         Ok(())
     }
@@ -155,7 +176,7 @@ impl Strategy for ScatterReduce {
                 grads.push(g.grad);
             }
 
-            self.sync_round(env, &tag, grads)?;
+            self.sync_round(env, round, &tag, grads)?;
 
             let overhead = self.kind().batch_overhead();
             for w in 0..w_count {
@@ -234,5 +255,25 @@ mod tests {
         ScatterReduce::new().run_epoch(&mut b).unwrap();
         // ops per worker per round ~ 3(W-1)+1: grows superlinearly in total
         assert!(b.comm.total_ops() > 2 * a.comm.total_ops());
+    }
+
+    #[test]
+    fn async_thins_the_chunk_barrier() {
+        let mut bsp = env(8, "mobilenet");
+        let b = ScatterReduce::new().run_epoch(&mut bsp).unwrap();
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::ScatterReduce, "mobilenet", 8)
+            .unwrap()
+            .with_sync(SyncMode::Async { staleness: 2 });
+        let mut asy = ClusterEnv::new(cfg).unwrap();
+        let a = ScatterReduce::new().run_epoch(&mut asy).unwrap();
+
+        // Each chunk owner reduces over 6 of 8 contributions: fewer GETs
+        // and 2 skips per owner per round.
+        assert_eq!(asy.comm.stale_skips, 2 * 8 * 24);
+        use crate::metrics::CommKind;
+        assert!(asy.comm.ops(CommKind::Get) < bsp.comm.ops(CommKind::Get));
+        // The all-gather still serializes on partials, so async helps less
+        // than in AllReduce — but it must not be slower.
+        assert!(a.epoch_secs <= b.epoch_secs, "async {} vs bsp {}", a.epoch_secs, b.epoch_secs);
     }
 }

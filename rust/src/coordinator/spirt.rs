@@ -27,6 +27,7 @@ use crate::tensor::Slab;
 use crate::Result;
 
 use super::env::{ClusterEnv, Device};
+use super::protocol::RedisSel;
 use super::{EpochStats, Strategy};
 
 #[derive(Debug, Default)]
@@ -41,11 +42,8 @@ impl Spirt {
     fn ensure_theta_in_db(&self, env: &mut ClusterEnv) {
         for w in 0..env.num_workers() {
             if !env.worker_redis[w].contains("theta") {
-                let t0 = env.workers[w].clock;
-                let theta = env.workers[w].theta.clone();
-                let done = env.worker_redis[w].set(t0, "theta", theta, &mut env.comm);
-                env.workers[w].clock = done;
-                env.stages.add(Stage::FetchDataset, done - t0);
+                let theta = env.workers[w].theta.share();
+                env.timeline(w).redis_set(RedisSel::Own, Stage::FetchDataset, "theta", theta);
             }
         }
     }
@@ -171,28 +169,24 @@ impl Strategy for Spirt {
         // its own Redis snapshot), but its *peers do not wait* — they count
         // only live workers on the sync queue and reroute the P2P exchange
         // around the dead peer's average. That is SPIRT's P2P advantage
-        // over the master/supervisor topologies, made measurable.
+        // over the master/supervisor topologies, made measurable. Async
+        // mode thins the queue wait further to a bounded-staleness quorum
+        // and skips peer averages that are not yet visible.
         let mut down = vec![false; w_count];
         for (w, d) in down.iter_mut().enumerate() {
             *d = env.sync_crash(w).is_some();
         }
         let live = down.iter().filter(|d| !**d).count().max(1);
+        let wait_count = env.sync.quorum(live);
 
         let topic = format!("spirt/sync/e{epoch}");
         for w in 0..w_count {
-            let t0 = env.stepfn.enter_stage(env.workers[w].clock, "sync", &mut env.ledger);
-            let t = env
-                .queues
-                .publish(t0, &topic, format!("w{w}"), &mut env.ledger, &mut env.comm);
-            env.workers[w].clock = t;
+            env.workers[w].clock =
+                env.stepfn.enter_stage(env.workers[w].clock, "sync", &mut env.ledger);
+            env.timeline(w).notify(&topic, format!("w{w}"));
         }
         for w in 0..w_count {
-            let t0 = env.workers[w].clock;
-            let t = env
-                .queues
-                .wait_for(t0, &topic, live, &mut env.ledger, &mut env.comm)?;
-            env.stages.add(Stage::Synchronize, t - t0);
-            env.workers[w].clock = t;
+            env.timeline(w).poll(&topic, wait_count)?;
         }
 
         let avg_key = format!("avg/e{epoch}");
@@ -209,10 +203,17 @@ impl Strategy for Spirt {
                     env.recovery.rerouted_fetches += 1;
                     continue;
                 }
-                let t0 = env.workers[w].clock;
-                let (t, g) = env.worker_redis[j].get(t0, &avg_key, &mut env.comm)?;
-                env.stages.add(Stage::Synchronize, t - t0);
-                env.workers[w].clock = t;
+                if env.sync.is_async() {
+                    // Bounded staleness: take only averages already visible
+                    // at this worker's clock; the quorum wait above
+                    // guarantees enough of them.
+                    let vis = env.worker_redis[j].visible_at(&avg_key).expect("peer avg stored");
+                    if vis > env.workers[w].clock {
+                        env.comm.stale_skips += 1;
+                        continue;
+                    }
+                }
+                let g = env.timeline(w).redis_get(RedisSel::Peer(j), Stage::Synchronize, &avg_key)?;
                 avgs.push(g);
             }
 
@@ -220,11 +221,12 @@ impl Strategy for Spirt {
             let agg_secs = env.local_agg_secs(avgs.len());
             env.charge_sync(w, agg_secs);
             let final_grad = env.aggregate(w, &avgs)?;
-            let t0 = env.workers[w].clock;
-            let t =
-                env.worker_redis[w].set(t0, &format!("final/e{epoch}"), final_grad, &mut env.comm);
-            env.stages.add(Stage::Synchronize, t - t0);
-            env.workers[w].clock = t;
+            env.timeline(w).redis_set(
+                RedisSel::Own,
+                Stage::Synchronize,
+                &format!("final/e{epoch}"),
+                final_grad,
+            );
 
             // ---- Stage 4: in-database model update (fused kernel) --------
             // Gradient accumulation applies ONE averaged update per epoch;
@@ -372,6 +374,36 @@ mod tests {
             "faulty {:.1}s vs clean {:.1}s",
             f.epoch_secs,
             c.epoch_secs
+        );
+    }
+
+    #[test]
+    fn async_quorum_decouples_fast_workers_from_a_straggler() {
+        use crate::coordinator::protocol::SyncMode;
+        use crate::faults::FaultPlan;
+        let plan = FaultPlan::none().straggler(3, 1, 0, 4.0, None);
+
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::Spirt, "mobilenet", 4)
+            .unwrap()
+            .with_faults(plan.clone());
+        let mut bsp = ClusterEnv::new(cfg).unwrap();
+        Spirt::new().run_epoch(&mut bsp).unwrap();
+
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::Spirt, "mobilenet", 4)
+            .unwrap()
+            .with_faults(plan)
+            .with_sync(SyncMode::Async { staleness: 2 });
+        let mut asy = ClusterEnv::new(cfg).unwrap();
+        Spirt::new().run_epoch(&mut asy).unwrap();
+
+        // Healthy workers wait for a 2-report quorum instead of all 4, and
+        // skip the straggler's not-yet-visible average.
+        assert!(asy.comm.stale_skips > 0, "late averages must be skipped");
+        assert!(
+            asy.workers[0].clock < bsp.workers[0].clock,
+            "healthy worker decoupled: {} vs {}",
+            asy.workers[0].clock,
+            bsp.workers[0].clock
         );
     }
 

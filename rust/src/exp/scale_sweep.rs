@@ -1,0 +1,334 @@
+//! Scale sweep: all five architectures from paper scale to 256 workers,
+//! under both synchronization policies.
+//!
+//! The paper evaluates 4–16 workers, but its central claims are about
+//! *scalability*: the AllReduce master bottleneck, ScatterReduce's
+//! request-count blowup, SPIRT's P2P fan-out. This driver extends the
+//! testbed along the two axes the paper leaves open — worker count
+//! (default 4 → 256) and synchronization policy (BSP vs bounded-staleness
+//! async, see `coordinator::protocol::SyncMode`) — and reports per-epoch
+//! time, cost, wire traffic, request count and quorum skips for every
+//! (architecture × W × mode) point.
+//!
+//! Each point is an independent deterministic simulation (its own
+//! `ClusterEnv`, fixed seed), so points run in parallel on std threads:
+//! the sweep's wall time is the slowest point, not the sum. Results are
+//! identical for any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::cloud::FrameworkKind;
+use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
+use crate::util::table::{Align, Table};
+use crate::util::{fmt_bytes, fmt_duration};
+use crate::Result;
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Calibrated architecture profile (`mobilenet`, `resnet18`, ...).
+    pub arch: String,
+    /// Worker counts to sweep.
+    pub worker_counts: Vec<usize>,
+    /// Synchronization policies to sweep.
+    pub modes: Vec<SyncMode>,
+    /// Gradient batches per worker per epoch (paper: 24).
+    pub batches_per_epoch: usize,
+    /// Epochs simulated per point (metrics are per-epoch averages).
+    pub epochs: usize,
+    /// Simulation threads (0 = one per available core).
+    pub threads: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            arch: "mobilenet".to_string(),
+            worker_counts: vec![4, 16, 64, 256],
+            modes: vec![SyncMode::Bsp, SyncMode::Async { staleness: 2 }],
+            batches_per_epoch: 24,
+            epochs: 1,
+            threads: 0,
+        }
+    }
+}
+
+/// One (architecture × worker count × sync mode) measurement. Every
+/// quantity is a per-epoch mean over the simulated epochs, so rows from
+/// runs with different `--epochs` stay comparable.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub framework: FrameworkKind,
+    pub workers: usize,
+    pub mode: SyncMode,
+    /// Mean epoch wall time on the virtual timeline (seconds).
+    pub epoch_secs: f64,
+    /// Mean cost per epoch under the paper's model (USD).
+    pub cost_usd: f64,
+    /// Mean bytes per epoch that crossed the network.
+    pub wire_bytes: u64,
+    /// Mean substrate operations issued per epoch.
+    pub total_ops: u64,
+    /// Mean Lambda function duration over the run (0 for the GPU baseline).
+    pub mean_fn_secs: f64,
+    /// Mean contributions per epoch skipped by the staleness policy.
+    pub stale_skips: u64,
+}
+
+fn run_point(
+    cfg: &SweepConfig,
+    fw: FrameworkKind,
+    workers: usize,
+    mode: SyncMode,
+) -> Result<SweepPoint> {
+    let mut ec = EnvConfig::virtual_paper(fw, &cfg.arch, workers)?.with_sync(mode);
+    ec.batches_per_epoch = cfg.batches_per_epoch;
+    let mut env = ClusterEnv::new(ec)?;
+    let mut strategy = strategy_for(fw);
+    let epochs = cfg.epochs.max(1);
+    let mut epoch_secs = 0.0;
+    let mut mean_fn_secs = 0.0;
+    for _ in 0..epochs {
+        let stats = strategy.run_epoch(&mut env)?;
+        epoch_secs += stats.epoch_secs;
+        // `mean_duration` is cumulative over the whole run already.
+        mean_fn_secs = stats.mean_fn_secs;
+    }
+    Ok(SweepPoint {
+        framework: fw,
+        workers,
+        mode,
+        epoch_secs: epoch_secs / epochs as f64,
+        cost_usd: env.ledger.total_paper() / epochs as f64,
+        wire_bytes: env.comm.wire_bytes() / epochs as u64,
+        total_ops: env.comm.total_ops() / epochs as u64,
+        mean_fn_secs,
+        stale_skips: env.comm.stale_skips / epochs as u64,
+    })
+}
+
+/// Run the sweep. Points are scheduled over a work-stealing cursor onto
+/// `cfg.threads` std threads; output order is deterministic (framework ×
+/// worker count × mode, as configured) regardless of thread count.
+pub fn run(cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
+    let tasks: Vec<(FrameworkKind, usize, SyncMode)> = FrameworkKind::ALL
+        .iter()
+        .flat_map(|&fw| {
+            cfg.worker_counts.iter().flat_map(move |&w| {
+                cfg.modes.iter().map(move |&m| (fw, w, m))
+            })
+        })
+        .collect();
+    if tasks.is_empty() {
+        return Ok(Vec::new());
+    }
+    let threads = if cfg.threads > 0 {
+        cfg.threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+    .clamp(1, tasks.len());
+
+    let cursor = AtomicUsize::new(0);
+    let outputs: Vec<Vec<(usize, Result<SweepPoint>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= tasks.len() {
+                            break;
+                        }
+                        let (fw, w, mode) = tasks[i];
+                        out.push((i, run_point(cfg, fw, w, mode)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sweep thread panicked")).collect()
+    });
+
+    let mut indexed: Vec<(usize, SweepPoint)> = Vec::with_capacity(tasks.len());
+    for (i, res) in outputs.into_iter().flatten() {
+        indexed.push((i, res?));
+    }
+    indexed.sort_by_key(|(i, _)| *i);
+    Ok(indexed.into_iter().map(|(_, p)| p).collect())
+}
+
+/// Render the sweep as a table.
+pub fn render(points: &[SweepPoint], cfg: &SweepConfig) -> String {
+    let mut t = Table::new(&[
+        "Framework",
+        "W",
+        "Mode",
+        "Epoch",
+        "Cost ($)",
+        "Wire",
+        "Ops",
+        "Fn (s)",
+        "Skips",
+    ])
+    .title(format!(
+        "Scale sweep — {} profile, {} batches/epoch (virtual gradients)",
+        cfg.arch, cfg.batches_per_epoch
+    ))
+    .align(&[
+        Align::Left,
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let mut last_fw: Option<FrameworkKind> = None;
+    for p in points {
+        if last_fw.is_some() && last_fw != Some(p.framework) {
+            t.rule();
+        }
+        last_fw = Some(p.framework);
+        t.row(vec![
+            p.framework.name().to_string(),
+            p.workers.to_string(),
+            p.mode.label(),
+            fmt_duration(p.epoch_secs),
+            format!("{:.4}", p.cost_usd),
+            fmt_bytes(p.wire_bytes),
+            p.total_ops.to_string(),
+            format!("{:.2}", p.mean_fn_secs),
+            p.stale_skips.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV export (one row per point).
+pub fn render_csv(points: &[SweepPoint]) -> String {
+    let mut out = String::from(
+        "framework,workers,mode,epoch_secs,cost_usd,wire_bytes,total_ops,mean_fn_secs,\
+         stale_skips\n",
+    );
+    for p in points {
+        out.push_str(&format!(
+            "{},{},{},{:.6},{:.6},{},{},{:.6},{}\n",
+            p.framework.name(),
+            p.workers,
+            p.mode.label(),
+            p.epoch_secs,
+            p.cost_usd,
+            p.wire_bytes,
+            p.total_ops,
+            p.mean_fn_secs,
+            p.stale_skips
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SweepConfig {
+        SweepConfig {
+            arch: "mobilenet".to_string(),
+            worker_counts: vec![4, 8],
+            modes: vec![SyncMode::Bsp, SyncMode::Async { staleness: 2 }],
+            batches_per_epoch: 4,
+            epochs: 1,
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_every_architecture_and_mode() {
+        let cfg = small_cfg();
+        let points = run(&cfg).unwrap();
+        assert_eq!(points.len(), 5 * 2 * 2);
+        for p in &points {
+            assert!(p.epoch_secs > 0.0, "{:?}", p);
+            assert!(p.cost_usd > 0.0, "{:?}", p);
+            assert!(p.total_ops > 0, "{:?}", p);
+        }
+        // Output order is (framework, W, mode) as configured.
+        assert_eq!(points[0].framework, FrameworkKind::Spirt);
+        assert_eq!(points[0].workers, 4);
+        assert_eq!(points[0].mode, SyncMode::Bsp);
+        assert_eq!(points[1].mode, SyncMode::Async { staleness: 2 });
+        // BSP points never skip; async points on the barriered topologies do.
+        assert!(points.iter().filter(|p| p.mode == SyncMode::Bsp).all(|p| p.stale_skips == 0));
+        let table = render(&points, &cfg);
+        assert!(table.contains("AllReduce") && table.contains("async:2"), "{table}");
+        let csv = render_csv(&points);
+        assert_eq!(csv.lines().count(), 1 + points.len());
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let mut serial = small_cfg();
+        serial.threads = 1;
+        let mut parallel = small_cfg();
+        parallel.threads = 4;
+        let a = run(&serial).unwrap();
+        let b = run(&parallel).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.framework, y.framework);
+            assert_eq!(x.workers, y.workers);
+            assert_eq!(x.mode, y.mode);
+            assert_eq!(
+                x.epoch_secs.to_bits(),
+                y.epoch_secs.to_bits(),
+                "{:?} W={} {}: vtime must not depend on thread count",
+                x.framework,
+                x.workers,
+                x.mode.label()
+            );
+            assert_eq!(x.cost_usd.to_bits(), y.cost_usd.to_bits());
+            assert_eq!(x.total_ops, y.total_ops);
+        }
+    }
+
+    #[test]
+    fn master_bottleneck_emerges_with_scale() {
+        // AllReduce's per-epoch time must grow faster than SPIRT's as W
+        // scales: the master serializes W transfers on every round's
+        // critical path, while SPIRT pays its O(W) P2P exchange once per
+        // epoch.
+        let cfg = SweepConfig {
+            worker_counts: vec![4, 64],
+            modes: vec![SyncMode::Bsp],
+            batches_per_epoch: 4,
+            threads: 0,
+            ..SweepConfig::default()
+        };
+        let points = run(&cfg).unwrap();
+        let get = |fw: FrameworkKind, w: usize| {
+            points
+                .iter()
+                .find(|p| p.framework == fw && p.workers == w)
+                .unwrap()
+                .epoch_secs
+        };
+        let ar_growth = get(FrameworkKind::AllReduce, 64) / get(FrameworkKind::AllReduce, 4);
+        let sp_growth = get(FrameworkKind::Spirt, 64) / get(FrameworkKind::Spirt, 4);
+        assert!(
+            ar_growth > sp_growth,
+            "AllReduce must degrade faster: {ar_growth:.2}x vs SPIRT {sp_growth:.2}x"
+        );
+    }
+
+    #[test]
+    #[ignore = "full paper-scale run (~minutes); exercised by `slsgpu scale-sweep`"]
+    fn full_sweep_completes_at_256_workers() {
+        let cfg = SweepConfig::default();
+        let points = run(&cfg).unwrap();
+        assert_eq!(points.len(), 5 * 4 * 2);
+        assert!(points.iter().all(|p| p.epoch_secs > 0.0));
+    }
+}

@@ -10,7 +10,9 @@
 //!   Step Functions, EC2/GPU) with virtual-time latency + billing models.
 //! * [`coordinator`] — the five training architectures under comparison:
 //!   SPIRT, MLLess, LambdaML AllReduce / ScatterReduce, and the distributed
-//!   GPU baseline.
+//!   GPU baseline. Their shared protocol plumbing (per-worker `Timeline`
+//!   handles, typed ops, the BSP/bounded-staleness `SyncMode` policy)
+//!   lives in `coordinator::protocol`.
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust. Python
 //!   never runs at request time.
@@ -23,7 +25,9 @@
 //! * [`train`] — the epoch/step driver that wires data, strategy, substrates
 //!   and runtime into a training session.
 //! * [`exp`] — drivers that regenerate every table and figure of the paper,
-//!   plus the fault-resilience table (`exp::table4_faults`).
+//!   plus the fault-resilience table (`exp::table4_faults`) and the
+//!   4→256-worker scalability sweep (`exp::scale_sweep`, parallelized over
+//!   std threads).
 //!
 //! Time in experiment outputs is *virtual* (the paper's AWS time axis,
 //! calibrated from the paper's own measurements — see

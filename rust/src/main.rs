@@ -9,6 +9,9 @@
 //! slsgpu exp spirt-indb [--real]             # §4.2 in-DB vs naive
 //! slsgpu exp table3 [--model mobilenet_s] [--epochs 20] [--csv out.csv]
 //! slsgpu fault-tolerance [--arch mobilenet] [--workers 4] [--epochs 3]
+//! slsgpu scale-sweep [--workers 4,16,64,256] [--modes bsp,async:2]
+//!                    [--arch mobilenet] [--batches 24] [--epochs 1]
+//!                    [--threads 0] [--csv out.csv]  # 5 archs × W × mode
 //! slsgpu train --framework spirt --model mobilenet_s --epochs 5
 //! slsgpu artifacts                            # list compiled artifacts
 //! ```
@@ -21,7 +24,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use slsgpu::cloud::FrameworkKind;
-use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
 use slsgpu::exp;
 use slsgpu::runtime::Engine;
 use slsgpu::train::{run_session, SessionConfig};
@@ -63,6 +66,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("exp") => run_exp(&args),
         Some("fault-tolerance") => run_fault_tolerance(&args),
+        Some("scale-sweep") => run_scale_sweep(&args),
         Some("train") => run_train(&args),
         Some("artifacts") => {
             let engine = engine_from(&args)?;
@@ -81,16 +85,43 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand {other:?} (exp|fault-tolerance|train|artifacts)"),
+        Some(other) => bail!(
+            "unknown subcommand {other:?} (exp|fault-tolerance|scale-sweep|train|artifacts)"
+        ),
         None => {
             println!("slsgpu — serverless-vs-GPU training testbed (see README)");
             println!(
                 "subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, \
-                 fault-tolerance, train, artifacts"
+                 fault-tolerance, scale-sweep, train, artifacts"
             );
             Ok(())
         }
     }
+}
+
+/// The scalability table: 5 architectures × worker counts × sync modes,
+/// sweep points simulated in parallel on std threads.
+fn run_scale_sweep(args: &Args) -> Result<()> {
+    let modes = args
+        .get_or("modes", "bsp,async:2")
+        .split(',')
+        .map(SyncMode::parse)
+        .collect::<Result<Vec<_>>>()?;
+    let cfg = exp::scale_sweep::SweepConfig {
+        arch: args.get_or("arch", "mobilenet").to_string(),
+        worker_counts: parse_list(args.get_or("workers", "4,16,64,256"))?,
+        modes,
+        batches_per_epoch: args.get_usize("batches", 24)?,
+        epochs: args.get_usize("epochs", 1)?,
+        threads: args.get_usize("threads", 0)?,
+    };
+    let points = exp::scale_sweep::run(&cfg)?;
+    print!("{}", exp::scale_sweep::render(&points, &cfg));
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, exp::scale_sweep::render_csv(&points))?;
+        println!("wrote sweep points to {path}");
+    }
+    Ok(())
 }
 
 /// The resilience table: five architectures under deterministic injected

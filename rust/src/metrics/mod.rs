@@ -109,6 +109,15 @@ pub struct CommStats {
     bytes: BTreeMap<CommKind, u64>,
     /// Seconds spent blocked on communication (sync stage time).
     pub comm_time: f64,
+    /// Contributions skipped by the bounded-staleness sync policy (an
+    /// async-mode worker proceeded without them; see
+    /// `coordinator::protocol::SyncMode`). Always 0 in BSP mode. Counted
+    /// per *gather decision*, whose granularity differs by topology —
+    /// AllReduce/MLLess/GPU decide once per round, ScatterReduce once per
+    /// chunk owner per round, SPIRT once per fetching worker per epoch —
+    /// so compare the counter across modes or worker counts *within* one
+    /// framework, not between frameworks.
+    pub stale_skips: u64,
 }
 
 impl CommStats {
@@ -150,6 +159,7 @@ impl CommStats {
             *self.bytes.entry(*k).or_insert(0) += v;
         }
         self.comm_time += other.comm_time;
+        self.stale_skips += other.stale_skips;
     }
 }
 

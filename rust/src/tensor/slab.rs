@@ -1,12 +1,21 @@
 //! The `Slab` type: a flat f32 vector, real or size-only.
+//!
+//! Real slabs are `Arc`-backed: `clone`/[`Slab::share`] hand out a second
+//! reference to the same buffer in O(1), and mutating ops copy-on-write
+//! (`Arc::make_mut`). This is what lets the protocol layer move gradients
+//! through stores, queues and peer databases without deep-copying 16–100 MB
+//! payloads on every hop — the scale-sweep hot path at 256 workers.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 /// A flat f32 tensor slab.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Slab {
-    /// Backed by memory; elementwise math is real.
-    Real(Vec<f32>),
+    /// Backed by shared memory; elementwise math is real and mutation is
+    /// copy-on-write.
+    Real(Arc<Vec<f32>>),
     /// Size-only stand-in for paper-scale payloads; math is a no-op that
     /// preserves length (time/cost models only need bytes).
     Virtual { len: usize },
@@ -14,7 +23,7 @@ pub enum Slab {
 
 impl Slab {
     pub fn zeros(len: usize) -> Slab {
-        Slab::Real(vec![0.0; len])
+        Slab::Real(Arc::new(vec![0.0; len]))
     }
 
     pub fn virtual_of(len: usize) -> Slab {
@@ -22,7 +31,15 @@ impl Slab {
     }
 
     pub fn from_vec(v: Vec<f32>) -> Slab {
-        Slab::Real(v)
+        Slab::Real(Arc::new(v))
+    }
+
+    /// A cheap second handle to the same payload (O(1): bumps the refcount
+    /// for real slabs, copies a length for virtual ones). Use this instead
+    /// of `clone` on protocol hot paths to make the non-copying intent
+    /// grep-visible.
+    pub fn share(&self) -> Slab {
+        self.clone()
     }
 
     pub fn len(&self) -> usize {
@@ -47,7 +64,7 @@ impl Slab {
 
     pub fn as_slice(&self) -> Result<&[f32]> {
         match self {
-            Slab::Real(v) => Ok(v),
+            Slab::Real(v) => Ok(v.as_slice()),
             Slab::Virtual { .. } => bail!("virtual slab has no data"),
         }
     }
@@ -71,6 +88,7 @@ impl Slab {
     pub fn axpy(&mut self, g: &Slab, w: f32) -> Result<()> {
         self.check_len(g)?;
         if let (Slab::Real(a), Slab::Real(b)) = (&mut *self, g) {
+            let a = Arc::make_mut(a);
             for (x, y) in a.iter_mut().zip(b.iter()) {
                 *x += w * *y;
             }
@@ -81,7 +99,7 @@ impl Slab {
     /// `self *= s`.
     pub fn scale(&mut self, s: f32) {
         if let Slab::Real(v) = self {
-            for x in v.iter_mut() {
+            for x in Arc::make_mut(v).iter_mut() {
                 *x *= s;
             }
         }
@@ -180,5 +198,31 @@ mod tests {
     #[test]
     fn mean_empty_errors() {
         assert!(Slab::mean(&[]).is_err());
+    }
+
+    #[test]
+    fn share_is_aliasing_until_mutation() {
+        // share() hands out the same buffer; a mutating op copies-on-write
+        // so the sibling handle never observes the change.
+        let a = Slab::from_vec(vec![1.0, 2.0]);
+        let b = a.share();
+        if let (Slab::Real(va), Slab::Real(vb)) = (&a, &b) {
+            assert!(Arc::ptr_eq(va, vb), "share must not deep-copy");
+        } else {
+            panic!("expected real slabs");
+        }
+        let mut c = b.share();
+        c.axpy(&a, 1.0).unwrap();
+        assert_eq!(a.as_slice().unwrap(), &[1.0, 2.0], "COW must protect siblings");
+        assert_eq!(c.as_slice().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn axpy_self_aliased_reads_pre_update_values() {
+        let a = Slab::from_vec(vec![1.0, -2.0]);
+        let mut b = a.share();
+        b.axpy(&a, 1.0).unwrap();
+        assert_eq!(b.as_slice().unwrap(), &[2.0, -4.0]);
+        assert_eq!(a.as_slice().unwrap(), &[1.0, -2.0]);
     }
 }

@@ -1,25 +1,32 @@
 //! Determinism integration test: the same seed and config must produce
 //! bit-identical `SessionReport` virtual-time and cost traces across two
-//! runs, for all five strategies, with and without an active `FaultPlan`.
+//! runs, for all five strategies, with and without an active `FaultPlan`,
+//! in both synchronization modes (BSP and bounded-staleness async).
 //!
 //! This is the property the whole testbed stands on — every experiment
-//! table is reproducible, and the fault engine (which injects events at
-//! epoch/round coordinates and virtual times) must not introduce any
-//! run-to-run variation of its own.
+//! table is reproducible, and neither the fault engine (which injects
+//! events at epoch/round coordinates and virtual times) nor the async
+//! quorum selection may introduce any run-to-run variation of its own.
 
 use slsgpu::cloud::FrameworkKind;
-use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
 use slsgpu::faults::{FaultPlan, PoisonMode};
 use slsgpu::tensor::AggregationRule;
 use slsgpu::train::{run_session, SessionConfig, SessionReport};
 
 const EPOCHS: usize = 3;
 
-fn session(fw: FrameworkKind, plan: &FaultPlan, agg: AggregationRule) -> SessionReport {
+fn session_with(
+    fw: FrameworkKind,
+    plan: &FaultPlan,
+    agg: AggregationRule,
+    sync: SyncMode,
+) -> SessionReport {
     let cfg = EnvConfig::virtual_paper(fw, "mobilenet", 4)
         .unwrap()
         .with_faults(plan.clone())
-        .with_aggregation(agg);
+        .with_aggregation(agg)
+        .with_sync(sync);
     let mut env = ClusterEnv::new(cfg).unwrap();
     let mut strategy = strategy_for(fw);
     let session_cfg = SessionConfig {
@@ -29,6 +36,10 @@ fn session(fw: FrameworkKind, plan: &FaultPlan, agg: AggregationRule) -> Session
         evaluate: false,
     };
     run_session(&mut env, strategy.as_mut(), &session_cfg).unwrap()
+}
+
+fn session(fw: FrameworkKind, plan: &FaultPlan, agg: AggregationRule) -> SessionReport {
+    session_with(fw, plan, agg, SyncMode::Bsp)
 }
 
 fn assert_bit_identical(a: &SessionReport, b: &SessionReport, label: &str) {
@@ -82,6 +93,27 @@ fn faulty_sessions_are_bit_identical() {
         let a = session(fw, &plan, AggregationRule::ClippedMean { ratio: 1.0 });
         let b = session(fw, &plan, AggregationRule::ClippedMean { ratio: 1.0 });
         assert_bit_identical(&a, &b, fw.name());
+    }
+}
+
+#[test]
+fn async_sessions_are_bit_identical() {
+    let mode = SyncMode::Async { staleness: 2 };
+    for fw in FrameworkKind::ALL {
+        let a = session_with(fw, &FaultPlan::none(), AggregationRule::Mean, mode);
+        let b = session_with(fw, &FaultPlan::none(), AggregationRule::Mean, mode);
+        assert_bit_identical(&a, &b, &format!("{} async", fw.name()));
+    }
+}
+
+#[test]
+fn async_faulty_sessions_are_bit_identical() {
+    let mode = SyncMode::Async { staleness: 2 };
+    let plan = busy_plan();
+    for fw in FrameworkKind::ALL {
+        let a = session_with(fw, &plan, AggregationRule::ClippedMean { ratio: 1.0 }, mode);
+        let b = session_with(fw, &plan, AggregationRule::ClippedMean { ratio: 1.0 }, mode);
+        assert_bit_identical(&a, &b, &format!("{} async+faults", fw.name()));
     }
 }
 

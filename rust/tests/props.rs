@@ -65,6 +65,45 @@ fn prop_resource_no_overlap_and_causality() {
 }
 
 #[test]
+fn prop_resource_backfill_is_issue_order_independent() {
+    // The module doc's promise: results must not depend on the (arbitrary)
+    // order in which simulation code issues requests for concurrent
+    // workers. With gap-aware backfill that holds whenever the competing
+    // requests are exchangeable — equal service times, arrivals on a
+    // common grid (the shape concurrent same-payload protocol rounds
+    // produce): the multiset of served (start, end) intervals is invariant
+    // under any permutation of the issue order.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let servers = 1 + rng.below(4) as usize;
+        let n = 5 + rng.below(36) as usize;
+        let requests: Vec<f64> = (0..n).map(|_| rng.below(20) as f64).collect();
+
+        let schedule = |order: &[usize]| -> Vec<(u64, u64)> {
+            let mut r = Resource::new("p", servers);
+            let mut served: Vec<(u64, u64)> = order
+                .iter()
+                .map(|&i| {
+                    let s = r.serve(VTime::from_secs(requests[i]), 1.0);
+                    (s.start.secs().to_bits(), s.end.secs().to_bits())
+                })
+                .collect();
+            served.sort_unstable();
+            served
+        };
+
+        let base_order: Vec<usize> = (0..n).collect();
+        let mut permuted = base_order.clone();
+        rng.shuffle(&mut permuted);
+        assert_eq!(
+            schedule(&base_order),
+            schedule(&permuted),
+            "seed {seed}: schedule depends on issue order (servers {servers}, n {n})"
+        );
+    }
+}
+
+#[test]
 fn prop_slab_mean_bounded_by_extremes() {
     for seed in 0..CASES {
         let mut rng = Rng::new(2000 + seed);
