@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Generate ``rust/tests/golden/report_fixture.{txt,md,json}``.
+
+Builds the exact fixture `rust/tests/report.rs::fixture()` builds and
+renders it through the byte-exact replica in ``report_replica.py``. Run
+from the repo root:
+
+    python3 python/tools/gen_report_goldens.py
+
+Regenerate only when the renderer format deliberately changes; the golden
+tests exist to catch *accidental* byte drift.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import report_replica as rr  # noqa: E402
+
+
+def fixture():
+    t = rr.table(
+        "timing",
+        [("Framework", rr.LEFT), ("Per-batch (s)", rr.RIGHT), ("Verdict basis", rr.LEFT)],
+        title="Fixture — paper-anchored timings",
+    )
+    rr.push_row(
+        t,
+        [
+            rr.cell("SPIRT"),
+            rr.vs_paper_cell(14.0, 14.343, 2, 0.15),
+            rr.cell("within 15%"),
+        ],
+    )
+    rr.rule(t)
+    rr.push_row(
+        t,
+        [
+            rr.cell("MLLess"),
+            rr.vs_paper_cell(99.0, 69.425, 2, 0.15),
+            rr.cell("out of 15%"),
+        ],
+    )
+    plain = rr.table("counts", [("kind", rr.LEFT), ("n", rr.RIGHT)])
+    rr.push_row(plain, [rr.cell("ops"), rr.count_cell(42)])
+    return rr.report(
+        "fixture",
+        "Fixture report",
+        "slsgpu fixture",
+        intro=["Fixed input for the golden-file tests: byte-stable across runs and platforms."],
+        sections=[
+            rr.section(
+                heading="Timings",
+                paragraphs=["One PASS row and one WARN row."],
+                tables=[t],
+                notes=["note: trailing footer line"],
+            ),
+            rr.section(tables=[plain]),
+        ],
+    )
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    golden = os.path.join(root, "rust", "tests", "golden")
+    os.makedirs(golden, exist_ok=True)
+    r = fixture()
+    outputs = {
+        "report_fixture.txt": rr.report_text(r),
+        "report_fixture.md": rr.report_md(r),
+        "report_fixture.json": rr.report_json(r),
+    }
+    for name, contents in outputs.items():
+        path = os.path.join(golden, name)
+        with open(path, "w", encoding="utf-8") as fh:
+            fh.write(contents)
+        print(f"wrote {path} ({len(contents)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,305 @@
+"""Byte-exact Python replica of ``rust/src/report``'s renderers.
+
+This container carries no Rust toolchain, so artifacts that must match the
+Rust renderers byte-for-byte (the golden files under ``rust/tests/golden/``
+and the bootstrap ``docs/`` pages) are produced by this replica instead.
+Every function mirrors its Rust counterpart line by line:
+
+* ``ascii_table``   ↔ ``util::table::Table::render``
+* ``report_text``   ↔ ``report::Report::to_text``
+* ``report_md``     ↔ ``report::Report::to_markdown``
+* ``report_json``   ↔ ``report::Report::to_json`` + ``util::json`` writer
+
+Float formatting notes: Rust's ``{:.N}`` and Python's ``{:.Nf}`` both
+correctly round the same IEEE-754 double, and Rust's ``f64`` ``Display``
+(shortest round-trip, no exponent below 1e15) matches ``repr(float)`` for
+the magnitudes used here; the integer fast path (`fract() == 0`) is
+replicated explicitly.
+"""
+
+LEFT, RIGHT = "left", "right"
+
+
+# -- model -------------------------------------------------------------------
+
+def cell(text, value=None, paper=None, tol=None):
+    """A report cell: rendered text + optional value and paper anchor."""
+    return {"text": text, "value": value, "paper": paper, "tol": tol}
+
+
+def num_cell(value, digits):
+    return cell(f"{value:.{digits}f}", value=value)
+
+
+def count_cell(value):
+    return cell(str(value), value=float(value))
+
+
+def vs_paper(measured, paper, digits):
+    if paper == 0.0:
+        return f"{measured:.{digits}f} (paper {paper:.{digits}f})"
+    pct = (measured - paper) / paper * 100.0
+    return f"{measured:.{digits}f} (paper {paper:.{digits}f}, {pct:+.1f}%)"
+
+
+def vs_paper_cell(measured, paper, digits, tol):
+    return cell(vs_paper(measured, paper, digits), value=measured, paper=paper, tol=tol)
+
+
+def rel_err(measured, paper):
+    if paper == 0.0:
+        return 0.0
+    return abs(measured - paper) / abs(paper)
+
+
+def verdict(c):
+    if c["value"] is None or c["paper"] is None:
+        return None
+    return "PASS" if rel_err(c["value"], c["paper"]) <= c["tol"] else "WARN"
+
+
+def table(tid, columns, title=None):
+    """columns: list of (name, LEFT|RIGHT)."""
+    return {"id": tid, "title": title, "columns": columns, "rows": [], "rules": []}
+
+
+def push_row(t, cells):
+    assert len(cells) == len(t["columns"]), f"row arity mismatch in {t['id']}"
+    t["rows"].append(cells)
+
+
+def rule(t):
+    t["rules"].append(len(t["rows"]))
+
+
+def section(heading=None, paragraphs=(), tables=(), notes=()):
+    return {
+        "heading": heading,
+        "paragraphs": list(paragraphs),
+        "tables": list(tables),
+        "notes": list(notes),
+    }
+
+
+def report(rid, title, command, intro=(), sections=()):
+    return {
+        "id": rid,
+        "title": title,
+        "command": command,
+        "intro": list(intro),
+        "sections": list(sections),
+    }
+
+
+# -- text renderer (util::table + report::render) ----------------------------
+
+def ascii_table(t):
+    names = [c[0] for c in t["columns"]]
+    aligns = [c[1] for c in t["columns"]]
+    widths = [len(n) for n in names]
+    for row in t["rows"]:
+        for i, c in enumerate(row):
+            widths[i] = max(widths[i], len(c["text"]))
+    hrule = "+" + "+".join("-" * (w + 2) for w in widths) + "+"
+
+    def fmt_row(cells):
+        s = "|"
+        for i, text in enumerate(cells):
+            pad = " " * (widths[i] - len(text))
+            if aligns[i] == LEFT:
+                s += f" {text}{pad} |"
+            else:
+                s += f" {pad}{text} |"
+        return s
+
+    out = []
+    if t["title"] is not None:
+        out.append(t["title"])
+    out.append(hrule)
+    out.append(fmt_row(names))
+    out.append(hrule)
+    for i, row in enumerate(t["rows"]):
+        out.append(fmt_row([c["text"] for c in row]))
+        if (i + 1) in t["rules"] and (i + 1) != len(t["rows"]):
+            out.append(hrule)
+    out.append(hrule)
+    return "\n".join(out) + "\n"
+
+
+def section_text(s):
+    out = ""
+    if s["heading"] is not None:
+        out += s["heading"] + "\n\n"
+    for p in s["paragraphs"]:
+        out += p + "\n\n"
+    for i, t in enumerate(s["tables"]):
+        if i > 0:
+            out += "\n"
+        out += ascii_table(t)
+    for n in s["notes"]:
+        out += n + "\n"
+    return out
+
+
+def report_text(r):
+    out = ""
+    for i, s in enumerate(r["sections"]):
+        if i > 0:
+            out += "\n"
+        out += section_text(s)
+    return out
+
+
+# -- markdown renderer -------------------------------------------------------
+
+def md_escape(text):
+    return text.replace("|", "\\|")
+
+
+def md_cell(c):
+    if verdict(c) == "WARN":
+        return f"{md_escape(c['text'])} **WARN**"
+    return md_escape(c["text"])
+
+
+def table_md(t):
+    out = ""
+    if t["title"] is not None:
+        out += f"**{md_escape(t['title'])}**\n\n"
+    out += "| " + " | ".join(md_escape(c[0]) for c in t["columns"]) + " |\n"
+    out += "| " + " | ".join(":---" if c[1] == LEFT else "---:" for c in t["columns"]) + " |\n"
+    for row in t["rows"]:
+        out += "| " + " | ".join(md_cell(c) for c in row) + " |\n"
+    passes = sum(1 for row in t["rows"] for c in row if verdict(c) == "PASS")
+    warns = sum(1 for row in t["rows"] for c in row if verdict(c) == "WARN")
+    if passes + warns > 0:
+        out += f"\n*Paper anchors: {passes} PASS, {warns} WARN.*\n"
+    return out
+
+
+def section_md(s):
+    out = ""
+    if s["heading"] is not None:
+        out += f"## {s['heading']}\n\n"
+    for p in s["paragraphs"]:
+        out += p + "\n\n"
+    for t in s["tables"]:
+        out += table_md(t) + "\n"
+    for n in s["notes"]:
+        out += n + "\n\n"
+    return out
+
+
+def report_md(r):
+    out = f"# {r['title']}\n\n"
+    out += (
+        "> Generated by `slsgpu report` — do not edit by hand.\n"
+        f"> Reproduce: `{r['command']}`\n\n"
+    )
+    for p in r["intro"]:
+        out += p + "\n\n"
+    for s in r["sections"]:
+        out += section_md(s)
+    return out.rstrip() + "\n"
+
+
+# -- JSON writer (util::json semantics) --------------------------------------
+
+def json_escape(s):
+    out = '"'
+    for ch in s:
+        if ch == '"':
+            out += '\\"'
+        elif ch == "\\":
+            out += "\\\\"
+        elif ch == "\n":
+            out += "\\n"
+        elif ch == "\r":
+            out += "\\r"
+        elif ch == "\t":
+            out += "\\t"
+        elif ord(ch) < 0x20:
+            out += f"\\u{ord(ch):04x}"
+        else:
+            out += ch
+    return out + '"'
+
+
+def json_num(v):
+    if float(v) == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def json_value(v):
+    if isinstance(v, str):
+        return json_escape(v)
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return json_num(v)
+    if isinstance(v, list):
+        return "[" + ",".join(json_value(x) for x in v) + "]"
+    if isinstance(v, dict):  # keys sorted, as BTreeMap iterates
+        return "{" + ",".join(
+            f"{json_escape(k)}:{json_value(v[k])}" for k in sorted(v)
+        ) + "}"
+    raise TypeError(v)
+
+
+def cell_json(c):
+    obj = {"text": c["text"]}
+    if c["value"] is not None:
+        obj["value"] = c["value"]
+    if c["paper"] is not None:
+        anchor = {"paper": c["paper"], "tol": c["tol"]}
+        v = verdict(c)
+        if v is not None:
+            anchor["verdict"] = v
+        obj["anchor"] = anchor
+    return obj
+
+
+def table_json(t):
+    obj = {
+        "id": t["id"],
+        "columns": [{"name": n, "align": a} for n, a in t["columns"]],
+        "rows": [[cell_json(c) for c in row] for row in t["rows"]],
+    }
+    if t["title"] is not None:
+        obj["title"] = t["title"]
+    if t["rules"]:
+        obj["rules"] = t["rules"]
+    return obj
+
+
+def report_json(r):
+    passes = warns = 0
+    for s in r["sections"]:
+        for t in s["tables"]:
+            for row in t["rows"]:
+                for c in row:
+                    v = verdict(c)
+                    passes += v == "PASS"
+                    warns += v == "WARN"
+    obj = {
+        "id": r["id"],
+        "title": r["title"],
+        "command": r["command"],
+        "anchors": {"pass": passes, "warn": warns},
+        "sections": [],
+    }
+    if r["intro"]:
+        obj["intro"] = r["intro"]
+    if passes + warns > 0:
+        obj["status"] = "WARN" if warns else "PASS"
+    for s in r["sections"]:
+        sec = {"tables": [table_json(t) for t in s["tables"]]}
+        if s["heading"] is not None:
+            sec["heading"] = s["heading"]
+        if s["paragraphs"]:
+            sec["paragraphs"] = s["paragraphs"]
+        if s["notes"]:
+            sec["notes"] = s["notes"]
+        obj["sections"].append(sec)
+    return json_value(obj) + "\n"

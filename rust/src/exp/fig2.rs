@@ -12,9 +12,16 @@ use crate::cloud::FrameworkKind;
 use crate::coordinator::allreduce::AllReduce;
 use crate::coordinator::scatter_reduce::ScatterReduce;
 use crate::coordinator::{ClusterEnv, EnvConfig};
+use crate::report::{Align, Cell, Report, Table};
 use crate::tensor::Slab;
-use crate::util::table::{Align, Table};
 use crate::Result;
+
+/// Anchor tolerance for the 16-worker extremes. The tests assert the
+/// asymmetric 2× band `(paper/2, paper×2)`; a symmetric rel-err tolerance
+/// of 0.5 gives `[paper/2, paper×1.5]` — a subset, so a PASS in the docs
+/// always implies the test band holds (the docs may WARN in the
+/// `(1.5×, 2×)` stretch the test still tolerates, erring toward WARN).
+pub const ANCHOR_TOL: f64 = 0.5;
 
 #[derive(Debug, Clone)]
 pub struct Point {
@@ -67,17 +74,21 @@ pub fn run(worker_counts: &[usize]) -> Result<Vec<Point>> {
     Ok(out)
 }
 
-pub fn render(points: &[Point]) -> String {
-    let mut t = Table::new(&[
-        "Model",
-        "Workers",
-        "AllReduce (s)",
-        "ScatterReduce (s)",
-        "Winner",
-        "Paper (AR/SR)",
-    ])
-    .title("Fig. 2 — Communication time per synchronization round")
-    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Left, Align::Right]);
+/// Build the Fig. 2 report; worker counts the paper measured carry anchors,
+/// everything beyond renders an em-dash paper cell.
+pub fn report(points: &[Point]) -> Report {
+    let mut t = Table::new(
+        "fig2",
+        &[
+            ("Model", Align::Left),
+            ("Workers", Align::Right),
+            ("AllReduce (s)", Align::Right),
+            ("ScatterReduce (s)", Align::Right),
+            ("Winner", Align::Left),
+            ("Paper (AR/SR)", Align::Right),
+        ],
+    )
+    .title("Fig. 2 — Communication time per synchronization round");
     let mut last_arch = String::new();
     for p in points {
         if p.arch != last_arch {
@@ -87,19 +98,50 @@ pub fn render(points: &[Point]) -> String {
             last_arch = p.arch.clone();
         }
         let winner = if p.allreduce_secs < p.scatter_secs { "AllReduce" } else { "ScatterReduce" };
-        let paper = paper_anchor(&p.arch, p.workers)
-            .map(|(a, s)| format!("{a:.2}/{s:.2}"))
-            .unwrap_or_else(|| "—".into());
-        t.row(vec![
-            p.arch.clone(),
-            p.workers.to_string(),
-            format!("{:.2}", p.allreduce_secs),
-            format!("{:.2}", p.scatter_secs),
-            winner.to_string(),
-            paper,
+        let anchor = paper_anchor(&p.arch, p.workers);
+        let numeric = |measured: f64, paper: Option<f64>| match paper {
+            Some(paper) => Cell::anchored(format!("{measured:.2}"), measured, paper, ANCHOR_TOL),
+            None => Cell::num(measured, 2),
+        };
+        t.push_row(vec![
+            Cell::text(p.arch.clone()),
+            Cell::count(p.workers as u64),
+            numeric(p.allreduce_secs, anchor.map(|(a, _)| a)),
+            numeric(p.scatter_secs, anchor.map(|(_, s)| s)),
+            Cell::text(winner),
+            Cell::text(
+                anchor.map(|(a, s)| format!("{a:.2}/{s:.2}")).unwrap_or_else(|| "—".into()),
+            ),
         ]);
     }
-    t.render()
+    // Reproduce command derived from the points themselves, so the page
+    // can never cite a different sweep than it shows.
+    let mut counts: Vec<usize> = Vec::new();
+    for p in points {
+        if !counts.contains(&p.workers) {
+            counts.push(p.workers);
+        }
+    }
+    let counts: Vec<String> = counts.iter().map(|w| w.to_string()).collect();
+    Report::new(
+        "fig2",
+        "Fig. 2 — Communication time per synchronization round",
+        format!("slsgpu exp fig2 --workers {}", counts.join(",")),
+    )
+    .with_intro(
+        "One synchronization round (gradients already computed) for the two LambdaML \
+         strategies as the worker count scales, MobileNet and ResNet-50 payloads. The \
+         paper's crossover must emerge: ScatterReduce wins the large model (master \
+         bandwidth bound), AllReduce wins the small model at high worker counts \
+         (request-count bound). Only the 16-worker extremes are anchored (§4.2 text); \
+         anchorless worker counts render an em-dash.",
+    )
+    .with_table(t)
+}
+
+/// Legacy CLI view of [`report`].
+pub fn render(points: &[Point]) -> String {
+    report(points).to_text()
 }
 
 #[cfg(test)]
@@ -153,6 +195,14 @@ mod tests {
         }
         let table = render(&points);
         assert!(table.contains('—'), "missing-anchor rows must render an em dash:\n{table}");
+    }
+
+    #[test]
+    fn report_anchors_only_paper_measured_points() {
+        let points = run(&[4, 16]).unwrap();
+        let (pass, warn) = report(&points).verdicts();
+        // AR + SR anchored for both models at W=16 only.
+        assert_eq!(pass + warn, 4, "pass={pass} warn={warn}");
     }
 
     #[test]

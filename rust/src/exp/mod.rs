@@ -1,9 +1,16 @@
 //! Experiment drivers: one per table/figure in the paper's evaluation.
 //!
 //! Each driver runs the relevant protocol(s) through the full substrate
-//! stack and renders the paper's rows next to our measured values, so the
-//! reproduction status is visible at a glance. See DESIGN.md §2 for the
-//! experiment index and EXPERIMENTS.md for recorded outputs.
+//! stack and *returns* a typed [`crate::report::Report`] placing the
+//! paper's rows next to our measured values, so the reproduction status is
+//! visible at a glance — in the CLI (text renderer), in the generated
+//! `docs/` pages (Markdown renderer, `slsgpu report`), and as JSON data.
+//! See DESIGN.md §2 for the experiment index and EXPERIMENTS.md for the
+//! run commands; the rendered results live under `docs/`.
+//!
+//! The `rel_err`/`vs_paper` helpers are re-exported from
+//! [`crate::report::model`], where the anchored-cell verdict logic
+//! generalizes them.
 
 pub mod fig2;
 pub mod fig3;
@@ -14,27 +21,7 @@ pub mod table2;
 pub mod table3;
 pub mod table4_faults;
 
-/// Relative error helper for paper-vs-measured columns.
-pub fn rel_err(measured: f64, paper: f64) -> f64 {
-    if paper == 0.0 {
-        return 0.0;
-    }
-    (measured - paper).abs() / paper.abs()
-}
-
-/// Format a measured-vs-paper cell: `measured (paper, ±err%)`. A zero paper
-/// value has no meaningful relative error (and dividing by it would render
-/// `inf`/`NaN`), so the percentage is omitted for that cell.
-pub fn vs_paper(measured: f64, paper: f64, digits: usize) -> String {
-    if paper == 0.0 {
-        return format!("{measured:.prec$} (paper {paper:.prec$})", prec = digits);
-    }
-    format!(
-        "{measured:.prec$} (paper {paper:.prec$}, {:+.1}%)",
-        (measured - paper) / paper * 100.0,
-        prec = digits
-    )
-}
+pub use crate::report::{rel_err, vs_paper};
 
 #[cfg(test)]
 mod tests {

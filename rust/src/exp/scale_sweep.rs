@@ -19,7 +19,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::cloud::FrameworkKind;
 use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
-use crate::util::table::{Align, Table};
+use crate::report::{Align, Cell, Report, Table};
 use crate::util::{fmt_bytes, fmt_duration};
 use crate::Result;
 
@@ -158,53 +158,75 @@ pub fn run(cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
     Ok(indexed.into_iter().map(|(_, p)| p).collect())
 }
 
-/// Render the sweep as a table.
-pub fn render(points: &[SweepPoint], cfg: &SweepConfig) -> String {
-    let mut t = Table::new(&[
-        "Framework",
-        "W",
-        "Mode",
-        "Epoch",
-        "Cost ($)",
-        "Wire",
-        "Ops",
-        "Fn (s)",
-        "Skips",
-    ])
+/// Build the sweep report. No paper anchors: the sweep extends the paper's
+/// 4–16-worker range to 256 on purpose, so every row is a measurement with
+/// nothing to compare against.
+pub fn report(points: &[SweepPoint], cfg: &SweepConfig) -> Report {
+    let mut t = Table::new(
+        "scale_sweep",
+        &[
+            ("Framework", Align::Left),
+            ("W", Align::Right),
+            ("Mode", Align::Left),
+            ("Epoch", Align::Right),
+            ("Cost ($)", Align::Right),
+            ("Wire", Align::Right),
+            ("Ops", Align::Right),
+            ("Fn (s)", Align::Right),
+            ("Skips", Align::Right),
+        ],
+    )
     .title(format!(
         "Scale sweep — {} profile, {} batches/epoch (virtual gradients)",
         cfg.arch, cfg.batches_per_epoch
-    ))
-    .align(&[
-        Align::Left,
-        Align::Right,
-        Align::Left,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-    ]);
+    ));
     let mut last_fw: Option<FrameworkKind> = None;
     for p in points {
         if last_fw.is_some() && last_fw != Some(p.framework) {
             t.rule();
         }
         last_fw = Some(p.framework);
-        t.row(vec![
-            p.framework.name().to_string(),
-            p.workers.to_string(),
-            p.mode.label(),
-            fmt_duration(p.epoch_secs),
-            format!("{:.4}", p.cost_usd),
-            fmt_bytes(p.wire_bytes),
-            p.total_ops.to_string(),
-            format!("{:.2}", p.mean_fn_secs),
-            p.stale_skips.to_string(),
+        t.push_row(vec![
+            Cell::text(p.framework.name()),
+            Cell::count(p.workers as u64),
+            Cell::text(p.mode.label()),
+            Cell::text(fmt_duration(p.epoch_secs)).with_value(p.epoch_secs),
+            Cell::num(p.cost_usd, 4),
+            Cell::text(fmt_bytes(p.wire_bytes)).with_value(p.wire_bytes as f64),
+            Cell::count(p.total_ops),
+            Cell::num(p.mean_fn_secs, 2),
+            Cell::count(p.stale_skips),
         ]);
     }
-    t.render()
+    let mode_labels: Vec<String> = cfg.modes.iter().map(|m| m.label()).collect();
+    let worker_labels: Vec<String> = cfg.worker_counts.iter().map(|w| w.to_string()).collect();
+    Report::new(
+        "scale_sweep",
+        "Scale sweep — 4 → 256 workers × sync modes",
+        format!(
+            "slsgpu scale-sweep --arch {} --workers {} --modes {} --batches {}",
+            cfg.arch,
+            worker_labels.join(","),
+            mode_labels.join(","),
+            cfg.batches_per_epoch
+        ),
+    )
+    .with_intro(
+        "Extension along the two axes the paper leaves open: worker count (its central \
+         scalability claims — the AllReduce master bottleneck, ScatterReduce's \
+         request-count blowup, SPIRT's once-per-epoch P2P fan-out) and synchronization \
+         policy (BSP vs bounded-staleness async). Every (architecture × W × mode) \
+         point is one independent seeded simulation of a full epoch through the same \
+         substrate stack as Table 2; `Skips` counts contributions the staleness quorum \
+         proceeded without (always 0 under BSP). The counter's granularity differs by \
+         topology, so compare it across modes or worker counts within one framework.",
+    )
+    .with_table(t)
+}
+
+/// Legacy CLI view of [`report`].
+pub fn render(points: &[SweepPoint], cfg: &SweepConfig) -> String {
+    report(points, cfg).to_text()
 }
 
 /// CSV export (one row per point).

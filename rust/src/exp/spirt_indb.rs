@@ -12,11 +12,17 @@ use std::time::Instant;
 
 use crate::cloud::Redis;
 use crate::metrics::CommStats;
+use crate::report::{Align, Cell, Report, Table};
 use crate::runtime::{Engine, PjrtMath};
 use crate::sim::VTime;
 use crate::tensor::Slab;
-use crate::util::table::{Align, Table};
 use crate::Result;
+
+/// Anchor tolerances: the averaging loop reproduces within 10%, the update
+/// path within 15% (the bands `virtual_mode_reproduces_paper_within_10pct`
+/// asserts).
+pub const AVG_TOL: f64 = 0.10;
+pub const UPDATE_TOL: f64 = 0.15;
 
 /// Paper §4.2 values (seconds).
 pub const PAPER: PaperValues = PaperValues {
@@ -123,44 +129,69 @@ pub fn run(engine: Option<(Rc<Engine>, &str)>, minibatches: usize) -> Result<Out
     })
 }
 
-pub fn render(o: &Outcome) -> String {
-    let mut t = Table::new(&[
-        "Operation",
-        "Naive (s)",
-        "In-DB (s)",
-        "Speedup",
-        "Paper (naive->in-DB)",
-    ])
+/// Build the §4.2 report (all four paper values anchored).
+pub fn report(o: &Outcome) -> Report {
+    let mut t = Table::new(
+        "spirt_indb",
+        &[
+            ("Operation", Align::Left),
+            ("Naive (s)", Align::Right),
+            ("In-DB (s)", Align::Right),
+            ("Speedup", Align::Right),
+            ("Paper (naive->in-DB)", Align::Right),
+        ],
+    )
     .title(format!(
         "SPIRT in-database ops vs naive fetch-update-store ({} params, {} minibatches)",
         o.n_params, o.minibatches
-    ))
-    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
-    t.row(vec![
-        "Gradient averaging".into(),
-        format!("{:.2}", o.naive_avg_secs),
-        format!("{:.2}", o.indb_avg_secs),
-        format!("{:.2}x", o.naive_avg_secs / o.indb_avg_secs),
-        format!("{:.2} -> {:.2}", PAPER.naive_avg, PAPER.indb_avg),
+    ));
+    let anchored = |measured: f64, paper: f64, tol: f64| {
+        Cell::anchored(format!("{measured:.2}"), measured, paper, tol)
+    };
+    t.push_row(vec![
+        Cell::text("Gradient averaging"),
+        anchored(o.naive_avg_secs, PAPER.naive_avg, AVG_TOL),
+        anchored(o.indb_avg_secs, PAPER.indb_avg, AVG_TOL),
+        Cell::text(format!("{:.2}x", o.naive_avg_secs / o.indb_avg_secs))
+            .with_value(o.naive_avg_secs / o.indb_avg_secs),
+        Cell::text(format!("{:.2} -> {:.2}", PAPER.naive_avg, PAPER.indb_avg)),
     ]);
-    t.row(vec![
-        "Model update".into(),
-        format!("{:.2}", o.naive_update_secs),
-        format!("{:.2}", o.indb_update_secs),
-        format!("{:.2}x", o.naive_update_secs / o.indb_update_secs),
-        format!("{:.2} -> {:.2}", PAPER.naive_update, PAPER.indb_update),
+    t.push_row(vec![
+        Cell::text("Model update"),
+        anchored(o.naive_update_secs, PAPER.naive_update, UPDATE_TOL),
+        anchored(o.indb_update_secs, PAPER.indb_update, UPDATE_TOL),
+        Cell::text(format!("{:.2}x", o.naive_update_secs / o.indb_update_secs))
+            .with_value(o.naive_update_secs / o.indb_update_secs),
+        Cell::text(format!("{:.2} -> {:.2}", PAPER.naive_update, PAPER.indb_update)),
     ]);
     if let Some(ms) = o.real_wall_ms {
         t.rule();
-        t.row(vec![
-            "Host wall (real PJRT ops)".into(),
-            "-".into(),
-            format!("{ms:.0} ms"),
-            "-".into(),
-            "-".into(),
+        t.push_row(vec![
+            Cell::text("Host wall (real PJRT ops)"),
+            Cell::text("-"),
+            Cell::text(format!("{ms:.0} ms")),
+            Cell::text("-"),
+            Cell::text("-"),
         ]);
     }
-    t.render()
+    Report::new(
+        "spirt_indb",
+        "SPIRT in-database ops vs naive fetch-update-store",
+        format!("slsgpu exp spirt-indb --minibatches {}", o.minibatches),
+    )
+    .with_intro(
+        "§4.2: gradient averaging and model update on ResNet-18-sized slabs, the naive \
+         fetch-update-store loop vs SPIRT's in-database computation. Virtual mode runs \
+         the calibrated Redis latency model at paper scale; with `--real` the same \
+         benchmark moves actual 46.8 MB slabs and executes the PJRT-compiled Pallas \
+         kernels inside the Redis substrate (the RedisAI analog).",
+    )
+    .with_table(t)
+}
+
+/// Legacy CLI view of [`report`].
+pub fn render(o: &Outcome) -> String {
+    report(o).to_text()
 }
 
 #[cfg(test)]
@@ -179,6 +210,14 @@ mod tests {
             o.naive_update_secs
         );
         assert!(rel_err(o.indb_update_secs, PAPER.indb_update) < 0.15, "{:.2}", o.indb_update_secs);
+    }
+
+    #[test]
+    fn report_status_is_pass_in_virtual_mode() {
+        let o = run(None, 24).unwrap();
+        let r = report(&o);
+        assert_eq!(r.verdicts(), (4, 0), "all four paper anchors within tolerance");
+        assert_eq!(r.status(), Some(crate::report::Verdict::Pass));
     }
 
     #[test]

@@ -5,8 +5,18 @@
 use crate::cloud::calibration::{peak_ram_mb, profile, FrameworkKind};
 use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig};
 use crate::metrics::CostKind;
-use crate::util::table::{Align, Table};
+use crate::report::{Align, Cell, Report, Table};
 use crate::Result;
+
+/// Tolerances for the paper-anchored columns — the same bands the unit
+/// tests below assert, so a WARN in `docs/` and a failing test share a
+/// boundary. The cost band is 30% because the paper's AllReduce /
+/// ScatterReduce cost cells are internally inconsistent with its own
+/// GB-second formula (see `costs_within_30pct_of_paper`).
+pub const PER_BATCH_TOL: f64 = 0.15;
+pub const COST_TOL: f64 = 0.30;
+/// Peak-RAM band (EXPERIMENTS.md: within 7% of the paper's figures).
+pub const RAM_TOL: f64 = 0.07;
 
 /// One Table 2 row.
 #[derive(Debug, Clone)]
@@ -80,27 +90,26 @@ pub fn run(workers: usize) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
-/// Render the paper-vs-measured table.
-pub fn render(rows: &[Row]) -> String {
-    let mut t = Table::new(&[
-        "Framework",
-        "Per-batch (s)",
-        "Total time (s)",
-        "Peak RAM (MB)",
-        "Cost/worker ($)",
-        "Total cost ($)",
-        "Paper total ($)",
-    ])
-    .title("Table 2 — Training time, peak RAM and cost per epoch (B=512, 4 workers x 24 batches)")
-    .align(&[
-        Align::Left,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-    ]);
+/// Build the paper-vs-measured report (anchored on per-batch duration,
+/// peak RAM and total cost). `workers` is the count the rows were run
+/// with, so the rendered title and reproduce command match the data.
+pub fn report(rows: &[Row], workers: usize) -> Report {
+    let mut t = Table::new(
+        "table2",
+        &[
+            ("Framework", Align::Left),
+            ("Per-batch (s)", Align::Right),
+            ("Total time (s)", Align::Right),
+            ("Peak RAM (MB)", Align::Right),
+            ("Cost/worker ($)", Align::Right),
+            ("Total cost ($)", Align::Right),
+            ("Paper total ($)", Align::Right),
+        ],
+    )
+    .title(format!(
+        "Table 2 — Training time, peak RAM and cost per epoch (B=512, {workers} workers x \
+         24 batches)"
+    ));
 
     let mut last_arch = String::new();
     for row in rows {
@@ -110,18 +119,51 @@ pub fn render(rows: &[Row]) -> String {
             }
             last_arch = row.arch.clone();
         }
-        let (paper_batch, _paper_ram, paper_cost) = paper_row(row.framework, &row.arch);
-        t.row(vec![
-            format!("{} [{}]", row.framework.name(), row.arch),
-            format!("{:.2} (paper {:.2})", row.per_batch_secs, paper_batch),
-            format!("{:.1}", row.total_time_secs),
-            row.peak_ram_mb.map(|m| format!("{m:.0}")).unwrap_or_else(|| "N/A".into()),
-            format!("{:.4}", row.cost_per_worker_usd),
-            format!("{:.4}", row.total_cost_usd),
-            format!("{paper_cost:.4}"),
+        let (paper_batch, paper_ram, paper_cost) = paper_row(row.framework, &row.arch);
+        let ram_cell = match row.peak_ram_mb {
+            Some(m) if paper_ram > 0.0 => Cell::anchored(format!("{m:.0}"), m, paper_ram, RAM_TOL),
+            Some(m) => Cell::num(m, 0),
+            None => Cell::text("N/A"),
+        };
+        t.push_row(vec![
+            Cell::text(format!("{} [{}]", row.framework.name(), row.arch)),
+            Cell::anchored(
+                format!("{:.2} (paper {:.2})", row.per_batch_secs, paper_batch),
+                row.per_batch_secs,
+                paper_batch,
+                PER_BATCH_TOL,
+            ),
+            Cell::num(row.total_time_secs, 1),
+            ram_cell,
+            Cell::num(row.cost_per_worker_usd, 4),
+            Cell::anchored(
+                format!("{:.4}", row.total_cost_usd),
+                row.total_cost_usd,
+                paper_cost,
+                COST_TOL,
+            ),
+            Cell::num(paper_cost, 4),
         ]);
     }
-    t.render()
+    Report::new(
+        "table2",
+        "Table 2 — Training time, peak RAM and cost per epoch",
+        format!("slsgpu exp table2 --workers {workers}"),
+    )
+    .with_intro(format!(
+        "All five frameworks × {{MobileNet, ResNet-18}} at the paper's scale (B=512, \
+         {workers} workers × 24 batches, AWS pricing). Per-batch durations and total \
+         costs are anchored to the paper's Table 2; Peak RAM uses the calibrated \
+         per-framework memory model. Time is virtual (the paper's AWS axis); costs \
+         follow the paper's own GB-second + request-fee formulas."
+    ))
+    .with_table(t)
+}
+
+/// Legacy CLI view of [`report`] at the paper's 4-worker scale (the shape
+/// the benches and tests reference).
+pub fn render(rows: &[Row]) -> String {
+    report(rows, 4).to_text()
 }
 
 #[cfg(test)]
@@ -210,5 +252,18 @@ mod tests {
         let s = render(&rows);
         assert!(s.contains("SPIRT [mobilenet]"));
         assert!(s.contains("GPU (g4dn.xlarge) [resnet18]"));
+    }
+
+    #[test]
+    fn report_anchors_duration_and_cost_on_every_row() {
+        let rows = run(4).unwrap();
+        let r = report(&rows, 4);
+        let (pass, warn) = r.verdicts();
+        // Per-batch + total cost anchored on all 10 rows, RAM on the 8
+        // serverless rows.
+        assert_eq!(pass + warn, 2 * rows.len() + 8, "pass={pass} warn={warn}");
+        // The tolerance-tested columns (duration ≤15%, cost ≤30%) pass by
+        // the assertions above, so the report can at worst WARN on RAM.
+        assert!(r.status().is_some());
     }
 }

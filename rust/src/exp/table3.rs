@@ -12,9 +12,9 @@ use std::rc::Rc;
 
 use crate::cloud::FrameworkKind;
 use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use crate::report::{Align, Cell, Report, Table};
 use crate::runtime::Engine;
 use crate::train::{run_session, SessionConfig, SessionReport};
-use crate::util::table::{Align, Table};
 use crate::Result;
 
 /// Paper Table 3 (minutes to 80%, final accuracy %).
@@ -140,44 +140,69 @@ pub fn paper_epoch_secs(fw: FrameworkKind, publish_rate: f64) -> Result<f64> {
     Ok(stats.epoch_secs)
 }
 
-pub fn render(rows: &[Row], cfg: &Table3Config) -> String {
-    let mut t = Table::new(&[
-        "Framework",
-        "Time to target (min)",
-        "Final acc (%)",
-        "Epochs",
-        "Epoch cost (s)",
-        "Paper (min, %)",
-    ])
+/// Build the Table 3 report. Convergence of the executed model is measured,
+/// not anchored: the synthetic-CIFAR substitution changes the absolute
+/// numbers by design, so the paper's values render as a comparison column
+/// and the *shape* assertions live in the integration tests.
+pub fn report(rows: &[Row], cfg: &Table3Config) -> Report {
+    let mut t = Table::new(
+        "table3",
+        &[
+            ("Framework", Align::Left),
+            ("Time to target (min)", Align::Right),
+            ("Final acc (%)", Align::Right),
+            ("Epochs", Align::Right),
+            ("Epoch cost (s)", Align::Right),
+            ("Paper (min, %)", Align::Right),
+        ],
+    )
     .title(format!(
         "Table 3 — Convergence ({} on synthetic CIFAR, target {:.0}%, paper-scale time axis)",
         cfg.model,
         cfg.target_acc * 100.0
-    ))
-    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+    ));
 
     for row in rows {
         let (paper_min, paper_acc) = paper_row(row.framework);
-        t.row(vec![
-            row.framework.name().to_string(),
-            row.time_to_target_min
-                .map(|m| format!("{m:.1}"))
-                .unwrap_or_else(|| {
-                    format!(
-                        ">{:.1}",
-                        row.session.reports.len() as f64 * row.paper_epoch_secs / 60.0
-                    )
-                }),
-            row.session
-                .final_acc
-                .map(|a| format!("{:.1}", a * 100.0))
-                .unwrap_or_else(|| "-".into()),
-            row.session.reports.len().to_string(),
-            format!("{:.1}", row.paper_epoch_secs),
-            format!("{paper_min:.0}, {paper_acc:.1}"),
+        let time_cell = match row.time_to_target_min {
+            Some(m) => Cell::num(m, 1),
+            None => Cell::text(format!(
+                ">{:.1}",
+                row.session.reports.len() as f64 * row.paper_epoch_secs / 60.0
+            )),
+        };
+        let acc_cell = match row.session.final_acc {
+            Some(a) => Cell::text(format!("{:.1}", a * 100.0)).with_value(a * 100.0),
+            None => Cell::text("-"),
+        };
+        t.push_row(vec![
+            Cell::text(row.framework.name()),
+            time_cell,
+            acc_cell,
+            Cell::count(row.session.reports.len() as u64),
+            Cell::num(row.paper_epoch_secs, 1),
+            Cell::text(format!("{paper_min:.0}, {paper_acc:.1}")),
         ]);
     }
-    t.render()
+    Report::new(
+        "table3",
+        "Table 3 / Fig. 4 — convergence on the executed model",
+        format!("slsgpu exp table3 --model {} --epochs {}", cfg.model, cfg.max_epochs),
+    )
+    .with_intro(
+        "All five frameworks training the executed model end to end: real gradients \
+         through the PJRT artifacts, accuracy on the synthetic-CIFAR task, each epoch \
+         priced at the paper-scale virtual cost of Table 2 (MLLess at its measured \
+         publish rate). Expect the paper's shape: GPU fastest to target, SPIRT the \
+         best serverless trade-off, MLLess slower, AllReduce/ScatterReduce an order \
+         of magnitude slower with AllReduce eventually most accurate.",
+    )
+    .with_table(t)
+}
+
+/// Legacy CLI view of [`report`].
+pub fn render(rows: &[Row], cfg: &Table3Config) -> String {
+    report(rows, cfg).to_text()
 }
 
 /// Render the Fig. 4 accuracy-vs-time series as CSV (for plotting).

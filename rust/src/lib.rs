@@ -27,7 +27,11 @@
 //! * [`exp`] — drivers that regenerate every table and figure of the paper,
 //!   plus the fault-resilience table (`exp::table4_faults`) and the
 //!   4→256-worker scalability sweep (`exp::scale_sweep`, parallelized over
-//!   std threads).
+//!   std threads). Every driver returns a typed [`report::Report`].
+//! * [`report`] — the documentation pipeline: the typed report model
+//!   (tables, rows, cells with paper anchors and PASS/WARN verdicts) with
+//!   text/Markdown/CSV/JSON renderers, and the suite runner behind
+//!   `slsgpu report` that regenerates the `docs/` tree deterministically.
 //!
 //! Time in experiment outputs is *virtual* (the paper's AWS time axis,
 //! calibrated from the paper's own measurements — see
@@ -40,6 +44,7 @@ pub mod data;
 pub mod exp;
 pub mod faults;
 pub mod metrics;
+pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

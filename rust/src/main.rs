@@ -12,6 +12,9 @@
 //! slsgpu scale-sweep [--workers 4,16,64,256] [--modes bsp,async:2]
 //!                    [--arch mobilenet] [--batches 24] [--epochs 1]
 //!                    [--threads 0] [--csv out.csv]  # 5 archs × W × mode
+//! slsgpu report [--out docs] [--skip table2,...]    # regenerate docs/
+//!               [--workers 4] [--sweep-workers 4,16,64,256]
+//!               [--sweep-batches 24] [--threads 0] [--fault-epochs 3]
 //! slsgpu train --framework spirt --model mobilenet_s --epochs 5
 //! slsgpu artifacts                            # list compiled artifacts
 //! ```
@@ -67,6 +70,7 @@ fn run() -> Result<()> {
         Some("exp") => run_exp(&args),
         Some("fault-tolerance") => run_fault_tolerance(&args),
         Some("scale-sweep") => run_scale_sweep(&args),
+        Some("report") => run_report(&args),
         Some("train") => run_train(&args),
         Some("artifacts") => {
             let engine = engine_from(&args)?;
@@ -86,17 +90,44 @@ fn run() -> Result<()> {
             Ok(())
         }
         Some(other) => bail!(
-            "unknown subcommand {other:?} (exp|fault-tolerance|scale-sweep|train|artifacts)"
+            "unknown subcommand {other:?} (exp|fault-tolerance|scale-sweep|report|train|artifacts)"
         ),
         None => {
             println!("slsgpu — serverless-vs-GPU training testbed (see README)");
             println!(
                 "subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, \
-                 fault-tolerance, scale-sweep, train, artifacts"
+                 fault-tolerance, scale-sweep, report, train, artifacts"
             );
             Ok(())
         }
     }
+}
+
+/// Regenerate the `docs/` tree: run the full virtual-mode experiment suite
+/// and render every report as a Markdown page + JSON data file, plus the
+/// `REPORT.md` summary. Deterministic: rerunning produces identical bytes.
+fn run_report(args: &Args) -> Result<()> {
+    let mut cfg = slsgpu::report::suite::SuiteConfig::default();
+    if let Some(skip) = args.get("skip") {
+        cfg.skip = skip.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    cfg.table2_workers = args.get_usize("workers", 4)?;
+    if let Some(w) = args.get("sweep-workers") {
+        cfg.sweep.worker_counts = parse_list(w)?;
+    }
+    if let Some(m) = args.get("sweep-modes") {
+        cfg.sweep.modes = m.split(',').map(SyncMode::parse).collect::<Result<Vec<_>>>()?;
+    }
+    cfg.sweep.batches_per_epoch = args.get_usize("sweep-batches", 24)?;
+    cfg.sweep.threads = args.get_usize("threads", 0)?;
+    cfg.fault.epochs = args.get_usize("fault-epochs", 3)?;
+    cfg.fault.seed = args.get_usize("seed", 42)? as u64;
+
+    let out = std::path::PathBuf::from(args.get_or("out", "docs"));
+    let entries = slsgpu::report::suite::run(&cfg)?;
+    let written = slsgpu::report::suite::write_docs(&entries, &out)?;
+    println!("wrote {} files to {}", written.len(), out.display());
+    Ok(())
 }
 
 /// The scalability table: 5 architectures × worker counts × sync modes,
@@ -155,7 +186,7 @@ fn run_exp(args: &Args) -> Result<()> {
         "table2" => {
             let workers = args.get_usize("workers", 4)?;
             let rows = exp::table2::run(workers)?;
-            print!("{}", exp::table2::render(&rows));
+            print!("{}", exp::table2::report(&rows, workers).to_text());
         }
         "fig2" => {
             let counts = parse_list(args.get_or("workers", "4,8,12,16"))?;
@@ -165,31 +196,15 @@ fn run_exp(args: &Args) -> Result<()> {
         "fig3" => {
             let rates = parse_flist(args.get_or("rates", "1.0,0.5,0.2,0.1,0.05"))?;
             let points = exp::fig3::run_sim(&rates)?;
+            // The paper-headline footer is a report note now.
             print!("{}", exp::fig3::render_sim(&points));
-            println!(
-                "paper headline: {} s -> {} s (13x) with filtering",
-                exp::fig3::PAPER_UNFILTERED_SECS,
-                exp::fig3::PAPER_FILTERED_SECS
-            );
         }
         "fig3-real" => {
             let engine = engine_from(args)?;
             let model = args.get_or("model", "mobilenet_s");
             let epochs = args.get_usize("epochs", 3)?;
             let c = exp::fig3::run_real(engine, model, epochs)?;
-            println!(
-                "MLLess real-gradient contrast ({model}, {epochs} epochs):\n  \
-                 unfiltered: {:.1}s, {} on the wire\n  \
-                 filtered:   {:.1}s, {} on the wire (publish rate {:.0}%)\n  \
-                 speedup: {:.1}x (paper: {:.1}x)",
-                c.unfiltered_secs,
-                slsgpu::util::fmt_bytes(c.unfiltered_bytes),
-                c.filtered_secs,
-                slsgpu::util::fmt_bytes(c.filtered_bytes),
-                c.filtered_publish_rate * 100.0,
-                c.speedup,
-                exp::fig3::PAPER_UNFILTERED_SECS / exp::fig3::PAPER_FILTERED_SECS,
-            );
+            print!("{}", exp::fig3::report_real(&c, model, epochs).to_text());
         }
         "spirt-indb" => {
             let minibatches = args.get_usize("minibatches", 24)?;

@@ -202,6 +202,41 @@ impl RecoveryStats {
         RecoveryStats::default()
     }
 
+    /// One-line human summary of everything that fired (`-` when nothing
+    /// did) — the `Recovery` column of the resilience reports.
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if self.invocation_retries > 0 {
+            parts.push(format!("{} retried", self.invocation_retries));
+        }
+        if self.supervisor_restarts > 0 {
+            parts.push(format!("{} sup restart", self.supervisor_restarts));
+        }
+        if self.snapshot_restores > 0 {
+            parts.push(format!("{} restored", self.snapshot_restores));
+        }
+        if self.rerouted_fetches > 0 {
+            parts.push(format!("{} rerouted", self.rerouted_fetches));
+        }
+        if self.dropped_updates > 0 {
+            parts.push(format!("{} dropped", self.dropped_updates));
+        }
+        if self.poisoned_grads > 0 {
+            parts.push(format!("{} poisoned", self.poisoned_grads));
+        }
+        if self.straggler_secs > 0.0 {
+            parts.push(format!("+{:.0}s straggle", self.straggler_secs));
+        }
+        if self.downtime_secs > 0.0 {
+            parts.push(format!("{:.1}s down", self.downtime_secs));
+        }
+        if parts.is_empty() {
+            "-".into()
+        } else {
+            parts.join(", ")
+        }
+    }
+
     /// Any fault fired or any recovery action was taken.
     pub fn any(&self) -> bool {
         self.invocation_retries
@@ -330,6 +365,15 @@ mod tests {
         assert_eq!(c.wire_bytes(), 150);
         assert_eq!(c.total_ops(), 3);
         assert_eq!(c.bytes(CommKind::InDb), 10_000);
+    }
+
+    #[test]
+    fn recovery_summary_lists_fired_parts_only() {
+        let mut r = RecoveryStats::new();
+        assert_eq!(r.summary(), "-");
+        r.invocation_retries = 1;
+        r.downtime_secs = 2.5;
+        assert_eq!(r.summary(), "1 retried, 2.5s down");
     }
 
     #[test]

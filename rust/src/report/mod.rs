@@ -1,0 +1,26 @@
+//! Typed experiment reports — the crate's documentation pipeline.
+//!
+//! The paper's contribution is a comparative table set; this module makes
+//! the reproduction's tables *values* instead of side effects. Every
+//! experiment driver in [`crate::exp`] builds a [`Report`] (sections →
+//! tables → rows → cells, with optional paper [`Anchor`]s and PASS/WARN
+//! [`Verdict`]s), and four pure renderers turn that one value into:
+//!
+//! * the legacy CLI text view ([`Report::to_text`] — byte-compatible with
+//!   the pre-report `render()` output),
+//! * a `docs/` Markdown page ([`Report::to_markdown`]),
+//! * CSV ([`Table::to_csv`]),
+//! * machine-readable JSON ([`Report::to_json`], written under
+//!   `docs/data/` as a bench/accuracy trajectory).
+//!
+//! [`suite`] runs the whole virtual-mode experiment suite and regenerates
+//! the `docs/` tree deterministically; CI diffs that tree against the
+//! checked-in state so the rendered documentation can never drift from
+//! what the simulator measures.
+
+pub mod model;
+pub mod render;
+pub mod suite;
+
+pub use crate::util::table::Align;
+pub use model::{rel_err, vs_paper, Anchor, Cell, Column, Report, Row, Section, Table, Verdict};

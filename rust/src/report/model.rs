@@ -1,0 +1,375 @@
+//! The typed report model: [`Report`] → [`Section`] → [`Table`] → [`Row`]
+//! → [`Cell`], with optional paper [`Anchor`]s and tolerance [`Verdict`]s.
+//!
+//! Every experiment driver builds one of these instead of printing; the
+//! renderers in [`super::render`] turn the same value into the CLI text
+//! view, a `docs/` Markdown page, CSV, or machine-readable JSON — so the
+//! documented reproduction status can never drift from what the simulator
+//! measured. The `rel_err`/`vs_paper` helpers that used to live in
+//! `exp::mod` are generalized here (and re-exported from `exp` for
+//! backward compatibility): an anchored cell carries the measured value,
+//! the paper value and the tolerance, and derives its PASS/WARN verdict
+//! from exactly the relative error the experiment tests assert.
+
+use crate::util::table::Align;
+
+/// Relative error of a measured value against a paper anchor. A zero paper
+/// value has no meaningful relative error, so it reports 0 (see
+/// `exp::vs_paper` for the rendering consequence).
+pub fn rel_err(measured: f64, paper: f64) -> f64 {
+    if paper == 0.0 {
+        return 0.0;
+    }
+    (measured - paper).abs() / paper.abs()
+}
+
+/// Format a measured-vs-paper cell: `measured (paper, ±err%)`. A zero paper
+/// value has no meaningful relative error (and dividing by it would render
+/// `inf`/`NaN`), so the percentage is omitted for that cell.
+pub fn vs_paper(measured: f64, paper: f64, digits: usize) -> String {
+    if paper == 0.0 {
+        return format!("{measured:.prec$} (paper {paper:.prec$})", prec = digits);
+    }
+    format!(
+        "{measured:.prec$} (paper {paper:.prec$}, {:+.1}%)",
+        (measured - paper) / paper * 100.0,
+        prec = digits
+    )
+}
+
+/// Outcome of checking a measured value against a paper anchor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Relative error within the anchor's tolerance.
+    Pass,
+    /// Relative error beyond the anchor's tolerance — the cell is flagged in
+    /// rendered docs, but nothing fails: WARN is a documentation state, the
+    /// hard bounds live in the experiment tests.
+    Warn,
+}
+
+impl Verdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "PASS",
+            Verdict::Warn => "WARN",
+        }
+    }
+}
+
+/// A paper-value anchor with a relative-error tolerance.
+///
+/// The tolerance is the same band the experiment's unit tests assert (e.g.
+/// Table 2 per-batch durations: 15%), so a WARN in the rendered docs and a
+/// failing tolerance test fire on the same boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Anchor {
+    /// The paper's reported value.
+    pub paper: f64,
+    /// Maximum relative error considered PASS (inclusive).
+    pub tol: f64,
+}
+
+impl Anchor {
+    pub fn new(paper: f64, tol: f64) -> Anchor {
+        Anchor { paper, tol }
+    }
+
+    /// PASS iff `rel_err(measured, paper) <= tol` — byte-for-byte the
+    /// `exp::rel_err` definition (asserted in `rust/tests/report.rs`).
+    pub fn verdict(&self, measured: f64) -> Verdict {
+        if rel_err(measured, self.paper) <= self.tol {
+            Verdict::Pass
+        } else {
+            Verdict::Warn
+        }
+    }
+}
+
+/// One table cell: rendered text plus optional machine-readable value and
+/// paper anchor.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// The text exactly as the CLI table renders it.
+    pub text: String,
+    /// The raw measured value (exported to JSON/CSV; drives the verdict).
+    pub value: Option<f64>,
+    /// Paper anchor + tolerance, when the paper reports this quantity.
+    pub anchor: Option<Anchor>,
+}
+
+impl Cell {
+    /// A plain text cell (labels, qualitative content, em-dashes).
+    pub fn text(text: impl Into<String>) -> Cell {
+        Cell { text: text.into(), value: None, anchor: None }
+    }
+
+    /// A numeric cell rendered with fixed decimals.
+    pub fn num(value: f64, digits: usize) -> Cell {
+        debug_assert!(value.is_finite(), "non-finite cell value {value}");
+        Cell { text: format!("{value:.digits$}"), value: Some(value), anchor: None }
+    }
+
+    /// An integer count cell.
+    pub fn count(value: u64) -> Cell {
+        Cell { text: value.to_string(), value: Some(value as f64), anchor: None }
+    }
+
+    /// An anchored numeric cell with custom text (legacy CLI formats).
+    pub fn anchored(text: impl Into<String>, measured: f64, paper: f64, tol: f64) -> Cell {
+        debug_assert!(measured.is_finite(), "non-finite cell value {measured}");
+        Cell { text: text.into(), value: Some(measured), anchor: Some(Anchor::new(paper, tol)) }
+    }
+
+    /// An anchored cell in the canonical `measured (paper X, ±err%)` format.
+    pub fn vs_paper(measured: f64, paper: f64, digits: usize, tol: f64) -> Cell {
+        Cell::anchored(vs_paper(measured, paper, digits), measured, paper, tol)
+    }
+
+    /// Attach a raw value to a text cell (keeps the custom rendering).
+    pub fn with_value(mut self, value: f64) -> Cell {
+        self.value = Some(value);
+        self
+    }
+
+    /// PASS/WARN for anchored cells with a value; `None` otherwise.
+    pub fn verdict(&self) -> Option<Verdict> {
+        match (self.value, self.anchor) {
+            (Some(v), Some(a)) => Some(a.verdict(v)),
+            _ => None,
+        }
+    }
+}
+
+/// A table column: header name + alignment (shared with the ASCII renderer).
+#[derive(Debug, Clone)]
+pub struct Column {
+    pub name: String,
+    pub align: Align,
+}
+
+/// One table row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub cells: Vec<Cell>,
+}
+
+/// A typed table: the unit the renderers align, link and export.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Stable identifier (used for CSV/JSON export labels).
+    pub id: String,
+    /// Title line above the table (the legacy CLI table title).
+    pub title: Option<String>,
+    pub columns: Vec<Column>,
+    pub rows: Vec<Row>,
+    /// Row counts after which a horizontal rule is drawn (section breaks).
+    pub rules: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(id: impl Into<String>, columns: &[(&str, Align)]) -> Table {
+        Table {
+            id: id.into(),
+            title: None,
+            columns: columns
+                .iter()
+                .map(|(name, align)| Column { name: name.to_string(), align: *align })
+                .collect(),
+            rows: Vec::new(),
+            rules: Vec::new(),
+        }
+    }
+
+    pub fn title(mut self, title: impl Into<String>) -> Table {
+        self.title = Some(title.into());
+        self
+    }
+
+    pub fn push_row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch in table {}", self.id);
+        self.rows.push(Row { cells });
+    }
+
+    /// Draw a horizontal rule after the last added row (section break).
+    pub fn rule(&mut self) {
+        self.rules.push(self.rows.len());
+    }
+
+    /// (PASS count, WARN count) over all anchored cells.
+    pub fn verdicts(&self) -> (usize, usize) {
+        let mut pass = 0;
+        let mut warn = 0;
+        for row in &self.rows {
+            for cell in &row.cells {
+                match cell.verdict() {
+                    Some(Verdict::Pass) => pass += 1,
+                    Some(Verdict::Warn) => warn += 1,
+                    None => {}
+                }
+            }
+        }
+        (pass, warn)
+    }
+}
+
+/// A report section: optional heading, leading paragraphs, tables, and
+/// trailing notes (rendered after the tables, like the legacy CLI footers).
+#[derive(Debug, Clone, Default)]
+pub struct Section {
+    pub heading: Option<String>,
+    pub paragraphs: Vec<String>,
+    pub tables: Vec<Table>,
+    pub notes: Vec<String>,
+}
+
+impl Section {
+    pub fn new() -> Section {
+        Section::default()
+    }
+
+    pub fn heading(mut self, h: impl Into<String>) -> Section {
+        self.heading = Some(h.into());
+        self
+    }
+
+    pub fn paragraph(mut self, p: impl Into<String>) -> Section {
+        self.paragraphs.push(p.into());
+        self
+    }
+
+    pub fn table(mut self, t: Table) -> Section {
+        self.tables.push(t);
+        self
+    }
+
+    pub fn note(mut self, n: impl Into<String>) -> Section {
+        self.notes.push(n.into());
+        self
+    }
+}
+
+/// A complete experiment report.
+///
+/// `to_text` reproduces the legacy CLI output (sections only — the title
+/// and intro are page front-matter); `to_markdown` renders the `docs/`
+/// page; `to_json` the machine-readable export under `docs/data/`.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Stable identifier: the docs page / data file name (`table2`, ...).
+    pub id: String,
+    /// Page title (`Table 2 — Training time, ...`).
+    pub title: String,
+    /// The CLI command that regenerates this report.
+    pub command: String,
+    /// Page-level context paragraphs (methodology; Markdown/JSON only).
+    pub intro: Vec<String>,
+    pub sections: Vec<Section>,
+}
+
+impl Report {
+    pub fn new(
+        id: impl Into<String>,
+        title: impl Into<String>,
+        command: impl Into<String>,
+    ) -> Report {
+        Report {
+            id: id.into(),
+            title: title.into(),
+            command: command.into(),
+            intro: Vec::new(),
+            sections: Vec::new(),
+        }
+    }
+
+    pub fn with_intro(mut self, p: impl Into<String>) -> Report {
+        self.intro.push(p.into());
+        self
+    }
+
+    pub fn with_section(mut self, s: Section) -> Report {
+        self.sections.push(s);
+        self
+    }
+
+    /// Append a table to the last section (creating one if none exists).
+    pub fn with_table(mut self, t: Table) -> Report {
+        if self.sections.is_empty() {
+            self.sections.push(Section::new());
+        }
+        self.sections.last_mut().unwrap().tables.push(t);
+        self
+    }
+
+    /// Append a trailing note to the last section (creating one if needed).
+    pub fn with_note(mut self, n: impl Into<String>) -> Report {
+        if self.sections.is_empty() {
+            self.sections.push(Section::new());
+        }
+        self.sections.last_mut().unwrap().notes.push(n.into());
+        self
+    }
+
+    /// All tables across all sections, in order.
+    pub fn tables(&self) -> impl Iterator<Item = &Table> {
+        self.sections.iter().flat_map(|s| s.tables.iter())
+    }
+
+    /// (PASS count, WARN count) over every anchored cell in the report.
+    pub fn verdicts(&self) -> (usize, usize) {
+        self.tables().fold((0, 0), |(p, w), t| {
+            let (tp, tw) = t.verdicts();
+            (p + tp, w + tw)
+        })
+    }
+
+    /// Overall status: `None` if the report has no anchored cells, else
+    /// WARN if any anchored cell is out of tolerance, else PASS.
+    pub fn status(&self) -> Option<Verdict> {
+        match self.verdicts() {
+            (0, 0) => None,
+            (_, 0) => Some(Verdict::Pass),
+            _ => Some(Verdict::Warn),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchored_cell_verdicts() {
+        let pass = Cell::vs_paper(14.0, 14.343, 2, 0.15);
+        assert_eq!(pass.verdict(), Some(Verdict::Pass));
+        assert!(pass.text.starts_with("14.00 (paper 14.34"), "{}", pass.text);
+        let warn = Cell::vs_paper(99.0, 69.425, 2, 0.15);
+        assert_eq!(warn.verdict(), Some(Verdict::Warn));
+        assert_eq!(Cell::text("label").verdict(), None);
+    }
+
+    #[test]
+    fn table_counts_verdicts_and_checks_arity() {
+        let mut t = Table::new("t", &[("a", Align::Left), ("b", Align::Right)]);
+        t.push_row(vec![Cell::text("x"), Cell::vs_paper(1.0, 1.0, 1, 0.1)]);
+        t.push_row(vec![Cell::text("y"), Cell::vs_paper(2.0, 1.0, 1, 0.1)]);
+        assert_eq!(t.verdicts(), (1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("t", &[("a", Align::Left), ("b", Align::Right)]);
+        t.push_row(vec![Cell::text("only one")]);
+    }
+
+    #[test]
+    fn report_status_aggregates() {
+        let mut t = Table::new("t", &[("v", Align::Right)]);
+        t.push_row(vec![Cell::vs_paper(1.0, 1.0, 1, 0.1)]);
+        let r = Report::new("r", "R", "cmd").with_table(t);
+        assert_eq!(r.status(), Some(Verdict::Pass));
+        let empty = Report::new("r", "R", "cmd");
+        assert_eq!(empty.status(), None);
+    }
+}

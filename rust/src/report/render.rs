@@ -1,0 +1,424 @@
+//! Renderers: one typed [`Report`], four faithful views.
+//!
+//! * [`Report::to_text`] — the legacy CLI view: aligned ASCII tables with
+//!   box-drawing rules, byte-compatible with the pre-report `render()`
+//!   output every experiment test references.
+//! * [`Report::to_markdown`] — the `docs/` page: title, provenance line,
+//!   methodology paragraphs, GitHub tables with WARN markers on anchored
+//!   cells that exceed their tolerance.
+//! * [`Table::to_csv`] — per-table CSV preferring raw values over the
+//!   formatted text.
+//! * [`Report::to_json`] — the machine-readable export under `docs/data/`,
+//!   built on [`crate::util::json::Json`] (BTreeMap-backed, so key order —
+//!   and therefore the byte stream — is deterministic).
+
+use crate::util::json::Json;
+use crate::util::table::{Align, Table as AsciiTable};
+
+use super::model::{Cell, Report, Section, Table, Verdict};
+
+// ---------------------------------------------------------------------------
+// Plain text (legacy CLI shape)
+
+impl Table {
+    /// Render as the legacy aligned ASCII table (title line + box borders).
+    ///
+    /// ```
+    /// use slsgpu::report::{Align, Cell, Table};
+    /// let mut t = Table::new("demo", &[("name", Align::Left), ("value", Align::Right)]);
+    /// t.push_row(vec![Cell::text("a"), Cell::num(1.5, 1)]);
+    /// assert!(t.to_text().contains("| a    |   1.5 |"));
+    /// ```
+    pub fn to_text(&self) -> String {
+        let names: Vec<&str> = self.columns.iter().map(|c| c.name.as_str()).collect();
+        let aligns: Vec<Align> = self.columns.iter().map(|c| c.align).collect();
+        let mut t = AsciiTable::new(&names).align(&aligns);
+        if let Some(title) = &self.title {
+            t = t.title(title.clone());
+        }
+        for (i, row) in self.rows.iter().enumerate() {
+            t.row(row.cells.iter().map(|c| c.text.clone()).collect());
+            if self.rules.contains(&(i + 1)) {
+                t.rule();
+            }
+        }
+        t.render()
+    }
+}
+
+impl Section {
+    fn to_text(&self) -> String {
+        let mut out = String::new();
+        if let Some(h) = &self.heading {
+            out.push_str(h);
+            out.push_str("\n\n");
+        }
+        for p in &self.paragraphs {
+            out.push_str(p);
+            out.push_str("\n\n");
+        }
+        for (i, t) in self.tables.iter().enumerate() {
+            if i > 0 {
+                out.push('\n');
+            }
+            out.push_str(&t.to_text());
+        }
+        for n in &self.notes {
+            out.push_str(n);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl Report {
+    /// Render the CLI view: sections only — the report title and intro are
+    /// page front-matter and stay out of the terminal output, preserving
+    /// the pre-report stdout shape.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (i, s) in self.sections.iter().enumerate() {
+            if i > 0 {
+                out.push('\n');
+            }
+            out.push_str(&s.to_text());
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Markdown (docs/ pages)
+
+fn md_escape(text: &str) -> String {
+    text.replace('|', "\\|")
+}
+
+fn md_cell(cell: &Cell) -> String {
+    match cell.verdict() {
+        Some(Verdict::Warn) => format!("{} **WARN**", md_escape(&cell.text)),
+        _ => md_escape(&cell.text),
+    }
+}
+
+impl Table {
+    /// Render as a GitHub-flavored Markdown table with alignment hints and
+    /// `**WARN**` markers on out-of-tolerance anchored cells.
+    ///
+    /// ```
+    /// use slsgpu::report::{Align, Cell, Table};
+    /// let mut t = Table::new("demo", &[("name", Align::Left), ("value", Align::Right)]);
+    /// t.push_row(vec![Cell::text("a"), Cell::num(1.5, 1)]);
+    /// let md = t.to_markdown();
+    /// assert!(md.contains("| :--- | ---: |"));
+    /// assert!(md.contains("| a | 1.5 |"));
+    /// ```
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if let Some(title) = &self.title {
+            out.push_str(&format!("**{}**\n\n", md_escape(title)));
+        }
+        let header: Vec<String> = self.columns.iter().map(|c| md_escape(&c.name)).collect();
+        out.push_str(&format!("| {} |\n", header.join(" | ")));
+        let hints: Vec<&str> = self
+            .columns
+            .iter()
+            .map(|c| match c.align {
+                Align::Left => ":---",
+                Align::Right => "---:",
+            })
+            .collect();
+        out.push_str(&format!("| {} |\n", hints.join(" | ")));
+        for row in &self.rows {
+            let cells: Vec<String> = row.cells.iter().map(md_cell).collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        let (pass, warn) = self.verdicts();
+        if pass + warn > 0 {
+            out.push_str(&format!("\n*Paper anchors: {pass} PASS, {warn} WARN.*\n"));
+        }
+        out
+    }
+}
+
+impl Section {
+    fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if let Some(h) = &self.heading {
+            out.push_str(&format!("## {h}\n\n"));
+        }
+        for p in &self.paragraphs {
+            out.push_str(p);
+            out.push_str("\n\n");
+        }
+        for t in &self.tables {
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(n);
+            out.push_str("\n\n");
+        }
+        out
+    }
+}
+
+impl Report {
+    /// Render the `docs/` page: title, provenance line, intro paragraphs,
+    /// then every section.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("# {}\n\n", self.title);
+        out.push_str(&format!(
+            "> Generated by `slsgpu report` — do not edit by hand.\n> Reproduce: `{}`\n\n",
+            self.command
+        ));
+        for p in &self.intro {
+            out.push_str(p);
+            out.push_str("\n\n");
+        }
+        for s in &self.sections {
+            out.push_str(&s.to_markdown());
+        }
+        format!("{}\n", out.trim_end())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSV
+
+fn csv_escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl Table {
+    /// Render as CSV. Cells export their raw value when one is attached
+    /// (full float precision), falling back to the rendered text.
+    ///
+    /// ```
+    /// use slsgpu::report::{Align, Cell, Table};
+    /// let mut t = Table::new("demo", &[("name", Align::Left), ("value", Align::Right)]);
+    /// t.push_row(vec![Cell::text("a,b"), Cell::num(1.5, 1)]);
+    /// assert_eq!(t.to_csv(), "name,value\n\"a,b\",1.5\n");
+    /// ```
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let header: Vec<String> = self.columns.iter().map(|c| csv_escape(&c.name)).collect();
+        out.push_str(&header.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            let fields: Vec<String> = row
+                .cells
+                .iter()
+                .map(|c| match c.value {
+                    Some(v) => format!("{v}"),
+                    None => csv_escape(&c.text),
+                })
+                .collect();
+            out.push_str(&fields.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON (docs/data/*.json)
+
+fn json_str(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn json_str_arr(items: &[String]) -> Json {
+    Json::Arr(items.iter().map(|s| json_str(s)).collect())
+}
+
+fn cell_json(cell: &Cell) -> Json {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("text".to_string(), json_str(&cell.text));
+    if let Some(v) = cell.value {
+        obj.insert("value".to_string(), Json::Num(v));
+    }
+    if let Some(a) = cell.anchor {
+        let mut anchor = std::collections::BTreeMap::new();
+        anchor.insert("paper".to_string(), Json::Num(a.paper));
+        anchor.insert("tol".to_string(), Json::Num(a.tol));
+        if let Some(verdict) = cell.verdict() {
+            anchor.insert("verdict".to_string(), json_str(verdict.name()));
+        }
+        obj.insert("anchor".to_string(), Json::Obj(anchor));
+    }
+    Json::Obj(obj)
+}
+
+impl Table {
+    /// Render as a JSON object (columns, rows of typed cells, rules).
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("id".to_string(), json_str(&self.id));
+        if let Some(title) = &self.title {
+            obj.insert("title".to_string(), json_str(title));
+        }
+        obj.insert(
+            "columns".to_string(),
+            Json::Arr(
+                self.columns
+                    .iter()
+                    .map(|c| {
+                        let mut col = std::collections::BTreeMap::new();
+                        col.insert("name".to_string(), json_str(&c.name));
+                        let align = match c.align {
+                            Align::Left => "left",
+                            Align::Right => "right",
+                        };
+                        col.insert("align".to_string(), json_str(align));
+                        Json::Obj(col)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.cells.iter().map(cell_json).collect()))
+                    .collect(),
+            ),
+        );
+        if !self.rules.is_empty() {
+            obj.insert(
+                "rules".to_string(),
+                Json::Arr(self.rules.iter().map(|r| Json::Num(*r as f64)).collect()),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+impl Report {
+    /// Render the machine-readable export. Deterministic: object keys are
+    /// sorted (BTreeMap) and floats print in Rust's shortest round-trip
+    /// form, so the same measurements always produce the same bytes.
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("id".to_string(), json_str(&self.id));
+        obj.insert("title".to_string(), json_str(&self.title));
+        obj.insert("command".to_string(), json_str(&self.command));
+        if !self.intro.is_empty() {
+            obj.insert("intro".to_string(), json_str_arr(&self.intro));
+        }
+        let (pass, warn) = self.verdicts();
+        let mut anchors = std::collections::BTreeMap::new();
+        anchors.insert("pass".to_string(), Json::Num(pass as f64));
+        anchors.insert("warn".to_string(), Json::Num(warn as f64));
+        obj.insert("anchors".to_string(), Json::Obj(anchors));
+        if let Some(status) = self.status() {
+            obj.insert("status".to_string(), json_str(status.name()));
+        }
+        obj.insert(
+            "sections".to_string(),
+            Json::Arr(
+                self.sections
+                    .iter()
+                    .map(|s| {
+                        let mut sec = std::collections::BTreeMap::new();
+                        if let Some(h) = &s.heading {
+                            sec.insert("heading".to_string(), json_str(h));
+                        }
+                        if !s.paragraphs.is_empty() {
+                            sec.insert("paragraphs".to_string(), json_str_arr(&s.paragraphs));
+                        }
+                        sec.insert(
+                            "tables".to_string(),
+                            Json::Arr(s.tables.iter().map(|t| t.to_json()).collect()),
+                        );
+                        if !s.notes.is_empty() {
+                            sec.insert("notes".to_string(), json_str_arr(&s.notes));
+                        }
+                        Json::Obj(sec)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model::{Cell, Report, Section, Table};
+    use crate::util::table::Align;
+
+    fn demo_table() -> Table {
+        let mut t = Table::new("demo", &[("name", Align::Left), ("value", Align::Right)])
+            .title("Demo table");
+        t.push_row(vec![Cell::text("pass-row"), Cell::vs_paper(1.0, 1.0, 1, 0.1)]);
+        t.push_row(vec![Cell::text("warn-row"), Cell::vs_paper(2.0, 1.0, 1, 0.1)]);
+        t
+    }
+
+    #[test]
+    fn text_matches_legacy_ascii_renderer() {
+        let s = demo_table().to_text();
+        assert!(s.starts_with("Demo table\n"), "{s}");
+        assert!(s.contains("| name     |"), "{s}");
+        assert!(s.contains("+-"), "{s}");
+    }
+
+    #[test]
+    fn markdown_flags_warn_cells_only() {
+        let md = demo_table().to_markdown();
+        assert!(md.contains("| :--- | ---: |"), "{md}");
+        assert!(md.contains("2.0 (paper 1.0, +100.0%) **WARN**"), "{md}");
+        assert!(!md.contains("1.0 (paper 1.0, +0.0%) **WARN**"), "{md}");
+        assert!(md.contains("*Paper anchors: 1 PASS, 1 WARN.*"), "{md}");
+    }
+
+    #[test]
+    fn markdown_escapes_pipes() {
+        let mut t = Table::new("t", &[("a", Align::Left)]);
+        t.push_row(vec![Cell::text("x | y")]);
+        assert!(t.to_markdown().contains("x \\| y"));
+    }
+
+    #[test]
+    fn csv_prefers_raw_values() {
+        let csv = demo_table().to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("name,value"));
+        assert_eq!(lines.next(), Some("pass-row,1"));
+        assert_eq!(lines.next(), Some("warn-row,2"));
+    }
+
+    #[test]
+    fn report_text_omits_front_matter_and_keeps_notes_order() {
+        let r = Report::new("demo", "Demo report", "slsgpu demo")
+            .with_intro("intro paragraph")
+            .with_section(Section::new().table(demo_table()).note("trailing note"));
+        let text = r.to_text();
+        assert!(!text.contains("Demo report"), "{text}");
+        assert!(!text.contains("intro paragraph"), "{text}");
+        assert!(text.ends_with("trailing note\n"), "{text}");
+        let md = r.to_markdown();
+        assert!(md.starts_with("# Demo report\n"), "{md}");
+        assert!(md.contains("intro paragraph"), "{md}");
+        assert!(md.contains("Reproduce: `slsgpu demo`"), "{md}");
+    }
+
+    #[test]
+    fn json_is_valid_and_roundtrips() {
+        let r = Report::new("demo", "Demo report", "slsgpu demo").with_table(demo_table());
+        let s = r.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&s).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_str().unwrap(), "demo");
+        assert_eq!(parsed.get("status").unwrap().as_str().unwrap(), "WARN");
+        assert_eq!(
+            parsed.get("anchors").unwrap().get("pass").unwrap().as_usize().unwrap(),
+            1
+        );
+    }
+}

@@ -1,0 +1,332 @@
+//! The full virtual-mode experiment suite + the `docs/` tree writer.
+//!
+//! `slsgpu report --out docs/` calls [`run`] (every virtual-mode experiment
+//! driver, fixed order, fixed seeds) and [`write_docs`] (one Markdown page
+//! and one JSON data file per experiment, plus the `docs/REPORT.md`
+//! summary). Because every driver is deterministic and the renderers are
+//! pure, regenerating the tree from the same source is bit-identical —
+//! which is what lets CI diff `docs/` against the checked-in state and
+//! fail when the documentation has drifted from the simulator.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::exp;
+use crate::Result;
+
+use super::model::{Report, Verdict};
+
+/// Suite knobs. Defaults reproduce the canonical `docs/` tree: paper-scale
+/// parameters everywhere, the full 4→256 scale sweep.
+#[derive(Debug, Clone)]
+pub struct SuiteConfig {
+    /// Experiment ids to skip (accepts `-` or `_` separators).
+    pub skip: Vec<String>,
+    /// Table 2 worker count (paper: 4).
+    pub table2_workers: usize,
+    /// Fig. 2 worker-count sweep (paper: 4–16).
+    pub fig2_workers: Vec<usize>,
+    /// Fig. 3 publish-rate sweep.
+    pub fig3_rates: Vec<f64>,
+    /// §4.2 in-DB benchmark minibatch count (paper: 24).
+    pub indb_minibatches: usize,
+    /// Table 4 fault-injection knobs.
+    pub fault: exp::table4_faults::FaultConfig,
+    /// Scale-sweep grid.
+    pub sweep: exp::scale_sweep::SweepConfig,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        SuiteConfig {
+            skip: Vec::new(),
+            table2_workers: 4,
+            fig2_workers: vec![4, 8, 12, 16],
+            fig3_rates: vec![1.0, 0.5, 0.2, 0.1, 0.05],
+            indb_minibatches: 24,
+            fault: exp::table4_faults::FaultConfig::default(),
+            sweep: exp::scale_sweep::SweepConfig::default(),
+        }
+    }
+}
+
+/// Why a suite entry has no report.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Ran(Report),
+    Skipped(String),
+}
+
+/// One experiment's slot in the suite, ran or skipped.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Page / data-file stem (`table2`, `scale_sweep`, ...).
+    pub id: String,
+    pub title: String,
+    pub outcome: Outcome,
+}
+
+impl Entry {
+    fn ran(report: Report) -> Entry {
+        Entry { id: report.id.clone(), title: report.title.clone(), outcome: Outcome::Ran(report) }
+    }
+
+    fn skipped(id: &str, title: &str, reason: impl Into<String>) -> Entry {
+        Entry {
+            id: id.to_string(),
+            title: title.to_string(),
+            outcome: Outcome::Skipped(reason.into()),
+        }
+    }
+}
+
+fn norm(id: &str) -> String {
+    id.trim().to_ascii_lowercase().replace('-', "_")
+}
+
+impl SuiteConfig {
+    fn skips(&self, id: &str) -> bool {
+        self.skip.iter().any(|s| norm(s) == norm(id))
+    }
+}
+
+/// The suite's experiment ids, in execution order.
+pub const EXPERIMENT_IDS: [&str; 8] = [
+    "table1",
+    "table2",
+    "fig2",
+    "fig3",
+    "spirt_indb",
+    "table3",
+    "table4_faults",
+    "scale_sweep",
+];
+
+/// Run the full virtual-mode suite. Table 3 needs compiled PJRT artifacts
+/// and is always a skipped stub here; everything else runs unless listed in
+/// `cfg.skip`. Progress goes to stderr so stdout stays machine-clean.
+pub fn run(cfg: &SuiteConfig) -> Result<Vec<Entry>> {
+    let mut entries = Vec::new();
+    for id in EXPERIMENT_IDS {
+        if cfg.skips(id) {
+            entries.push(Entry::skipped(id, &canonical_title(id), "skipped via --skip"));
+            continue;
+        }
+        if id == "table3" {
+            entries.push(Entry::skipped(
+                id,
+                &canonical_title(id),
+                "needs compiled PJRT artifacts: run `make artifacts`, then \
+                 `cargo run --release --features pjrt -- exp table3`",
+            ));
+            continue;
+        }
+        eprintln!("report: running {id} ...");
+        let report = run_one(id, cfg).with_context(|| format!("running experiment {id}"))?;
+        entries.push(Entry::ran(report));
+    }
+    Ok(entries)
+}
+
+/// Canonical title per experiment id — the single source both the skip
+/// path and the drivers' `Report::new` calls must agree on (asserted in
+/// `rust/tests/report.rs`, so a retitled driver cannot silently desync the
+/// summary row rendered when that experiment is skipped).
+pub fn canonical_title(id: &str) -> String {
+    match id {
+        "table1" => "Table 1 — Key computational stages per framework".to_string(),
+        "table2" => "Table 2 — Training time, peak RAM and cost per epoch".to_string(),
+        "fig2" => "Fig. 2 — Communication time per synchronization round".to_string(),
+        "fig3" => "Fig. 3 — MLLess significance filtering".to_string(),
+        "spirt_indb" => "SPIRT in-database ops vs naive fetch-update-store".to_string(),
+        "table3" => "Table 3 / Fig. 4 — convergence on the executed model".to_string(),
+        "table4_faults" => "Table 4 — Resilience under injected faults".to_string(),
+        "scale_sweep" => "Scale sweep — 4 → 256 workers × sync modes".to_string(),
+        other => other.to_string(),
+    }
+}
+
+fn run_one(id: &str, cfg: &SuiteConfig) -> Result<Report> {
+    Ok(match id {
+        "table1" => exp::table1::report(),
+        "table2" => {
+            let rows = exp::table2::run(cfg.table2_workers)?;
+            exp::table2::report(&rows, cfg.table2_workers)
+        }
+        "fig2" => {
+            let points = exp::fig2::run(&cfg.fig2_workers)?;
+            exp::fig2::report(&points)
+        }
+        "fig3" => {
+            let points = exp::fig3::run_sim(&cfg.fig3_rates)?;
+            exp::fig3::report_sim(&points)
+        }
+        "spirt_indb" => {
+            let outcome = exp::spirt_indb::run(None, cfg.indb_minibatches)?;
+            exp::spirt_indb::report(&outcome)
+        }
+        "table4_faults" => {
+            let t4 = exp::table4_faults::run(&cfg.fault)?;
+            exp::table4_faults::report(&t4, &cfg.fault)
+        }
+        "scale_sweep" => {
+            let points = exp::scale_sweep::run(&cfg.sweep)?;
+            exp::scale_sweep::report(&points, &cfg.sweep)
+        }
+        other => anyhow::bail!("unknown experiment id {other:?}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// docs/ tree
+
+/// Marker every generated page carries; `write_docs` only ever deletes
+/// files containing it, so pointing `--out` at a directory with
+/// hand-written Markdown cannot destroy anything.
+const PAGE_MARKER: &str = "Generated by `slsgpu report`";
+/// Counterpart marker for `data/*.json`: every generated report JSON has a
+/// `command` field starting with `slsgpu`.
+const DATA_MARKER: &str = "\"command\":\"slsgpu";
+
+/// Write the `docs/` tree: `REPORT.md`, one page per entry (stub pages for
+/// skipped experiments so summary links always resolve), and
+/// `data/<id>.json` for every ran experiment. The writer owns the tree: any
+/// previously *generated* `*.md` under `out` / `*.json` under `out/data`
+/// that it does not regenerate (recognized by the generated-file markers)
+/// is deleted first, so a regeneration is a clean replacement and
+/// `git diff` sees exactly the drift; files without a marker are left
+/// untouched.
+pub fn write_docs(entries: &[Entry], out: &Path) -> Result<Vec<PathBuf>> {
+    let data_dir = out.join("data");
+    fs::create_dir_all(&data_dir).with_context(|| format!("creating {}", data_dir.display()))?;
+    clear_generated(out, "md", PAGE_MARKER)?;
+    clear_generated(&data_dir, "json", DATA_MARKER)?;
+
+    let mut written = Vec::new();
+    let mut write = |path: PathBuf, contents: String| -> Result<()> {
+        fs::write(&path, contents).with_context(|| format!("writing {}", path.display()))?;
+        written.push(path);
+        Ok(())
+    };
+
+    for entry in entries {
+        match &entry.outcome {
+            Outcome::Ran(report) => {
+                write(out.join(format!("{}.md", entry.id)), report.to_markdown())?;
+                write(
+                    data_dir.join(format!("{}.json", entry.id)),
+                    format!("{}\n", report.to_json()),
+                )?;
+            }
+            Outcome::Skipped(reason) => {
+                write(out.join(format!("{}.md", entry.id)), stub_page(entry, reason))?;
+            }
+        }
+    }
+    write(out.join("REPORT.md"), summary_markdown(entries))?;
+    Ok(written)
+}
+
+fn clear_generated(dir: &Path, ext: &str, marker: &str) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for dirent in fs::read_dir(dir)? {
+        let path = dirent?.path();
+        if path.is_file()
+            && path.extension().and_then(|e| e.to_str()) == Some(ext)
+            && fs::read_to_string(&path).map(|s| s.contains(marker)).unwrap_or(false)
+        {
+            fs::remove_file(&path).with_context(|| format!("removing {}", path.display()))?;
+        }
+    }
+    Ok(())
+}
+
+fn stub_page(entry: &Entry, reason: &str) -> String {
+    format!(
+        "# {}\n\n> Generated by `slsgpu report` — do not edit by hand.\n\n\
+         **Not run in this suite:** {}\n",
+        entry.title, reason
+    )
+}
+
+/// The `docs/REPORT.md` summary: one status row per experiment, linking the
+/// page and data file, with PASS/WARN aggregated over paper-anchored cells.
+pub fn summary_markdown(entries: &[Entry]) -> String {
+    let mut out = String::from(
+        "# Reproduction report — CPU-serverless vs GPU training architectures\n\n\
+         > Generated by `slsgpu report` — do not edit by hand.\n\
+         > Regenerate: `cargo run --release -- report --out docs/`\n\n\
+         Each page below is rendered from the same typed `report::Report` value its\n\
+         experiment driver returns — the CLI table, the Markdown page and the JSON\n\
+         data file are three views of one measurement, so documented status cannot\n\
+         drift from the simulator. **PASS** = every paper-anchored cell within its\n\
+         tolerance; **WARN** = at least one anchored cell out of tolerance (the hard\n\
+         bounds are enforced separately by the test suite); **—** = no paper anchors\n\
+         (qualitative table, or an extension beyond the paper's measured range).\n\n\
+         | Experiment | Status | Anchors (PASS/WARN) | Page | Data |\n\
+         | :--- | :--- | ---: | :--- | :--- |\n",
+    );
+    for entry in entries {
+        let (status, anchors, data) = match &entry.outcome {
+            Outcome::Ran(report) => {
+                let (pass, warn) = report.verdicts();
+                let status = match report.status() {
+                    Some(Verdict::Pass) => "PASS".to_string(),
+                    Some(Verdict::Warn) => "WARN".to_string(),
+                    None => "—".to_string(),
+                };
+                let anchors =
+                    if pass + warn > 0 { format!("{pass}/{warn}") } else { "—".to_string() };
+                (status, anchors, format!("[json](data/{}.json)", entry.id))
+            }
+            Outcome::Skipped(_) => ("skipped".to_string(), "—".to_string(), "—".to_string()),
+        };
+        out.push_str(&format!(
+            "| {} | {} | {} | [{}.md]({}.md) | {} |\n",
+            entry.title.replace('|', "\\|"),
+            status,
+            anchors,
+            entry.id,
+            entry.id,
+            data,
+        ));
+    }
+    out.push_str(
+        "\nAll simulations are seeded and virtual-time deterministic: regenerating\n\
+         this tree from the same source produces bit-identical files (asserted in\n\
+         `rust/tests/report.rs`), and CI fails if `docs/` is stale.\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_matching_normalizes_separators() {
+        let cfg = SuiteConfig {
+            skip: vec!["scale-sweep".into(), "TABLE4_FAULTS".into()],
+            ..SuiteConfig::default()
+        };
+        assert!(cfg.skips("scale_sweep"));
+        assert!(cfg.skips("table4_faults"));
+        assert!(!cfg.skips("table2"));
+    }
+
+    #[test]
+    fn summary_lists_every_entry_with_links() {
+        let entries = vec![
+            Entry::skipped("table3", &canonical_title("table3"), "needs artifacts"),
+            Entry::ran(Report::new("table1", "Table 1 — demo", "slsgpu exp table1")),
+        ];
+        let md = summary_markdown(&entries);
+        assert!(md.contains("[table3.md](table3.md)"), "{md}");
+        assert!(md.contains("[table1.md](table1.md)"), "{md}");
+        assert!(md.contains("| skipped |"), "{md}");
+    }
+}

@@ -1,0 +1,249 @@
+//! Report-layer acceptance tests.
+//!
+//! * Golden files: rendering a fixed `Report` must be byte-stable — the
+//!   text/Markdown/JSON renderers are compared against checked-in goldens
+//!   under `rust/tests/golden/`.
+//! * Determinism: two runs of the (reduced) virtual-mode suite must
+//!   produce identical reports, and `write_docs` must write bit-identical
+//!   `docs/` trees — the property the CI freshness gate relies on.
+//! * Verdicts: anchor PASS/WARN boundaries must match `exp::rel_err`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use slsgpu::exp;
+use slsgpu::report::suite::{self, Outcome, SuiteConfig};
+use slsgpu::report::{Align, Anchor, Cell, Report, Section, Table, Verdict};
+
+// ---------------------------------------------------------------------------
+// Golden rendering
+
+fn fixture() -> Report {
+    let mut t = Table::new(
+        "timing",
+        &[
+            ("Framework", Align::Left),
+            ("Per-batch (s)", Align::Right),
+            ("Verdict basis", Align::Left),
+        ],
+    )
+    .title("Fixture — paper-anchored timings");
+    t.push_row(vec![
+        Cell::text("SPIRT"),
+        Cell::vs_paper(14.0, 14.343, 2, 0.15),
+        Cell::text("within 15%"),
+    ]);
+    t.rule();
+    t.push_row(vec![
+        Cell::text("MLLess"),
+        Cell::vs_paper(99.0, 69.425, 2, 0.15),
+        Cell::text("out of 15%"),
+    ]);
+    let mut plain = Table::new("counts", &[("kind", Align::Left), ("n", Align::Right)]);
+    plain.push_row(vec![Cell::text("ops"), Cell::count(42)]);
+    Report::new("fixture", "Fixture report", "slsgpu fixture")
+        .with_intro(
+            "Fixed input for the golden-file tests: byte-stable across runs and platforms.",
+        )
+        .with_section(
+            Section::new()
+                .heading("Timings")
+                .paragraph("One PASS row and one WARN row.")
+                .table(t)
+                .note("note: trailing footer line"),
+        )
+        .with_section(Section::new().table(plain))
+}
+
+#[test]
+fn golden_text_rendering_is_byte_stable() {
+    assert_eq!(fixture().to_text(), include_str!("golden/report_fixture.txt"));
+}
+
+#[test]
+fn golden_markdown_rendering_is_byte_stable() {
+    assert_eq!(fixture().to_markdown(), include_str!("golden/report_fixture.md"));
+}
+
+#[test]
+fn golden_json_rendering_is_byte_stable() {
+    assert_eq!(
+        format!("{}\n", fixture().to_json()),
+        include_str!("golden/report_fixture.json")
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Verdict boundaries
+
+#[test]
+fn anchor_verdicts_match_rel_err_boundaries() {
+    let anchor = Anchor::new(100.0, 0.10);
+    for measured in [85.0, 90.0, 95.0, 100.0, 105.0, 110.0, 110.0001, 123.456, 250.0] {
+        let expected = if exp::rel_err(measured, 100.0) <= 0.10 {
+            Verdict::Pass
+        } else {
+            Verdict::Warn
+        };
+        assert_eq!(anchor.verdict(measured), expected, "measured {measured}");
+    }
+    // The boundary is inclusive: rel_err == tol is a PASS, just beyond is
+    // a WARN — exactly where the `< tol` experiment tests sit.
+    assert_eq!(anchor.verdict(110.0), Verdict::Pass);
+    assert_eq!(anchor.verdict(110.0001), Verdict::Warn);
+    assert_eq!(anchor.verdict(90.0), Verdict::Pass);
+    assert_eq!(anchor.verdict(89.999), Verdict::Warn);
+    // Zero paper values have rel_err defined as 0 (no meaningful relative
+    // error), so they can never WARN — mirroring `exp::vs_paper`'s output.
+    assert_eq!(Anchor::new(0.0, 0.0).verdict(5.0), Verdict::Pass);
+}
+
+// ---------------------------------------------------------------------------
+// Suite determinism
+
+/// Reduced suite: same code paths as the canonical `docs/` run, small
+/// enough for CI (single sweep point, 1 fault epoch, short sweeps).
+fn tiny_suite() -> SuiteConfig {
+    SuiteConfig {
+        fig2_workers: vec![4],
+        fig3_rates: vec![1.0, 0.1],
+        indb_minibatches: 6,
+        fault: exp::table4_faults::FaultConfig { epochs: 1, ..Default::default() },
+        sweep: exp::scale_sweep::SweepConfig {
+            worker_counts: vec![4],
+            batches_per_epoch: 4,
+            threads: 2,
+            ..Default::default()
+        },
+        ..SuiteConfig::default()
+    }
+}
+
+fn tree_files(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for dirent in fs::read_dir(&d).unwrap() {
+            let path = dirent.unwrap().path();
+            if path.is_dir() {
+                stack.push(path);
+            } else {
+                let rel = path.strip_prefix(dir).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, fs::read(&path).unwrap());
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn suite_reruns_and_docs_trees_are_bit_identical() {
+    let entries_a = suite::run(&tiny_suite()).unwrap();
+    let entries_b = suite::run(&tiny_suite()).unwrap();
+    assert_eq!(entries_a.len(), suite::EXPERIMENT_IDS.len());
+    for (a, b) in entries_a.iter().zip(&entries_b) {
+        assert_eq!(a.id, b.id);
+        match (&a.outcome, &b.outcome) {
+            (Outcome::Ran(ra), Outcome::Ran(rb)) => {
+                assert_eq!(
+                    ra.to_json().to_string(),
+                    rb.to_json().to_string(),
+                    "{}: JSON must be bit-identical across runs",
+                    a.id
+                );
+                assert_eq!(ra.to_markdown(), rb.to_markdown(), "{}", a.id);
+                // Drivers and the suite's skip path must agree on titles,
+                // or a skipped run renders a different summary row.
+                assert_eq!(
+                    ra.title,
+                    suite::canonical_title(&a.id),
+                    "{}: driver title desynced from suite::canonical_title",
+                    a.id
+                );
+            }
+            (Outcome::Skipped(_), Outcome::Skipped(_)) => {}
+            _ => panic!("{}: ran/skipped mismatch across identical configs", a.id),
+        }
+    }
+
+    let base = std::env::temp_dir().join(format!("slsgpu-report-test-{}", std::process::id()));
+    let dir_a = base.join("a");
+    let dir_b = base.join("b");
+    suite::write_docs(&entries_a, &dir_a).unwrap();
+    suite::write_docs(&entries_b, &dir_b).unwrap();
+    let tree_a = tree_files(&dir_a);
+    let tree_b = tree_files(&dir_b);
+    assert_eq!(
+        tree_a.keys().collect::<Vec<_>>(),
+        tree_b.keys().collect::<Vec<_>>(),
+        "docs trees must contain the same files"
+    );
+    for (name, bytes) in &tree_a {
+        assert_eq!(bytes, &tree_b[name], "{name} must be bit-identical");
+    }
+    assert!(tree_a.contains_key("REPORT.md"));
+    assert!(tree_a.contains_key("table2.md"));
+    assert!(tree_a.contains_key("data/table2.json"));
+    // Skipped table3 still gets a stub page so REPORT.md links resolve,
+    // but no data file.
+    assert!(tree_a.contains_key("table3.md"));
+    assert!(!tree_a.contains_key("data/table3.json"));
+    fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn write_docs_owns_the_tree_and_clears_stale_files() {
+    let mut cfg = tiny_suite();
+    cfg.skip = suite::EXPERIMENT_IDS
+        .iter()
+        .copied()
+        .filter(|id| *id != "table1" && *id != "spirt_indb")
+        .map(|s| s.to_string())
+        .collect();
+    let entries = suite::run(&cfg).unwrap();
+    let dir = std::env::temp_dir().join(format!("slsgpu-report-stale-{}", std::process::id()));
+    suite::write_docs(&entries, &dir).unwrap();
+    // Plant a stale *generated* page/data file (carrying the generated-file
+    // markers) and a hand-written file without them, then regenerate.
+    fs::write(dir.join("zzz_stale.md"), "> Generated by `slsgpu report` — old page\n").unwrap();
+    fs::write(
+        dir.join("data").join("zzz_stale.json"),
+        "{\"command\":\"slsgpu exp gone\"}\n",
+    )
+    .unwrap();
+    fs::write(dir.join("zzz_handwritten.md"), "my notes, not generated\n").unwrap();
+    suite::write_docs(&entries, &dir).unwrap();
+    let tree = tree_files(&dir);
+    assert!(!tree.contains_key("zzz_stale.md"), "stale generated pages must be cleared");
+    assert!(!tree.contains_key("data/zzz_stale.json"), "stale generated data must be cleared");
+    assert!(
+        tree.contains_key("zzz_handwritten.md"),
+        "files without the generated marker must be left untouched"
+    );
+    assert!(tree.contains_key("table1.md"));
+    let summary = String::from_utf8(tree["REPORT.md"].clone()).unwrap();
+    assert!(summary.contains("| skipped |"), "{summary}");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Report statuses surface in the summary
+
+#[test]
+fn summary_reflects_anchor_statuses() {
+    let outcome = exp::spirt_indb::run(None, 24).unwrap();
+    let report = exp::spirt_indb::report(&outcome);
+    assert_eq!(report.status(), Some(Verdict::Pass));
+    let entries = vec![suite_entry(report)];
+    let md = suite::summary_markdown(&entries);
+    assert!(md.contains("| PASS | 4/0 |"), "{md}");
+}
+
+fn suite_entry(report: Report) -> suite::Entry {
+    suite::Entry {
+        id: report.id.clone(),
+        title: report.title.clone(),
+        outcome: Outcome::Ran(report),
+    }
+}
