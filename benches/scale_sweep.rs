@@ -1,32 +1,72 @@
 //! Host-side simulator throughput on the scale-sweep path (plain harness;
 //! criterion is unavailable offline). Reports protocol rounds simulated per
 //! wall-second — the number that bounds how far the sweep axes (workers ×
-//! modes × architectures) can be pushed. Feeds EXPERIMENTS.md §Scale sweep.
+//! modes × architectures) can be pushed — plus the relative wall-time cost
+//! of enabling the trace layer on the same epochs. Feeds
+//! EXPERIMENTS.md §Scale sweep and BENCH_scale_sweep.json.
 
 use std::time::Instant;
 
 use slsgpu::cloud::FrameworkKind;
 use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
 use slsgpu::exp::scale_sweep::{run, SweepConfig};
+use slsgpu::trace::TraceConfig;
 
-/// Simulate `epochs` epochs of one (framework, W, mode) point and report
-/// rounds/second of host wall time.
-fn bench_point(fw: FrameworkKind, workers: usize, mode: SyncMode, batches: usize) {
-    let mut cfg = EnvConfig::virtual_paper(fw, "mobilenet", workers).unwrap().with_sync(mode);
+/// Simulate one epoch of one (framework, W, mode) point and report
+/// rounds/second of host wall time. Returns (rounds/s, protocol ops).
+fn bench_point(
+    fw: FrameworkKind,
+    workers: usize,
+    mode: SyncMode,
+    batches: usize,
+    trace: TraceConfig,
+) -> (f64, u64) {
+    let mut cfg = EnvConfig::virtual_paper(fw, "mobilenet", workers)
+        .unwrap()
+        .with_sync(mode)
+        .with_trace(trace);
     cfg.batches_per_epoch = batches;
     let mut env = ClusterEnv::new(cfg).unwrap();
     let mut strategy = strategy_for(fw);
     let t0 = Instant::now();
     strategy.run_epoch(&mut env).unwrap();
     let secs = t0.elapsed().as_secs_f64();
+    (batches as f64 / secs, env.comm.total_ops())
+}
+
+fn bench_point_report(fw: FrameworkKind, workers: usize, mode: SyncMode, batches: usize) {
+    let (rps, ops) = bench_point(fw, workers, mode, batches, TraceConfig::disabled());
     println!(
         "{:<14} W={:<4} {:<8} {:>6} rounds  {:>10.1} rounds/s  {:>8} ops",
         fw.name(),
         workers,
         mode.label(),
         batches,
-        batches as f64 / secs,
-        env.comm.total_ops()
+        rps,
+        ops
+    );
+}
+
+/// Same epoch with tracing off vs on; the ratio is the observability tax.
+/// The vtime/cost results are bit-identical either way (asserted in
+/// `rust/tests/determinism.rs`) — only host wall time may move.
+fn bench_trace_overhead(fw: FrameworkKind, workers: usize, batches: usize) {
+    // Warm-up + best-of-3 per setting to damp allocator/cache noise.
+    let best = |trace: TraceConfig| {
+        bench_point(fw, workers, SyncMode::Bsp, batches, trace.clone());
+        (0..3)
+            .map(|_| bench_point(fw, workers, SyncMode::Bsp, batches, trace.clone()).0)
+            .fold(0.0_f64, f64::max)
+    };
+    let off = best(TraceConfig::disabled());
+    let on = best(TraceConfig::on());
+    println!(
+        "{:<14} W={:<4} untraced {:>10.1} rounds/s  traced {:>10.1} rounds/s  overhead {:>5.1}%",
+        fw.name(),
+        workers,
+        off,
+        on,
+        (off / on - 1.0) * 100.0
     );
 }
 
@@ -35,8 +75,15 @@ fn main() {
     for fw in [FrameworkKind::AllReduce, FrameworkKind::ScatterReduce, FrameworkKind::Spirt] {
         for workers in [16, 64, 256] {
             for mode in [SyncMode::Bsp, SyncMode::Async { staleness: 2 }] {
-                bench_point(fw, workers, mode, 24);
+                bench_point_report(fw, workers, mode, 24);
             }
+        }
+    }
+
+    println!("-- trace-layer overhead (BSP, one epoch, best of 3) --");
+    for fw in FrameworkKind::ALL {
+        for workers in [16, 256] {
+            bench_trace_overhead(fw, workers, 24);
         }
     }
 

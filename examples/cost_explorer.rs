@@ -42,6 +42,7 @@ fn epoch_cost(fw: FrameworkKind, profile: ModelProfile) -> anyhow::Result<f64> {
         fault_plan: slsgpu::faults::FaultPlan::none(),
         agg: slsgpu::tensor::AggregationRule::Mean,
         sync: slsgpu::coordinator::SyncMode::Bsp,
+        trace: slsgpu::trace::TraceConfig::disabled(),
     };
     let mut env = ClusterEnv::new(cfg)?;
     strategy_for(fw).run_epoch(&mut env)?;

@@ -1,0 +1,298 @@
+#!/usr/bin/env python3
+"""Independent Python replica of the ``trace::`` math, run against the same
+hand-computed cases the Rust unit tests assert.
+
+This container carries no Rust toolchain, so the trace subsystem's three
+pieces of non-trivial math are re-derived here from the module docs and
+checked against the expected values that ``rust/src/trace/*.rs`` unit tests
+hard-code. A PASS from this script means the *specification* (predecessor
+rule, nearest-rank percentiles, Chrome JSON shape and number formatting)
+is internally consistent and matches the hand computations; the Rust tests
+re-prove the same numbers on the real implementation at first toolchain
+contact.
+
+* ``predecessor`` / ``epoch_path``  ↔ ``trace::critical_path``
+* ``percentile``                    ↔ ``metrics::Histogram::percentile``
+* ``chrome_doc`` / ``jnum``         ↔ ``trace::chrome`` + ``util::json``
+
+Run from anywhere: ``python3 python/tools/verify_trace_replica.py``
+"""
+
+import math
+
+SUPERVISOR = (1 << 64) - 1  # faults::SUPERVISOR = usize::MAX
+
+
+# -- events ------------------------------------------------------------------
+
+def ev(worker, t0, t1, kind, bytes_=0, cost=0.0, epoch=1, round_=0,
+       dep=None, prev=None, instant=False):
+    return {
+        "worker": worker, "t0": t0, "t1": t1, "kind": kind, "bytes": bytes_,
+        "cost": cost, "epoch": epoch, "round": round_, "dep": dep,
+        "prev": prev, "instant": instant,
+    }
+
+
+class Collector:
+    """Mirror of ``TraceCollector``'s edge bookkeeping: per-worker prev
+    chain and last-writer-per-key dep resolution."""
+
+    def __init__(self):
+        self.events = []
+        self.writers = {}
+        self.last_by_worker = {}
+        self.epoch = 0
+
+    def begin_epoch(self, epoch):
+        self.epoch = epoch
+
+    def span(self, worker, t0, t1, kind, bytes_=0, cost=0.0, dep=None):
+        idx = len(self.events)
+        prev = self.last_by_worker.get(worker)
+        self.last_by_worker[worker] = idx
+        self.events.append(
+            ev(worker, t0, t1, kind, bytes_, cost, self.epoch, dep=dep, prev=prev))
+        return idx
+
+    def instant(self, worker, t, kind):
+        idx = len(self.events)
+        prev = self.last_by_worker.get(worker)
+        self.last_by_worker[worker] = idx
+        self.events.append(
+            ev(worker, t, t, kind, epoch=self.epoch, prev=prev, instant=True))
+        return idx
+
+    def note_write(self, key, idx):
+        self.writers[key] = idx
+
+    def writer_of(self, key):
+        return self.writers.get(key)
+
+
+# -- critical path (trace::critical_path) ------------------------------------
+
+def predecessor(events, e):
+    """Edge rule: dep iff it actually gated (dep.t1 > e.t0), else walk the
+    prev chain back past events that finished after e started."""
+    if e["dep"] is not None and events[e["dep"]]["t1"] > e["t0"]:
+        return e["dep"]
+    p = e["prev"]
+    while p is not None:
+        pe = events[p]
+        if pe["t1"] <= e["t0"]:
+            return p
+        p = pe["prev"]
+    return None
+
+
+def epoch_path(events, epoch):
+    in_epoch = [(i, e) for i, e in enumerate(events) if e["epoch"] == epoch]
+    if not in_epoch:
+        return None
+    terminal = max(in_epoch, key=lambda ie: (ie[1]["t1"], ie[0]))[0]
+    steps, per_kind = [], {}
+    cur = terminal
+    while True:
+        e = events[cur]
+        pred = predecessor(events, e)
+        if pred is not None:
+            self_secs = max(e["t1"] - max(events[pred]["t1"], e["t0"]), 0.0)
+        else:
+            self_secs = e["t1"] - e["t0"]
+        steps.append({"idx": cur, "worker": e["worker"], "kind": e["kind"],
+                      "t0": e["t0"], "t1": e["t1"], "self_secs": self_secs})
+        per_kind[e["kind"]] = per_kind.get(e["kind"], 0.0) + self_secs
+        if pred is None:
+            break
+        cur = pred
+    kind_secs = sorted(per_kind.items(), key=lambda kv: (-kv[1], kv[0]))
+    return {"epoch": epoch, "bound_worker": steps[0]["worker"],
+            "start": steps[-1]["t0"], "end": steps[0]["t1"],
+            "steps": steps, "kind_secs": kind_secs}
+
+
+def describe(path, max_steps):
+    def label(w):
+        return "sup" if w == SUPERVISOR else f"w{w}"
+    parts = [f"{label(s['worker'])}:{s['kind']}" for s in path["steps"][:max_steps]]
+    if len(path["steps"]) > max_steps:
+        parts.append(f"… {len(path['steps']) - max_steps} more")
+    return " <- ".join(parts)
+
+
+def dominant(path, k):
+    return " · ".join(f"{kind} {secs:.2f}s" for kind, secs in path["kind_secs"][:k])
+
+
+# -- nearest-rank percentiles (metrics::Histogram) ----------------------------
+
+def percentile(samples, p):
+    if not samples:
+        return 0.0
+    s = sorted(samples)
+    rank = math.ceil(p / 100.0 * len(s))
+    return s[min(max(rank, 1), len(s)) - 1]
+
+
+# -- Chrome export (trace::chrome via util::json) -----------------------------
+
+def jnum(n):
+    """Rust Json::Num formatting: integer form when fract()==0 and |n|<1e15,
+    else f64 Display (shortest round-trip == Python repr at these scales)."""
+    if float(n) == int(n) and abs(n) < 1e15:
+        return str(int(n))
+    return repr(float(n))
+
+
+def jstr(s):
+    out = ['"']
+    for ch in s:
+        if ch == '"':
+            out.append('\\"')
+        elif ch == "\\":
+            out.append("\\\\")
+        elif ord(ch) < 0x20:
+            out.append(f"\\u{ord(ch):04x}")
+        else:
+            out.append(ch)
+    out.append('"')
+    return "".join(out)
+
+
+def jwrite(v):
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return jnum(v)
+    if isinstance(v, str):
+        return jstr(v)
+    if isinstance(v, list):
+        return "[" + ",".join(jwrite(x) for x in v) + "]"
+    if isinstance(v, dict):  # BTreeMap ⇒ keys sorted
+        return "{" + ",".join(f"{jstr(k)}:{jwrite(x)}" for k, x in sorted(v.items())) + "}"
+    raise TypeError(v)
+
+
+def tid_of(worker, workers):
+    return workers if worker == SUPERVISOR else worker
+
+
+def chrome_doc(runs):
+    events = []
+    for pid, run in enumerate(runs):
+        events.append({"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
+                       "args": {"name": run["label"]}})
+        tids = {}
+        for e in run["events"]:
+            tid = tid_of(e["worker"], run["workers"])
+            name = "supervisor" if e["worker"] == SUPERVISOR else f"worker {e['worker']}"
+            tids.setdefault(tid, name)
+        for tid in sorted(tids):
+            events.append({"ph": "M", "pid": pid, "tid": tid, "name": "thread_name",
+                           "args": {"name": tids[tid]}})
+        for e in run["events"]:
+            out = {"pid": pid, "tid": tid_of(e["worker"], run["workers"]),
+                   "ts": e["t0"] * 1e6, "name": e["kind"], "cat": "trace",
+                   "args": {"bytes": e["bytes"], "cost_usd": e["cost"],
+                            "epoch": e["epoch"], "round": e["round"]}}
+            if e["instant"]:
+                out["ph"], out["s"] = "i", "t"
+            else:
+                out["ph"], out["dur"] = "X", (e["t1"] - e["t0"]) * 1e6
+            events.append(out)
+    return {"displayTimeUnit": "ms", "traceEvents": events}
+
+
+# -- checks -------------------------------------------------------------------
+
+def check(name, cond, detail=""):
+    status = "ok" if cond else "FAIL"
+    print(f"  [{status}] {name}{(' — ' + detail) if detail and not cond else ''}")
+    return cond
+
+
+def main():
+    ok = True
+
+    print("critical path — hand DAG (mirrors walks_the_gating_chain_not_program_order):")
+    c = Collector()
+    c.begin_epoch(1)
+    p0 = c.span(0, 0.0, 2.0, "put", 8)
+    c.note_write("s3/g0", p0)
+    c.span(1, 0.0, 5.0, "compute")
+    p1 = c.span(1, 5.0, 6.0, "put", 8)
+    c.note_write("s3/g1", p1)
+    c.span(0, 2.0, 6.5, "get", 8, dep=c.writer_of("s3/g1"))
+    p = epoch_path(c.events, 1)
+    chain = [(s["idx"], s["kind"]) for s in p["steps"]]
+    ok &= check("gating chain, not program order",
+                chain == [(3, "get"), (2, "put"), (1, "compute")], str(chain))
+    ok &= check("bound worker 0", p["bound_worker"] == 0)
+    selfs = [s["self_secs"] for s in p["steps"]]
+    ok &= check("self-times 0.5/1.0/5.0",
+                all(abs(a - b) < 1e-12 for a, b in zip(selfs, [0.5, 1.0, 5.0])), str(selfs))
+    ok &= check("self-times tile the span",
+                abs(sum(selfs) - (p["end"] - p["start"])) < 1e-12)
+    ok &= check("dominant kind is compute", p["kind_secs"][0] == ("compute", 5.0))
+    ok &= check("describe format", describe(p, 8) == "w0:get <- w1:put <- w1:compute",
+                describe(p, 8))
+    ok &= check("dominant format", dominant(p, 2) == "compute 5.00s · put 1.00s",
+                dominant(p, 2))
+
+    print("predecessor rule (mirrors skips_satisfied_deps_and_overlapping_predecessors):")
+    c = Collector()
+    c.begin_epoch(1)
+    w = c.span(1, 0.0, 1.0, "put", 8)
+    c.note_write("s3/k", w)
+    c.span(0, 0.0, 4.0, "compute")  # parallel branch
+    c.span(0, 0.0, 2.0, "compute")  # feeds the get
+    c.span(0, 2.0, 3.0, "get", 8, dep=c.writer_of("s3/k"))
+    ok &= check("satisfied dep ignored, overlapping prev skipped",
+                predecessor(c.events, c.events[3]) == 2,
+                str(predecessor(c.events, c.events[3])))
+
+    print("nearest-rank percentiles (mirrors nearest_rank_percentiles_per_kind):")
+    lat = [float(i) for i in range(1, 101)]  # 1..100 ms
+    ok &= check("p50 = 50", percentile(lat, 50.0) == 50.0)
+    ok &= check("p95 = 95", percentile(lat, 95.0) == 95.0)
+    ok &= check("p99 = 99", percentile(lat, 99.0) == 99.0)
+    ok &= check("singleton p99", percentile([7.5], 99.0) == 7.5)
+    ok &= check("empty -> 0", percentile([], 50.0) == 0.0)
+    # rank clamp: p so small the rank floors to 0 must still read sample 1.
+    ok &= check("rank clamps to [1, n]", percentile(lat, 0.0) == 1.0)
+
+    print("Chrome export (mirrors emits_valid_deterministic_json):")
+    c = Collector()
+    c.begin_epoch(1)
+    c.span(0, 0.5, 1.25, "put", 64, 0.001)
+    c.instant(1, 2.0, "poison")
+    c.span(SUPERVISOR, 0.0, 0.25, "poll")
+    run = {"label": "mlless", "workers": 2, "events": c.events}
+    doc = chrome_doc([run])
+    rendered = jwrite(doc) + "\n"
+    ok &= check("byte-stable", rendered == jwrite(chrome_doc([run])) + "\n")
+    evs = doc["traceEvents"]
+    ok &= check("1 process + 3 threads + 3 events", len(evs) == 7, str(len(evs)))
+    span = next(e for e in evs if e.get("ph") == "X" and e["name"] == "put")
+    ok &= check("ts in µs", span["ts"] == 0.5e6)
+    ok &= check("dur in µs", span["dur"] == 0.75e6)
+    inst = next(e for e in evs if e.get("ph") == "i")
+    ok &= check("instant scope t", inst["s"] == "t" and inst["name"] == "poison")
+    sup = next(e for e in evs if e.get("ph") == "M"
+               and e["name"] == "thread_name" and e["args"]["name"] == "supervisor")
+    ok &= check("supervisor on tid = workers", sup["tid"] == 2)
+    ok &= check("integer number fast path", jnum(500000.0) == "500000")
+    ok &= check("fractional numbers via shortest repr", jnum(0.001) == "0.001")
+    ok &= check("keys sorted (BTreeMap order)",
+                rendered.index('"displayTimeUnit"') < rendered.index('"traceEvents"'))
+    two = chrome_doc([dict(run, label="a"), dict(run, label="b")])
+    pids = sorted({e["pid"] for e in two["traceEvents"]})
+    ok &= check("multi-run pids 0,1", pids == [0, 1])
+
+    print("PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -119,6 +119,7 @@ impl Strategy for AllReduce {
         let mut loss_n = 0usize;
 
         for round in 0..env.batches_per_epoch {
+            env.trace.set_round(round);
             let tag = format!("e{}/r{}", env.epoch, round);
 
             // Each batch is one stateless invocation per worker.

@@ -20,6 +20,7 @@ use crate::metrics::{CommStats, Ledger, RecoveryStats, Stage, StageTimer};
 use crate::runtime::{Engine, PjrtMath};
 use crate::sim::VTime;
 use crate::tensor::{AggregationRule, Slab};
+use crate::trace::{EventKind, TraceCollector, TraceConfig};
 use crate::util::rng::Rng;
 
 use super::protocol::SyncMode;
@@ -73,6 +74,8 @@ pub struct EnvConfig {
     pub agg: AggregationRule,
     /// Round-synchronization policy (BSP barriers or bounded staleness).
     pub sync: SyncMode,
+    /// Protocol-event tracing (disabled by default; purely observational).
+    pub trace: TraceConfig,
 }
 
 impl EnvConfig {
@@ -96,12 +99,19 @@ impl EnvConfig {
             fault_plan: FaultPlan::none(),
             agg: AggregationRule::Mean,
             sync: SyncMode::Bsp,
+            trace: TraceConfig::disabled(),
         })
     }
 
     /// Install a fault plan (builder style).
     pub fn with_faults(mut self, plan: FaultPlan) -> EnvConfig {
         self.fault_plan = plan;
+        self
+    }
+
+    /// Enable protocol-event tracing (builder style).
+    pub fn with_trace(mut self, trace: TraceConfig) -> EnvConfig {
+        self.trace = trace;
         self
     }
 
@@ -149,6 +159,7 @@ impl EnvConfig {
             fault_plan: FaultPlan::none(),
             agg: AggregationRule::Mean,
             sync: SyncMode::Bsp,
+            trace: TraceConfig::disabled(),
         })
     }
 }
@@ -200,6 +211,8 @@ pub struct ClusterEnv {
     pub comm: CommStats,
     pub stages: StageTimer,
     pub recovery: RecoveryStats,
+    /// Protocol-event log (no-op unless enabled via `EnvConfig::trace`).
+    pub trace: TraceCollector,
 
     // Fault engine + aggregation policy (consulted at the fetch/compute/
     // sync/update boundaries; see the `faults` module).
@@ -279,6 +292,7 @@ impl ClusterEnv {
             comm: CommStats::new(),
             stages: StageTimer::new(),
             recovery: RecoveryStats::new(),
+            trace: TraceCollector::new(&cfg.trace),
             faults: FaultSchedule::new(cfg.fault_plan, cfg.workers)?,
             agg: cfg.agg,
             sync: cfg.sync,
@@ -304,6 +318,7 @@ impl ClusterEnv {
     /// engine's round counters.
     pub fn begin_epoch(&mut self) {
         self.epoch += 1;
+        self.trace.begin_epoch(self.epoch);
         self.faults.begin_epoch(self.epoch);
         let mut rng = self.rng.fork(0xE70C ^ self.epoch as u64);
         for w in &mut self.workers {
@@ -315,6 +330,7 @@ impl ClusterEnv {
     /// Serverless statelessness: re-load model + batch data on invocation.
     /// Advances the worker clock; charges FetchDataset stage time.
     pub fn state_load(&mut self, w: usize) {
+        let t0 = self.workers[w].clock;
         let model_load = self.grad_bytes() as f64 / calibration::REDIS_BW
             + calibration::REDIS_LATENCY;
         let data_bytes = (self.batch_size * IMG_ELEMS * 4) as u64;
@@ -322,6 +338,11 @@ impl ClusterEnv {
         let secs = model_load + data_load;
         self.workers[w].clock += secs;
         self.stages.add(Stage::FetchDataset, secs);
+        if self.trace.enabled() {
+            let bytes = self.grad_bytes() + data_bytes;
+            let t1 = self.workers[w].clock;
+            self.trace.span(w, t0, t1, EventKind::StateLoad, bytes, 0.0, None);
+        }
     }
 
     /// Compute one gradient batch for worker `w` on `device`. Advances the
@@ -370,12 +391,25 @@ impl ClusterEnv {
                 }
             }
         };
+        let mut poisoned = false;
         if let Some(mode) = self.faults.poison(w, round, self.workers[w].clock) {
             mode.apply(&mut out.grad);
             self.recovery.poisoned_grads += 1;
+            poisoned = true;
         }
+        let t0 = self.workers[w].clock;
         self.workers[w].clock += secs;
         self.stages.add(Stage::ComputeGradients, secs);
+        if self.trace.enabled() {
+            let t1 = self.workers[w].clock;
+            self.trace.span(w, t0, t1, EventKind::Compute, self.grad_bytes(), 0.0, None);
+            if factor > 1.0 {
+                self.trace.instant(w, t1, EventKind::Straggler);
+            }
+            if poisoned {
+                self.trace.instant(w, t1, EventKind::Poison);
+            }
+        }
         Ok(out)
     }
 
@@ -401,6 +435,12 @@ impl ClusterEnv {
         self.workers[w].clock += down;
         self.recovery.cold_restarts += 1;
         self.recovery.downtime_secs += down;
+        // Emit the downtime span before the retry's own events so the
+        // program-order chain runs crash -> reload -> recompute. The retry
+        // billing lands after the recompute and stays unattributed here.
+        if self.trace.enabled() {
+            self.trace.span(w, t0, t0 + down, EventKind::CrashCompute, 0, 0.0, None);
+        }
         // The wasted attempt's gradient is discarded; if a poison window is
         // active on this round, the recompute will count it again — undo the
         // discarded attempt's tally so stats reflect delivered gradients.
@@ -447,6 +487,7 @@ impl ClusterEnv {
         if !self.faults.crash_sync(w, now) {
             return None;
         }
+        let cost0 = if self.trace.enabled() { self.ledger.total_full() } else { 0.0 };
         let waiters = self.num_workers().saturating_sub(1);
         let down = if self.framework == FrameworkKind::GpuBaseline {
             let down = self.fleet.provision_secs;
@@ -481,6 +522,11 @@ impl ClusterEnv {
         self.recovery.cold_restarts += 1;
         self.recovery.downtime_secs += down;
         self.stages.add(Stage::Synchronize, down);
+        if self.trace.enabled() {
+            let cost = self.ledger.total_full() - cost0;
+            let t1 = self.workers[w].clock;
+            self.trace.span(w, now, t1, EventKind::CrashSync, 0, cost, None);
+        }
         Some(down)
     }
 
@@ -491,12 +537,18 @@ impl ClusterEnv {
         if !self.faults.crash_supervisor(round, now) {
             return None;
         }
+        let cost0 = if self.trace.enabled() { self.ledger.total_full() } else { 0.0 };
         let down = calibration::LAMBDA_COLD_START;
         let mb = self.allocated_mb();
         recovery::lambda_retry(down, mb, &mut self.ledger, &mut self.recovery);
         recovery::queue_repolls(down, self.num_workers(), &mut self.ledger, &mut self.recovery);
         self.recovery.supervisor_restarts += 1;
         self.recovery.downtime_secs += down;
+        if self.trace.enabled() {
+            let cost = self.ledger.total_full() - cost0;
+            use crate::faults::SUPERVISOR;
+            self.trace.span(SUPERVISOR, now, now + down, EventKind::CrashSupervisor, 0, cost, None);
+        }
         Some(down)
     }
 
@@ -506,6 +558,7 @@ impl ClusterEnv {
         let now = self.workers[w].clock;
         if self.faults.drop_update(w, round, now) {
             self.recovery.dropped_updates += 1;
+            self.trace.instant(w, now, EventKind::DropUpdate);
             true
         } else {
             false
@@ -538,8 +591,13 @@ impl ClusterEnv {
                     engine.avg_update(model, theta, gsum, inv_k, self.lr)?;
             }
         }
+        let t0 = self.workers[w].clock;
         self.workers[w].clock += secs;
         self.stages.add(Stage::ModelUpdate, secs);
+        if self.trace.enabled() {
+            let t1 = self.workers[w].clock;
+            self.trace.span(w, t0, t1, EventKind::ApplyUpdate, gsum.nbytes(), 0.0, None);
+        }
         Ok(())
     }
 
@@ -550,8 +608,13 @@ impl ClusterEnv {
 
     /// Charge `secs` of synchronization wait to worker `w`.
     pub fn charge_sync(&mut self, w: usize, secs: f64) {
+        let t0 = self.workers[w].clock;
         self.workers[w].clock += secs;
         self.stages.add(Stage::Synchronize, secs);
+        if self.trace.enabled() {
+            let t1 = self.workers[w].clock;
+            self.trace.span(w, t0, t1, EventKind::SyncWait, 0, 0.0, None);
+        }
     }
 
     /// Virtual barrier across all workers (clocks jump to the max).
@@ -739,6 +802,40 @@ mod tests {
         let out = env.aggregate(0, &slabs).unwrap();
         assert_eq!(out.len(), env.n_params);
         assert!(env.workers[0].clock > before, "median pays extra slab passes");
+    }
+
+    #[test]
+    fn tracing_is_opt_in_and_observational() {
+        let mut plain = virt_env(2);
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2)
+            .unwrap()
+            .with_trace(TraceConfig::on());
+        let mut traced = ClusterEnv::new(cfg).unwrap();
+        for env in [&mut plain, &mut traced] {
+            env.begin_epoch();
+            env.state_load(0);
+            env.compute_grad(0, Device::LambdaCpu).unwrap();
+            let g = Slab::virtual_of(env.n_params);
+            env.apply_update(0, &g, 0.5).unwrap();
+            env.charge_sync(0, 1.0);
+        }
+        assert_eq!(
+            plain.workers[0].clock.secs().to_bits(),
+            traced.workers[0].clock.secs().to_bits(),
+            "collector must not perturb the timeline"
+        );
+        assert!(plain.trace.is_empty(), "tracing stays off by default");
+        let kinds: Vec<EventKind> = traced.trace.events().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::StateLoad,
+                EventKind::Compute,
+                EventKind::ApplyUpdate,
+                EventKind::SyncWait
+            ]
+        );
+        assert!(traced.trace.events().all(|e| e.epoch == 1 && e.worker == 0));
     }
 
     #[test]

@@ -43,6 +43,7 @@ impl Strategy for GpuBaseline {
         let mut loss_n = 0usize;
 
         for round in 0..env.batches_per_epoch {
+            env.trace.set_round(round);
             let tag = format!("gpu/e{}/r{}", env.epoch, round);
 
             // Compute on the T4s (data already resident on instance disk).

@@ -16,6 +16,7 @@ use crate::cloud::FrameworkKind;
 use crate::metrics::Stage;
 use crate::sim::VTime;
 use crate::tensor::{SignificanceFilter, Slab};
+use crate::trace::EventKind;
 use crate::Result;
 
 use super::env::{ClusterEnv, Device};
@@ -91,6 +92,7 @@ impl Strategy for MlLess {
         let mut loss_n = 0usize;
 
         for round in 0..env.batches_per_epoch {
+            env.trace.set_round(round);
             let sup_topic = format!("mlless/sup/e{epoch}/r{round}");
             let proceed_topic = format!("mlless/proceed/e{epoch}/r{round}");
 
@@ -150,20 +152,46 @@ impl Strategy for MlLess {
             // reports is in; late updates are skipped for the round.
             let wait_count = env.sync.quorum(w_count);
             let t0 = self.supervisor_clock;
+            let traced = env.trace.enabled();
+            let cost0 = if traced { env.ledger.total_full() } else { 0.0 };
             let mut t = env
                 .queues
                 .wait_for(t0, &sup_topic, wait_count, &mut env.ledger, &mut env.comm)?;
+            if traced {
+                // The supervisor's wait is gated on the quorum-th report;
+                // its (queue-request) cost is sampled around the wait only,
+                // so a supervisor crash keeps billing to its own span.
+                use crate::faults::SUPERVISOR;
+                let cost = env.ledger.total_full() - cost0;
+                let dep = env.trace.notify_dep(&sup_topic, wait_count);
+                env.trace.span(SUPERVISOR, t0, t, EventKind::Poll, 0, cost, dep);
+            }
             if let Some(restart) = env.supervisor_crash(round, t) {
                 t = t + restart;
             }
             self.supervisor_clock = t + 0.010; // decision processing
-            let _ = env.queues.publish(
+            let cost0 = if traced { env.ledger.total_full() } else { 0.0 };
+            let vis = env.queues.publish(
                 self.supervisor_clock,
                 &proceed_topic,
                 "proceed",
                 &mut env.ledger,
                 &mut env.comm,
             );
+            if traced {
+                use crate::faults::SUPERVISOR;
+                let cost = env.ledger.total_full() - cost0;
+                let idx = env.trace.span(
+                    SUPERVISOR,
+                    self.supervisor_clock,
+                    vis,
+                    EventKind::Notify,
+                    "proceed".len() as u64,
+                    cost,
+                    None,
+                );
+                env.trace.note_notify(&proceed_topic, idx);
+            }
 
             // Workers whose reports made the quorum (all of them in BSP),
             // then the published keys among them (the supervisor's fetch

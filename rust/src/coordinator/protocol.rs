@@ -33,8 +33,26 @@ use anyhow::Result;
 use crate::metrics::Stage;
 use crate::sim::VTime;
 use crate::tensor::Slab;
+use crate::trace::EventKind;
 
 use super::env::ClusterEnv;
+
+/// Trace namespace for object-store keys (dep-edge lookup for `get`).
+pub(crate) fn trace_store_key(store: StoreSel, key: &str) -> String {
+    match store {
+        StoreSel::Shared => format!("s3/{key}"),
+        StoreSel::Gpu => format!("s3gpu/{key}"),
+    }
+}
+
+/// Trace namespace for Redis keys; `own` resolves [`RedisSel::Own`].
+pub(crate) fn trace_redis_key(sel: RedisSel, own: usize, key: &str) -> String {
+    match sel {
+        RedisSel::Own => format!("redis{own}/{key}"),
+        RedisSel::Peer(j) => format!("redis{j}/{key}"),
+        RedisSel::Shared => format!("redis-shared/{key}"),
+    }
+}
 
 /// Round-synchronization policy — how long a worker waits at a sync point.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -231,8 +249,13 @@ impl Timeline<'_> {
 
     /// Advance the clock by `secs`, charging the span to `stage`.
     pub fn advance(&mut self, stage: Stage, secs: f64) {
+        let t0 = self.env.workers[self.w].clock;
         self.env.workers[self.w].clock += secs;
         self.env.stages.add(stage, secs);
+        if self.env.trace.enabled() {
+            let t1 = self.env.workers[self.w].clock;
+            self.env.trace.span(self.w, t0, t1, EventKind::Advance, 0, 0.0, None);
+        }
     }
 
     /// Fault hooks at a synchronization boundary: fire a planned sync-phase
@@ -247,6 +270,9 @@ impl Timeline<'_> {
     pub fn put(&mut self, store: StoreSel, stage: Stage, key: &str, payload: Slab) -> VTime {
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
+        let traced = env.trace.enabled();
+        let (bytes, cost0) =
+            if traced { (payload.nbytes(), env.ledger.total_full()) } else { (0, 0.0) };
         let s = match store {
             StoreSel::Shared => &mut env.store,
             StoreSel::Gpu => &mut env.gpu_store,
@@ -254,6 +280,11 @@ impl Timeline<'_> {
         let done = s.put(t0, key, payload, &mut env.ledger, &mut env.comm);
         env.stages.add(stage, done - t0);
         env.workers[self.w].clock = done;
+        if traced {
+            let cost = env.ledger.total_full() - cost0;
+            let idx = env.trace.span(self.w, t0, done, EventKind::Put, bytes, cost, None);
+            env.trace.note_write(trace_store_key(store, key), idx);
+        }
         done
     }
 
@@ -261,6 +292,8 @@ impl Timeline<'_> {
     pub fn get(&mut self, store: StoreSel, stage: Stage, key: &str) -> Result<Slab> {
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
+        let traced = env.trace.enabled();
+        let cost0 = if traced { env.ledger.total_full() } else { 0.0 };
         let s = match store {
             StoreSel::Shared => &mut env.store,
             StoreSel::Gpu => &mut env.gpu_store,
@@ -268,6 +301,11 @@ impl Timeline<'_> {
         let (done, slab) = s.get(t0, key, &mut env.ledger, &mut env.comm)?;
         env.stages.add(stage, done - t0);
         env.workers[self.w].clock = done;
+        if traced {
+            let cost = env.ledger.total_full() - cost0;
+            let dep = env.trace.writer_of(&trace_store_key(store, key));
+            env.trace.span(self.w, t0, done, EventKind::Get, slab.nbytes(), cost, dep);
+        }
         Ok(slab)
     }
 
@@ -281,6 +319,8 @@ impl Timeline<'_> {
     ) -> Result<Vec<Slab>> {
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
+        let traced = env.trace.enabled();
+        let cost0 = if traced { env.ledger.total_full() } else { 0.0 };
         let s = match store {
             StoreSel::Shared => &mut env.store,
             StoreSel::Gpu => &mut env.gpu_store,
@@ -288,6 +328,13 @@ impl Timeline<'_> {
         let (done, slabs) = s.get_many(t0, keys, &mut env.ledger, &mut env.comm)?;
         env.stages.add(stage, done - t0);
         env.workers[self.w].clock = done;
+        if traced {
+            let cost = env.ledger.total_full() - cost0;
+            let bytes = slabs.iter().map(Slab::nbytes).sum();
+            // The edge that gated the batch is the last-finishing writer.
+            let dep = env.trace.binding_writer(keys.iter().map(|k| trace_store_key(store, k)));
+            env.trace.span(self.w, t0, done, EventKind::GetMany, bytes, cost, dep);
+        }
         Ok(slabs)
     }
 
@@ -295,6 +342,8 @@ impl Timeline<'_> {
     pub fn redis_set(&mut self, sel: RedisSel, stage: Stage, key: &str, payload: Slab) -> VTime {
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
+        let traced = env.trace.enabled();
+        let bytes = if traced { payload.nbytes() } else { 0 };
         let r = match sel {
             RedisSel::Own => &mut env.worker_redis[self.w],
             RedisSel::Peer(j) => &mut env.worker_redis[j],
@@ -303,6 +352,12 @@ impl Timeline<'_> {
         let done = r.set(t0, key, payload, &mut env.comm);
         env.stages.add(stage, done - t0);
         env.workers[self.w].clock = done;
+        if traced {
+            // Redis transfers bill via instance hours, not per request: no
+            // ledger delta to sample here.
+            let idx = env.trace.span(self.w, t0, done, EventKind::RedisSet, bytes, 0.0, None);
+            env.trace.note_write(trace_redis_key(sel, self.w, key), idx);
+        }
         done
     }
 
@@ -318,6 +373,10 @@ impl Timeline<'_> {
         let (done, slab) = r.get(t0, key, &mut env.comm)?;
         env.stages.add(stage, done - t0);
         env.workers[self.w].clock = done;
+        if env.trace.enabled() {
+            let dep = env.trace.writer_of(&trace_redis_key(sel, self.w, key));
+            env.trace.span(self.w, t0, done, EventKind::RedisGet, slab.nbytes(), 0.0, dep);
+        }
         Ok(slab)
     }
 
@@ -327,8 +386,17 @@ impl Timeline<'_> {
     pub fn notify(&mut self, topic: &str, body: impl Into<String>) -> VTime {
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
+        let traced = env.trace.enabled();
+        let cost0 = if traced { env.ledger.total_full() } else { 0.0 };
+        let body = body.into();
+        let bytes = body.len() as u64;
         let t = env.queues.publish(t0, topic, body, &mut env.ledger, &mut env.comm);
         env.workers[self.w].clock = t;
+        if traced {
+            let cost = env.ledger.total_full() - cost0;
+            let idx = env.trace.span(self.w, t0, t, EventKind::Notify, bytes, cost, None);
+            env.trace.note_notify(topic, idx);
+        }
         t
     }
 
@@ -337,9 +405,17 @@ impl Timeline<'_> {
     pub fn poll(&mut self, topic: &str, count: usize) -> Result<VTime> {
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
+        let traced = env.trace.enabled();
+        let cost0 = if traced { env.ledger.total_full() } else { 0.0 };
         let t = env.queues.wait_for(t0, topic, count, &mut env.ledger, &mut env.comm)?;
         env.stages.add(Stage::Synchronize, t - t0);
         env.workers[self.w].clock = t;
+        if traced {
+            let cost = env.ledger.total_full() - cost0;
+            // The wait was gated on the count-th publish to the topic.
+            let dep = env.trace.notify_dep(topic, count);
+            env.trace.span(self.w, t0, t, EventKind::Poll, 0, cost, dep);
+        }
         Ok(t)
     }
 
@@ -361,7 +437,24 @@ impl Timeline<'_> {
                 }
                 RedisVerb::Get { key } => OpOut::Payload(self.redis_get(sel, stage, &key)?),
             },
-            Op::Barrier => OpOut::At(self.env.barrier()),
+            Op::Barrier => {
+                let traced = self.env.trace.enabled();
+                let (t0, dep) = if traced {
+                    // The barrier is bound by the slowest worker: its last
+                    // event is the happens-before edge everyone waits on.
+                    let slowest = (0..self.env.workers.len())
+                        .max_by_key(|&i| (self.env.workers[i].clock, i))
+                        .unwrap_or(0);
+                    (self.now(), self.env.trace.last_event_of(slowest))
+                } else {
+                    (VTime::ZERO, None)
+                };
+                let t = self.env.barrier();
+                if traced {
+                    self.env.trace.span(self.w, t0, t, EventKind::Barrier, 0, 0.0, dep);
+                }
+                OpOut::At(t)
+            }
         })
     }
 }
@@ -542,6 +635,50 @@ mod tests {
         let g = e.timeline(1).redis_get(RedisSel::Peer(0), Stage::Synchronize, "g").unwrap();
         assert_eq!(g.as_slice().unwrap(), &[1.0, 2.0]);
         assert!(e.workers[1].clock > VTime::ZERO);
+    }
+
+    #[test]
+    fn traced_timeline_emits_events_with_dep_edges() {
+        use crate::trace::TraceConfig;
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2)
+            .unwrap()
+            .with_trace(TraceConfig::on());
+        let mut e = ClusterEnv::new(cfg).unwrap();
+        let n = e.n_params;
+        e.timeline(0).put(StoreSel::Shared, Stage::Synchronize, "k", Slab::virtual_of(n));
+        e.timeline(1).get(StoreSel::Shared, Stage::Synchronize, "k").unwrap();
+        e.timeline(0).notify("t", "go");
+        e.timeline(1).poll("t", 1).unwrap();
+
+        let evs = e.trace.snapshot();
+        let kinds: Vec<EventKind> = evs.iter().map(|ev| ev.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::Put, EventKind::Get, EventKind::Notify, EventKind::Poll]
+        );
+        assert_eq!(evs[1].dep, Some(0), "get depends on the put that wrote the key");
+        assert_eq!(evs[3].dep, Some(2), "poll depends on the notify it waited for");
+        assert_eq!(evs[0].bytes, n as u64 * 4);
+        assert!(evs[0].cost > 0.0, "put carries its request fee");
+        assert!(evs[1].t0 >= evs[0].t0 && evs[1].t1 >= evs[0].t1);
+
+        // Untraced twin runs the same ops to bit-identical clocks.
+        let mut f = ClusterEnv::new(
+            EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2).unwrap(),
+        )
+        .unwrap();
+        f.timeline(0).put(StoreSel::Shared, Stage::Synchronize, "k", Slab::virtual_of(n));
+        f.timeline(1).get(StoreSel::Shared, Stage::Synchronize, "k").unwrap();
+        f.timeline(0).notify("t", "go");
+        f.timeline(1).poll("t", 1).unwrap();
+        assert!(f.trace.is_empty());
+        for w in 0..2 {
+            assert_eq!(
+                e.workers[w].clock.secs().to_bits(),
+                f.workers[w].clock.secs().to_bits(),
+                "worker {w}: traced and untraced clocks must match"
+            );
+        }
     }
 
     #[test]

@@ -157,6 +157,7 @@ impl Strategy for ScatterReduce {
         let mut loss_n = 0usize;
 
         for round in 0..env.batches_per_epoch {
+            env.trace.set_round(round);
             let tag = format!("e{}/r{}", env.epoch, round);
             let mut invs = Vec::with_capacity(w_count);
             let mut grads = Vec::with_capacity(w_count);

@@ -24,10 +24,11 @@ use crate::cloud::FrameworkKind;
 use crate::metrics::Stage;
 use crate::sim::VTime;
 use crate::tensor::Slab;
+use crate::trace::EventKind;
 use crate::Result;
 
 use super::env::{ClusterEnv, Device};
-use super::protocol::RedisSel;
+use super::protocol::{trace_redis_key, RedisSel};
 use super::{EpochStats, Strategy};
 
 #[derive(Debug, Default)]
@@ -61,6 +62,7 @@ impl Strategy for Spirt {
         let alloc_mb = env.allocated_mb();
         let epoch = env.epoch;
         let inv_k_minibatch = 1.0 / env.batches_per_epoch as f32;
+        let traced = env.trace.enabled();
         let mut loss_sum = 0.0;
         let mut loss_n = 0usize;
 
@@ -83,6 +85,7 @@ impl Strategy for Spirt {
             let mut arrivals = Vec::with_capacity(env.batches_per_epoch);
             let mut dropped_done = VTime::ZERO;
             for m in 0..env.batches_per_epoch {
+                env.trace.set_round(m);
                 env.workers[w].clock = base;
                 let inv = env.lambda.begin_invocation(base, w);
                 env.workers[w].clock = inv.body_start;
@@ -125,10 +128,20 @@ impl Strategy for Spirt {
                 gsum_ready = env.worker_redis[w].set(t0, "gsum", zero, &mut env.comm);
             }
             let mut fn_done = dropped_done;
+            // The in-DB accumulation chain: each acc depends on the previous
+            // one (the database serializes the scripts), which the trace
+            // records as explicit edges so the critical path can follow the
+            // chain even though worker clocks reset per minibatch.
+            let mut prev_acc: Option<u64> = None;
             for (i, (arrive, m, inv, grad)) in arrivals.into_iter().enumerate() {
+                env.trace.set_round(m);
+                let gbytes = if traced { grad.nbytes() } else { 0 };
                 let gkey = format!("g/e{epoch}/m{m}");
                 let t = env.worker_redis[w].set(arrive, &gkey, grad, &mut env.comm);
                 env.stages.add(Stage::ComputeGradients, t - arrive);
+                if traced {
+                    env.trace.span(w, arrive, t, EventKind::RedisSet, gbytes, 0.0, None);
+                }
 
                 // Async in-DB accumulate (first arrival seeds the sum).
                 let acc_done = if i == 0 {
@@ -136,6 +149,11 @@ impl Strategy for Spirt {
                 } else {
                     env.worker_redis[w].acc_in_db(t, "gsum", "gsum", &gkey, 1.0, &mut env.comm)?
                 };
+                if traced {
+                    let idx =
+                        env.trace.span(w, t, acc_done, EventKind::InDb, gbytes, 0.0, prev_acc);
+                    prev_acc = idx;
+                }
                 gsum_ready = gsum_ready.max(acc_done);
                 env.worker_redis[w].delete(&gkey);
 
@@ -151,17 +169,25 @@ impl Strategy for Spirt {
             env.workers[w].clock = fn_done.max(gsum_ready);
 
             // In-DB averaging of the accumulated sum.
+            let avg_key = format!("avg/e{epoch}");
             let t0 = env.stepfn.enter_stage(env.workers[w].clock, "average", &mut env.ledger);
             let t = env.worker_redis[w].scale_in_db(
                 t0,
-                &format!("avg/e{epoch}"),
+                &avg_key,
                 "gsum",
                 inv_k_minibatch,
                 &mut env.comm,
             )?;
+            if traced {
+                let idx = env.trace.span(w, t0, t, EventKind::InDb, 0, 0.0, prev_acc);
+                // Peers fetch the average P2P: register this as its writer
+                // so their `redis_get(Peer(w), ..)` deps resolve.
+                env.trace.note_write(trace_redis_key(RedisSel::Own, w, &avg_key), idx);
+            }
             env.stages.add(Stage::ComputeGradients, t - env.workers[w].clock);
             env.workers[w].clock = t;
         }
+        env.trace.set_round(0);
 
         // ---- Stage 3: sync queue + P2P fetch of averaged gradients -------
         // Fault semantics: a worker that crashes entering sync restarts
@@ -244,6 +270,11 @@ impl Strategy for Spirt {
                 lr,
                 &mut env.comm,
             )?;
+            if traced {
+                // Fused in-DB update; same-worker program order links it to
+                // the final-gradient write just above.
+                env.trace.span(w, t0, t, EventKind::InDb, 0, 0.0, None);
+            }
             env.stages.add(Stage::ModelUpdate, t - env.workers[w].clock);
             env.workers[w].clock = t;
             // Mirror the in-DB replica into the worker state (real mode).

@@ -38,6 +38,9 @@ pub struct SweepConfig {
     pub epochs: usize,
     /// Simulation threads (0 = one per available core).
     pub threads: usize,
+    /// Record protocol traces and report per-point p99 op latency
+    /// (opt-in: tracing buffers every protocol event).
+    pub trace: bool,
 }
 
 impl Default for SweepConfig {
@@ -49,6 +52,7 @@ impl Default for SweepConfig {
             batches_per_epoch: 24,
             epochs: 1,
             threads: 0,
+            trace: false,
         }
     }
 }
@@ -73,6 +77,8 @@ pub struct SweepPoint {
     pub mean_fn_secs: f64,
     /// Mean contributions per epoch skipped by the staleness policy.
     pub stale_skips: u64,
+    /// p99 latency of communication ops (ms), when the sweep traced.
+    pub p99_op_ms: Option<f64>,
 }
 
 fn run_point(
@@ -82,6 +88,9 @@ fn run_point(
     mode: SyncMode,
 ) -> Result<SweepPoint> {
     let mut ec = EnvConfig::virtual_paper(fw, &cfg.arch, workers)?.with_sync(mode);
+    if cfg.trace {
+        ec = ec.with_trace(crate::trace::TraceConfig::on());
+    }
     ec.batches_per_epoch = cfg.batches_per_epoch;
     let mut env = ClusterEnv::new(ec)?;
     let mut strategy = strategy_for(fw);
@@ -104,6 +113,11 @@ fn run_point(
         total_ops: env.comm.total_ops() / epochs as u64,
         mean_fn_secs,
         stale_skips: env.comm.stale_skips / epochs as u64,
+        p99_op_ms: if cfg.trace {
+            crate::trace::histogram::p99_comm_ms(env.trace.events())
+        } else {
+            None
+        },
     })
 }
 
@@ -174,6 +188,7 @@ pub fn report(points: &[SweepPoint], cfg: &SweepConfig) -> Report {
             ("Ops", Align::Right),
             ("Fn (s)", Align::Right),
             ("Skips", Align::Right),
+            ("p99 op (ms)", Align::Right),
         ],
     )
     .title(format!(
@@ -196,6 +211,10 @@ pub fn report(points: &[SweepPoint], cfg: &SweepConfig) -> Report {
             Cell::count(p.total_ops),
             Cell::num(p.mean_fn_secs, 2),
             Cell::count(p.stale_skips),
+            match p.p99_op_ms {
+                Some(ms) => Cell::num(ms, 1),
+                None => Cell::text("—"),
+            },
         ]);
     }
     let mode_labels: Vec<String> = cfg.modes.iter().map(|m| m.label()).collect();
@@ -233,11 +252,11 @@ pub fn render(points: &[SweepPoint], cfg: &SweepConfig) -> String {
 pub fn render_csv(points: &[SweepPoint]) -> String {
     let mut out = String::from(
         "framework,workers,mode,epoch_secs,cost_usd,wire_bytes,total_ops,mean_fn_secs,\
-         stale_skips\n",
+         stale_skips,p99_op_ms\n",
     );
     for p in points {
         out.push_str(&format!(
-            "{},{},{},{:.6},{:.6},{},{},{:.6},{}\n",
+            "{},{},{},{:.6},{:.6},{},{},{:.6},{},{}\n",
             p.framework.name(),
             p.workers,
             p.mode.label(),
@@ -246,7 +265,8 @@ pub fn render_csv(points: &[SweepPoint]) -> String {
             p.wire_bytes,
             p.total_ops,
             p.mean_fn_secs,
-            p.stale_skips
+            p.stale_skips,
+            p.p99_op_ms.map(|ms| format!("{ms:.3}")).unwrap_or_default()
         ));
     }
     out
@@ -264,6 +284,7 @@ mod tests {
             batches_per_epoch: 4,
             epochs: 1,
             threads: 2,
+            trace: false,
         }
     }
 
@@ -314,6 +335,29 @@ mod tests {
             assert_eq!(x.cost_usd.to_bits(), y.cost_usd.to_bits());
             assert_eq!(x.total_ops, y.total_ops);
         }
+    }
+
+    #[test]
+    fn traced_sweep_adds_p99_without_perturbing_the_timeline() {
+        let plain = run(&small_cfg()).unwrap();
+        let mut tcfg = small_cfg();
+        tcfg.trace = true;
+        let traced = run(&tcfg).unwrap();
+        assert_eq!(plain.len(), traced.len());
+        for (x, y) in plain.iter().zip(&traced) {
+            assert_eq!(
+                x.epoch_secs.to_bits(),
+                y.epoch_secs.to_bits(),
+                "{:?} W={}: tracing must not move the timeline",
+                x.framework,
+                x.workers
+            );
+            assert_eq!(x.cost_usd.to_bits(), y.cost_usd.to_bits());
+            assert!(x.p99_op_ms.is_none());
+            assert!(y.p99_op_ms.unwrap() > 0.0, "{y:?}");
+        }
+        let csv = render_csv(&traced);
+        assert_eq!(csv.lines().nth(1).unwrap().split(',').count(), 10);
     }
 
     #[test]

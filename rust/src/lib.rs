@@ -32,6 +32,10 @@
 //!   (tables, rows, cells with paper anchors and PASS/WARN verdicts) with
 //!   text/Markdown/CSV/JSON renderers, and the suite runner behind
 //!   `slsgpu report` that regenerates the `docs/` tree deterministically.
+//! * [`trace`] — protocol-level observability: a deterministic structured
+//!   event log over every protocol op/stage/fault (zero-cost when disabled),
+//!   with Chrome trace-event export, critical-path analysis and per-op-kind
+//!   latency percentiles behind `slsgpu trace`.
 //!
 //! Time in experiment outputs is *virtual* (the paper's AWS time axis,
 //! calibrated from the paper's own measurements — see
@@ -48,6 +52,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod util;
 

@@ -11,7 +11,10 @@
 //! slsgpu fault-tolerance [--arch mobilenet] [--workers 4] [--epochs 3]
 //! slsgpu scale-sweep [--workers 4,16,64,256] [--modes bsp,async:2]
 //!                    [--arch mobilenet] [--batches 24] [--epochs 1]
-//!                    [--threads 0] [--csv out.csv]  # 5 archs × W × mode
+//!                    [--threads 0] [--csv out.csv] [--trace]  # 5 archs × W × mode
+//! slsgpu trace [--arch spirt|all] [--model mobilenet] [--workers 4]
+//!              [--batches 24] [--epochs 1] [--mode bsp]
+//!              [--format summary|chrome|csv] [--out trace.json]
 //! slsgpu report [--out docs] [--skip table2,...]    # regenerate docs/
 //!               [--workers 4] [--sweep-workers 4,16,64,256]
 //!               [--sweep-batches 24] [--threads 0] [--fault-epochs 3]
@@ -70,6 +73,7 @@ fn run() -> Result<()> {
         Some("exp") => run_exp(&args),
         Some("fault-tolerance") => run_fault_tolerance(&args),
         Some("scale-sweep") => run_scale_sweep(&args),
+        Some("trace") => run_trace(&args),
         Some("report") => run_report(&args),
         Some("train") => run_train(&args),
         Some("artifacts") => {
@@ -90,13 +94,14 @@ fn run() -> Result<()> {
             Ok(())
         }
         Some(other) => bail!(
-            "unknown subcommand {other:?} (exp|fault-tolerance|scale-sweep|report|train|artifacts)"
+            "unknown subcommand {other:?} \
+             (exp|fault-tolerance|scale-sweep|trace|report|train|artifacts)"
         ),
         None => {
             println!("slsgpu — serverless-vs-GPU training testbed (see README)");
             println!(
                 "subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, \
-                 fault-tolerance, scale-sweep, report, train, artifacts"
+                 fault-tolerance, scale-sweep, trace, report, train, artifacts"
             );
             Ok(())
         }
@@ -145,12 +150,46 @@ fn run_scale_sweep(args: &Args) -> Result<()> {
         batches_per_epoch: args.get_usize("batches", 24)?,
         epochs: args.get_usize("epochs", 1)?,
         threads: args.get_usize("threads", 0)?,
+        trace: args.has_flag("trace"),
     };
     let points = exp::scale_sweep::run(&cfg)?;
     print!("{}", exp::scale_sweep::render(&points, &cfg));
     if let Some(path) = args.get("csv") {
         std::fs::write(path, exp::scale_sweep::render_csv(&points))?;
         println!("wrote sweep points to {path}");
+    }
+    Ok(())
+}
+
+/// Protocol tracing: run the selected architecture(s) with the trace
+/// collector on and emit the critical-path/percentile summary, a Chrome
+/// trace-event file (chrome://tracing, Perfetto) or per-op-kind CSV.
+fn run_trace(args: &Args) -> Result<()> {
+    let cfg = exp::trace::TraceRunConfig {
+        arch: args.get_or("model", "mobilenet").to_string(),
+        workers: args.get_usize("workers", 4)?,
+        batches_per_epoch: args.get_usize("batches", 24)?,
+        epochs: args.get_usize("epochs", 1)?,
+        mode: SyncMode::parse(args.get_or("mode", "bsp"))?,
+    };
+    let arch = args.get_or("arch", "spirt");
+    let traces = if arch.eq_ignore_ascii_case("all") {
+        exp::trace::run(&cfg)?
+    } else {
+        exp::trace::run_for(&cfg, &[framework_by_name(arch)?])?
+    };
+    let rendered = match args.get_or("format", "summary") {
+        "summary" => exp::trace::render(&traces, &cfg),
+        "chrome" => exp::trace::chrome_export(&traces),
+        "csv" => exp::trace::render_csv(&traces),
+        other => bail!("unknown format {other:?} (summary|chrome|csv)"),
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, rendered)?;
+            println!("wrote trace to {path}");
+        }
+        None => print!("{rendered}"),
     }
     Ok(())
 }

@@ -268,6 +268,56 @@ impl RecoveryStats {
     }
 }
 
+/// A latency sample set with nearest-rank percentiles — the backing store
+/// for the trace layer's per-op-kind p50/p95/p99 tables
+/// (`trace::histogram`). Samples are kept raw (no bucketing) so percentiles
+/// are exact and deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        debug_assert!(v.is_finite(), "non-finite sample {v}");
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Nearest-rank percentile: the smallest sample v such that at least
+    /// `p`% of samples are ≤ v (rank `ceil(p/100·n)`, clamped to [1, n]).
+    /// Returns 0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        sorted[rank.clamp(1, n) - 1]
+    }
+}
+
 /// The paper's Table-1 training stages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Stage {
@@ -391,6 +441,31 @@ mod tests {
         assert_eq!(a.rerouted_fetches, 1);
         assert!((a.downtime_secs - 5.0).abs() < 1e-12);
         assert!((a.cost_usd - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_nearest_rank() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.add(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert_eq!(h.percentile(50.0), 50.0);
+        assert_eq!(h.percentile(95.0), 95.0);
+        assert_eq!(h.percentile(99.0), 99.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert_eq!(h.percentile(0.0), 1.0, "rank clamps to the smallest sample");
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.total(), 5050.0);
+
+        // Nearest-rank on a tiny set: p50 of [10, 20] is the 1st sample.
+        let mut small = Histogram::new();
+        small.add(20.0);
+        small.add(10.0);
+        assert_eq!(small.percentile(50.0), 10.0);
+        assert_eq!(small.percentile(51.0), 20.0);
+
+        assert_eq!(Histogram::new().percentile(99.0), 0.0);
     }
 
     #[test]

@@ -36,6 +36,8 @@ pub struct SuiteConfig {
     pub fault: exp::table4_faults::FaultConfig,
     /// Scale-sweep grid.
     pub sweep: exp::scale_sweep::SweepConfig,
+    /// Protocol-trace run parameters.
+    pub trace: exp::trace::TraceRunConfig,
 }
 
 impl Default for SuiteConfig {
@@ -48,6 +50,7 @@ impl Default for SuiteConfig {
             indb_minibatches: 24,
             fault: exp::table4_faults::FaultConfig::default(),
             sweep: exp::scale_sweep::SweepConfig::default(),
+            trace: exp::trace::TraceRunConfig::default(),
         }
     }
 }
@@ -93,7 +96,7 @@ impl SuiteConfig {
 }
 
 /// The suite's experiment ids, in execution order.
-pub const EXPERIMENT_IDS: [&str; 8] = [
+pub const EXPERIMENT_IDS: [&str; 9] = [
     "table1",
     "table2",
     "fig2",
@@ -102,6 +105,7 @@ pub const EXPERIMENT_IDS: [&str; 8] = [
     "table3",
     "table4_faults",
     "scale_sweep",
+    "trace",
 ];
 
 /// Run the full virtual-mode suite. Table 3 needs compiled PJRT artifacts
@@ -144,6 +148,7 @@ pub fn canonical_title(id: &str) -> String {
         "table3" => "Table 3 / Fig. 4 — convergence on the executed model".to_string(),
         "table4_faults" => "Table 4 — Resilience under injected faults".to_string(),
         "scale_sweep" => "Scale sweep — 4 → 256 workers × sync modes".to_string(),
+        "trace" => "Protocol trace — critical path and op latency percentiles".to_string(),
         other => other.to_string(),
     }
 }
@@ -174,6 +179,10 @@ fn run_one(id: &str, cfg: &SuiteConfig) -> Result<Report> {
         "scale_sweep" => {
             let points = exp::scale_sweep::run(&cfg.sweep)?;
             exp::scale_sweep::report(&points, &cfg.sweep)
+        }
+        "trace" => {
+            let traces = exp::trace::run(&cfg.trace)?;
+            exp::trace::report(&traces, &cfg.trace)
         }
         other => anyhow::bail!("unknown experiment id {other:?}"),
     })

@@ -1,0 +1,183 @@
+//! Chrome trace-event JSON export (loadable in Perfetto / `chrome://tracing`).
+//!
+//! One process per traced run (so `--arch all` shows the five architectures
+//! side by side), one thread track per worker plus a `supervisor` track for
+//! MLLess. Spans render as complete events (`ph:"X"`, microsecond `ts`/`dur`)
+//! carrying bytes/cost/epoch/round in `args`; zero-duration fault markers
+//! render as thread-scoped instants (`ph:"i"`). Serialization goes through
+//! `util::json` (BTreeMap objects, fixed number formatting), so equal traces
+//! produce byte-identical files.
+
+use std::collections::BTreeMap;
+
+use crate::faults::SUPERVISOR;
+use crate::util::json::Json;
+
+use super::event::TraceEvent;
+
+/// One traced run to export: a label (architecture name), the worker count
+/// (fixes the supervisor's thread id) and the event snapshot.
+#[derive(Debug, Clone)]
+pub struct ChromeRun {
+    pub label: String,
+    pub workers: usize,
+    pub events: Vec<TraceEvent>,
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn meta(pid: usize, tid: usize, what: &str, name: &str) -> Json {
+    obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("name", Json::Str(what.into())),
+        ("args", obj(vec![("name", Json::Str(name.into()))])),
+    ])
+}
+
+fn tid_of(worker: usize, workers: usize) -> usize {
+    if worker == SUPERVISOR {
+        workers
+    } else {
+        worker
+    }
+}
+
+fn event_json(pid: usize, workers: usize, e: &TraceEvent) -> Json {
+    let mut pairs = vec![
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid_of(e.worker, workers) as f64)),
+        ("ts", Json::Num(e.t0.secs() * 1e6)),
+        ("name", Json::Str(e.kind.name().into())),
+        ("cat", Json::Str(e.kind.category().into())),
+        (
+            "args",
+            obj(vec![
+                ("bytes", Json::Num(e.bytes as f64)),
+                ("cost_usd", Json::Num(e.cost)),
+                ("epoch", Json::Num(e.epoch as f64)),
+                ("round", Json::Num(e.round as f64)),
+            ]),
+        ),
+    ];
+    if e.kind.is_instant() {
+        pairs.push(("ph", Json::Str("i".into())));
+        pairs.push(("s", Json::Str("t".into())));
+    } else {
+        pairs.push(("ph", Json::Str("X".into())));
+        pairs.push(("dur", Json::Num((e.t1 - e.t0) * 1e6)));
+    }
+    obj(pairs)
+}
+
+/// Build the trace document for one or more runs.
+pub fn json(runs: &[ChromeRun]) -> Json {
+    let mut events = Vec::new();
+    for (pid, run) in runs.iter().enumerate() {
+        events.push(meta(pid, 0, "process_name", &run.label));
+        let mut tids: BTreeMap<usize, String> = BTreeMap::new();
+        for e in &run.events {
+            let tid = tid_of(e.worker, run.workers);
+            let name = if e.worker == SUPERVISOR {
+                "supervisor".to_string()
+            } else {
+                format!("worker {}", e.worker)
+            };
+            tids.entry(tid).or_insert(name);
+        }
+        for (tid, name) in &tids {
+            events.push(meta(pid, *tid, "thread_name", name));
+        }
+        for e in &run.events {
+            events.push(event_json(pid, run.workers, e));
+        }
+    }
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Serialize to the final newline-terminated file contents.
+pub fn render(runs: &[ChromeRun]) -> String {
+    format!("{}\n", json(runs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::VTime;
+    use crate::trace::{EventKind, TraceCollector, TraceConfig};
+
+    fn sample_run() -> ChromeRun {
+        let mut c = TraceCollector::new(&TraceConfig::on());
+        c.begin_epoch(1);
+        c.span(0, VTime::from_secs(0.5), VTime::from_secs(1.25), EventKind::Put, 64, 0.001, None);
+        c.instant(1, VTime::from_secs(2.0), EventKind::Poison);
+        c.span(SUPERVISOR, VTime::from_secs(0.0), VTime::from_secs(0.25), EventKind::Poll, 0, 0.0, None);
+        ChromeRun { label: "mlless".into(), workers: 2, events: c.snapshot() }
+    }
+
+    #[test]
+    fn emits_valid_deterministic_json() {
+        let runs = vec![sample_run()];
+        let a = render(&runs);
+        let b = render(&runs);
+        assert_eq!(a, b);
+        let doc = Json::parse(a.trim_end()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 3 thread_name + 3 events.
+        assert_eq!(events.len(), 7);
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").map(|p| p.as_str().unwrap()).unwrap_or("") == "X")
+            .unwrap();
+        assert_eq!(span.get("ts").unwrap().as_f64().unwrap(), 0.5e6);
+        assert_eq!(span.get("dur").unwrap().as_f64().unwrap(), 0.75e6);
+        assert_eq!(span.get("args").unwrap().get("bytes").unwrap().as_f64().unwrap(), 64.0);
+        let instant = events
+            .iter()
+            .find(|e| e.get("ph").map(|p| p.as_str().unwrap()).unwrap_or("") == "i")
+            .unwrap();
+        assert_eq!(instant.get("s").unwrap().as_str().unwrap(), "t");
+        assert_eq!(instant.get("name").unwrap().as_str().unwrap(), "poison");
+    }
+
+    #[test]
+    fn supervisor_maps_to_extra_track() {
+        let run = sample_run();
+        let doc = json(&[run]);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let sup = events
+            .iter()
+            .find(|e| {
+                e.get("name").map(|n| n.as_str().unwrap()).unwrap_or("") == "thread_name"
+                    && e.get("args").unwrap().get("name").unwrap().as_str().unwrap() == "supervisor"
+            })
+            .unwrap();
+        assert_eq!(sup.get("tid").unwrap().as_f64().unwrap(), 2.0);
+        let poll = events
+            .iter()
+            .find(|e| e.get("name").map(|n| n.as_str().unwrap()).unwrap_or("") == "poll")
+            .unwrap();
+        assert_eq!(poll.get("tid").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn multi_run_export_separates_pids() {
+        let mut r0 = sample_run();
+        r0.label = "a".into();
+        let mut r1 = sample_run();
+        r1.label = "b".into();
+        let doc = json(&[r0, r1]);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let pids: std::collections::BTreeSet<i64> = events
+            .iter()
+            .map(|e| e.get("pid").unwrap().as_f64().unwrap() as i64)
+            .collect();
+        assert_eq!(pids.into_iter().collect::<Vec<_>>(), vec![0, 1]);
+    }
+}

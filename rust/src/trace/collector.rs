@@ -1,0 +1,299 @@
+//! The per-run event collector: a ring buffer of [`TraceEvent`]s plus the
+//! side tables (key → writer, topic → notifies, worker → last event) used to
+//! attach happens-before edges at record time.
+//!
+//! The collector is strictly observational: it never advances a clock,
+//! charges a ledger or draws from the RNG, so enabling it cannot perturb the
+//! simulated timelines (asserted bit-exactly in `rust/tests/determinism.rs`).
+//! When disabled every entry point returns after one boolean test and no
+//! allocation happens at all.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::sim::VTime;
+
+use super::event::{EventKind, TraceEvent};
+
+/// Default ring capacity: enough for every experiment in the suite (a
+/// 256-worker sweep epoch is ~50k events) while bounding a runaway session.
+pub const DEFAULT_CAPACITY: usize = 1 << 20;
+
+/// Tracing knob carried by `EnvConfig`. The default — and the only value any
+/// exp driver may use without an explicit opt-in flag — is
+/// [`TraceConfig::disabled`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceConfig {
+    pub enabled: bool,
+    /// Ring capacity in events; oldest events are evicted past this.
+    pub capacity: usize,
+}
+
+impl TraceConfig {
+    /// Tracing off: the zero-cost default everywhere.
+    pub fn disabled() -> TraceConfig {
+        TraceConfig { enabled: false, capacity: 0 }
+    }
+
+    /// Tracing on with the default ring capacity.
+    pub fn on() -> TraceConfig {
+        TraceConfig { enabled: true, capacity: DEFAULT_CAPACITY }
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> TraceConfig {
+        self.capacity = capacity.max(1);
+        self
+    }
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig::disabled()
+    }
+}
+
+/// Deterministic per-run event log. Owned by `ClusterEnv`; strategies and
+/// `Timeline` methods feed it through the emit API below.
+#[derive(Debug, Clone, Default)]
+pub struct TraceCollector {
+    on: bool,
+    capacity: usize,
+    /// Live window of the log; `events[0]` has index `first`.
+    events: VecDeque<TraceEvent>,
+    first: u64,
+    dropped: u64,
+    epoch: u32,
+    round: u32,
+    /// Namespaced key (`s3/...`, `s3gpu/...`, `redis<j>/...`) → index of the
+    /// event that last wrote it; read ops look their `dep` edge up here.
+    writers: BTreeMap<String, u64>,
+    /// Queue topic → notify event indices in publish order; `poll(topic, n)`
+    /// depends on the n-th publish it waited for.
+    notifies: BTreeMap<String, Vec<u64>>,
+    last_by_worker: BTreeMap<usize, u64>,
+}
+
+impl TraceCollector {
+    pub fn new(cfg: &TraceConfig) -> TraceCollector {
+        TraceCollector {
+            on: cfg.enabled,
+            capacity: if cfg.enabled { cfg.capacity.max(1) } else { 0 },
+            ..TraceCollector::default()
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Stamp subsequent events with this 1-based epoch and reset the round.
+    pub fn begin_epoch(&mut self, epoch: usize) {
+        if self.on {
+            self.epoch = epoch as u32;
+            self.round = 0;
+        }
+    }
+
+    /// Stamp subsequent events with this round (minibatch for SPIRT).
+    pub fn set_round(&mut self, round: usize) {
+        if self.on {
+            self.round = round as u32;
+        }
+    }
+
+    /// Record a span. Returns its index, or `None` when tracing is off.
+    pub fn span(
+        &mut self,
+        worker: usize,
+        t0: VTime,
+        t1: VTime,
+        kind: EventKind,
+        bytes: u64,
+        cost: f64,
+        dep: Option<u64>,
+    ) -> Option<u64> {
+        if !self.on {
+            return None;
+        }
+        let idx = self.first + self.events.len() as u64;
+        let prev = self.last_by_worker.insert(worker, idx);
+        self.events.push_back(TraceEvent {
+            worker,
+            t0,
+            t1,
+            kind,
+            bytes,
+            cost,
+            round: self.round,
+            epoch: self.epoch,
+            dep,
+            prev,
+        });
+        if self.events.len() > self.capacity {
+            self.events.pop_front();
+            self.first += 1;
+            self.dropped += 1;
+        }
+        Some(idx)
+    }
+
+    /// Record a zero-duration marker (fault instants).
+    pub fn instant(&mut self, worker: usize, t: VTime, kind: EventKind) -> Option<u64> {
+        self.span(worker, t, t, kind, 0, 0.0, None)
+    }
+
+    /// Register `idx` as the current writer of `key` (namespaced).
+    pub fn note_write(&mut self, key: String, idx: Option<u64>) {
+        if let Some(i) = idx {
+            self.writers.insert(key, i);
+        }
+    }
+
+    /// The event that last wrote `key`, if traced and still resident.
+    pub fn writer_of(&self, key: &str) -> Option<u64> {
+        self.writers.get(key).copied()
+    }
+
+    /// Among `keys`, the writer that finished last — the edge that actually
+    /// gates a batched `get_many`. Ties break on event index, so the result
+    /// is deterministic.
+    pub fn binding_writer(&self, keys: impl IntoIterator<Item = String>) -> Option<u64> {
+        keys.into_iter()
+            .filter_map(|k| self.writer_of(&k))
+            .filter_map(|i| self.get(i).map(|e| (e.t1, i)))
+            .max()
+            .map(|(_, i)| i)
+    }
+
+    /// Register a queue publish so later polls can find their edge.
+    pub fn note_notify(&mut self, topic: &str, idx: Option<u64>) {
+        if let Some(i) = idx {
+            self.notifies.entry(topic.to_string()).or_default().push(i);
+        }
+    }
+
+    /// The publish a `poll(topic, count)` was gated on: the `count`-th
+    /// notify on that topic (queues deliver in publish order).
+    pub fn notify_dep(&self, topic: &str, count: usize) -> Option<u64> {
+        self.notifies.get(topic)?.get(count.checked_sub(1)?).copied()
+    }
+
+    /// Index of the most recent event on `worker`'s track.
+    pub fn last_event_of(&self, worker: usize) -> Option<u64> {
+        self.last_by_worker.get(&worker).copied()
+    }
+
+    /// Resolve an event index; `None` once evicted from the ring.
+    pub fn get(&self, idx: u64) -> Option<&TraceEvent> {
+        if idx < self.first {
+            return None;
+        }
+        self.events.get((idx - self.first) as usize)
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// `(index, event)` pairs for the resident window.
+    pub fn iter_indexed(&self) -> impl Iterator<Item = (u64, &TraceEvent)> {
+        (self.first..).zip(self.events.iter())
+    }
+
+    /// Copy the resident window out for export/analysis.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.events.iter().copied().collect()
+    }
+
+    /// Index of the oldest resident event.
+    pub fn first_index(&self) -> u64 {
+        self.first
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted by the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> VTime {
+        VTime::from_secs(s)
+    }
+
+    #[test]
+    fn disabled_collector_records_nothing() {
+        let mut c = TraceCollector::new(&TraceConfig::disabled());
+        assert!(!c.enabled());
+        assert_eq!(c.span(0, t(0.0), t(1.0), EventKind::Put, 8, 0.1, None), None);
+        assert_eq!(c.instant(0, t(1.0), EventKind::Poison), None);
+        c.note_write("s3/k".into(), None);
+        c.note_notify("topic", None);
+        assert!(c.is_empty());
+        assert_eq!(c.writer_of("s3/k"), None);
+        assert_eq!(c.notify_dep("topic", 1), None);
+    }
+
+    #[test]
+    fn indices_prev_and_dep_lookups() {
+        let mut c = TraceCollector::new(&TraceConfig::on());
+        c.begin_epoch(1);
+        c.set_round(3);
+        let a = c.span(0, t(0.0), t(1.0), EventKind::Put, 8, 0.0, None);
+        c.note_write("s3/k".into(), a);
+        let b = c.span(1, t(0.5), t(2.0), EventKind::Put, 8, 0.0, None);
+        c.note_write("s3/j".into(), b);
+        let g = c.span(0, t(1.0), t(2.5), EventKind::Get, 8, 0.0, c.writer_of("s3/j"));
+        assert_eq!(a, Some(0));
+        assert_eq!(b, Some(1));
+        assert_eq!(g, Some(2));
+        let ev = c.get(2).unwrap();
+        assert_eq!(ev.dep, Some(1));
+        assert_eq!(ev.prev, Some(0), "same-worker predecessor");
+        assert_eq!(ev.epoch, 1);
+        assert_eq!(ev.round, 3);
+        // Latest-finishing writer wins the batched edge.
+        assert_eq!(c.binding_writer(["s3/k".to_string(), "s3/j".to_string()]), Some(1));
+        assert_eq!(c.last_event_of(0), Some(2));
+    }
+
+    #[test]
+    fn notify_order_indexes_poll_deps() {
+        let mut c = TraceCollector::new(&TraceConfig::on());
+        let n1 = c.span(0, t(0.0), t(0.1), EventKind::Notify, 4, 0.0, None);
+        c.note_notify("sync/e1", n1);
+        let n2 = c.span(1, t(0.0), t(0.2), EventKind::Notify, 4, 0.0, None);
+        c.note_notify("sync/e1", n2);
+        assert_eq!(c.notify_dep("sync/e1", 1), n1);
+        assert_eq!(c.notify_dep("sync/e1", 2), n2);
+        assert_eq!(c.notify_dep("sync/e1", 3), None);
+        assert_eq!(c.notify_dep("sync/e1", 0), None);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_but_never_renumbers() {
+        let mut c = TraceCollector::new(&TraceConfig::on().with_capacity(2));
+        for i in 0..5 {
+            let idx = c.span(0, t(i as f64), t(i as f64 + 0.5), EventKind::Advance, 0, 0.0, None);
+            assert_eq!(idx, Some(i as u64));
+        }
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.dropped(), 3);
+        assert_eq!(c.first_index(), 3);
+        assert!(c.get(2).is_none(), "evicted indices resolve to None");
+        assert_eq!(c.get(3).unwrap().t0, t(3.0));
+        assert_eq!(c.get(4).unwrap().prev, Some(3));
+        let idx: Vec<u64> = c.iter_indexed().map(|(i, _)| i).collect();
+        assert_eq!(idx, vec![3, 4]);
+    }
+}

@@ -1,0 +1,245 @@
+//! Critical-path analysis over the trace-event DAG.
+//!
+//! Edges, in precedence order at each step of the backward walk:
+//!
+//! 1. **Explicit dependency** (`TraceEvent::dep`): a cross-worker
+//!    happens-before edge — the put a get observed, the notify a poll was
+//!    gated on, the slowest worker a barrier waited for. Followed only when
+//!    the dependency actually gated the op (`dep.t1 > op.t0`); an edge to a
+//!    write that was already visible cost nothing.
+//! 2. **Program order** (`TraceEvent::prev`): the same-worker chain, walked
+//!    back past any events that *finished after* this op started. That skip
+//!    matters for SPIRT, whose per-minibatch clock resets make a worker's
+//!    track non-monotonic — the immediate recorded predecessor may be a
+//!    parallel minibatch, not the op that fed this one.
+//!
+//! The walk starts at the epoch's last-finishing event and always moves to a
+//! strictly smaller event index, so it terminates without cycle detection.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::faults::SUPERVISOR;
+
+use super::collector::TraceCollector;
+use super::event::{EventKind, TraceEvent};
+
+/// One hop on the critical path (terminal-first order in [`EpochPath`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PathStep {
+    pub idx: u64,
+    pub worker: usize,
+    pub kind: EventKind,
+    pub t0_secs: f64,
+    pub t1_secs: f64,
+    /// Seconds this step contributed beyond its predecessor's finish — the
+    /// segment lengths sum to (roughly) the epoch's bound span.
+    pub self_secs: f64,
+}
+
+/// The chain of ops bounding one epoch's finish time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochPath {
+    pub epoch: u32,
+    /// Worker whose event ends the epoch (the terminal step's track).
+    pub bound_worker: usize,
+    pub start_secs: f64,
+    pub end_secs: f64,
+    /// Terminal-first chain of steps.
+    pub steps: Vec<PathStep>,
+    /// Self-time per kind along the path, descending.
+    pub kind_secs: Vec<(EventKind, f64)>,
+}
+
+impl EpochPath {
+    /// Wall span covered by the path.
+    pub fn span_secs(&self) -> f64 {
+        self.end_secs - self.start_secs
+    }
+}
+
+/// Walk the critical path of every epoch present in the collector.
+pub fn analyze(col: &TraceCollector) -> Vec<EpochPath> {
+    let epochs: BTreeSet<u32> = col.events().map(|e| e.epoch).collect();
+    epochs.into_iter().filter_map(|ep| epoch_path(col, ep)).collect()
+}
+
+fn epoch_path(col: &TraceCollector, epoch: u32) -> Option<EpochPath> {
+    let (terminal, _) = col
+        .iter_indexed()
+        .filter(|(_, e)| e.epoch == epoch)
+        .max_by_key(|(i, e)| (e.t1, *i))?;
+    let mut steps = Vec::new();
+    let mut per_kind: BTreeMap<EventKind, f64> = BTreeMap::new();
+    let mut cur = terminal;
+    // Indices strictly decrease along the walk; the cap is a belt-and-braces
+    // guard, not a correctness requirement.
+    for _ in 0..1_000_000 {
+        let e = *col.get(cur)?;
+        let pred = predecessor(col, &e);
+        let pred_t1 = pred.and_then(|p| col.get(p)).map(|p| p.t1.secs());
+        let self_secs = match pred_t1 {
+            Some(pt) => (e.t1.secs() - pt.max(e.t0.secs())).max(0.0),
+            None => e.secs(),
+        };
+        steps.push(PathStep {
+            idx: cur,
+            worker: e.worker,
+            kind: e.kind,
+            t0_secs: e.t0.secs(),
+            t1_secs: e.t1.secs(),
+            self_secs,
+        });
+        *per_kind.entry(e.kind).or_insert(0.0) += self_secs;
+        match pred {
+            Some(p) => cur = p,
+            None => break,
+        }
+    }
+    let mut kind_secs: Vec<(EventKind, f64)> = per_kind.into_iter().collect();
+    kind_secs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    Some(EpochPath {
+        epoch,
+        bound_worker: steps[0].worker,
+        start_secs: steps.last().map(|s| s.t0_secs).unwrap_or(0.0),
+        end_secs: steps[0].t1_secs,
+        steps,
+        kind_secs,
+    })
+}
+
+/// The event that gated `e`, per the edge rules in the module docs.
+fn predecessor(col: &TraceCollector, e: &TraceEvent) -> Option<u64> {
+    if let Some(d) = e.dep {
+        if let Some(de) = col.get(d) {
+            if de.t1 > e.t0 {
+                return Some(d);
+            }
+        }
+    }
+    let mut p = e.prev;
+    while let Some(pi) = p {
+        let pe = col.get(pi)?;
+        if pe.t1 <= e.t0 {
+            return Some(pi);
+        }
+        p = pe.prev;
+    }
+    None
+}
+
+fn worker_label(w: usize) -> String {
+    if w == SUPERVISOR {
+        "sup".to_string()
+    } else {
+        format!("w{w}")
+    }
+}
+
+/// Render the chain tail as `w0:apply-update <- w0:get <- w1:put <- …`.
+pub fn describe(path: &EpochPath, max_steps: usize) -> String {
+    let mut parts: Vec<String> = path
+        .steps
+        .iter()
+        .take(max_steps)
+        .map(|s| format!("{}:{}", worker_label(s.worker), s.kind.name()))
+        .collect();
+    if path.steps.len() > max_steps {
+        parts.push(format!("… {} more", path.steps.len() - max_steps));
+    }
+    parts.join(" <- ")
+}
+
+/// Render the top-`k` kinds by path self-time as `compute 14.40s · poll 3.21s`.
+pub fn dominant(path: &EpochPath, k: usize) -> String {
+    path.kind_secs
+        .iter()
+        .take(k)
+        .map(|(kind, secs)| format!("{} {:.2}s", kind.name(), secs))
+        .collect::<Vec<_>>()
+        .join(" · ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::VTime;
+    use crate::trace::TraceConfig;
+
+    fn t(s: f64) -> VTime {
+        VTime::from_secs(s)
+    }
+
+    /// Hand-built DAG: w0 puts [0,2]; w1 computes [0,5] then puts [5,6];
+    /// w0 gets [2,6.5] gated on w1's put. Expected chain: get <- put <-
+    /// compute (w0's own put is NOT on the path — it finished long before
+    /// the get was actually gated).
+    #[test]
+    fn walks_the_gating_chain_not_program_order() {
+        let mut c = TraceCollector::new(&TraceConfig::on());
+        c.begin_epoch(1);
+        let p0 = c.span(0, t(0.0), t(2.0), EventKind::Put, 8, 0.0, None);
+        c.note_write("s3/g0".into(), p0);
+        c.span(1, t(0.0), t(5.0), EventKind::Compute, 0, 0.0, None);
+        let p1 = c.span(1, t(5.0), t(6.0), EventKind::Put, 8, 0.0, None);
+        c.note_write("s3/g1".into(), p1);
+        c.span(0, t(2.0), t(6.5), EventKind::Get, 8, 0.0, c.writer_of("s3/g1"));
+
+        let paths = analyze(&c);
+        assert_eq!(paths.len(), 1);
+        let p = &paths[0];
+        assert_eq!(p.epoch, 1);
+        assert_eq!(p.bound_worker, 0);
+        let chain: Vec<(u64, EventKind)> = p.steps.iter().map(|s| (s.idx, s.kind)).collect();
+        assert_eq!(
+            chain,
+            vec![(3, EventKind::Get), (2, EventKind::Put), (1, EventKind::Compute)]
+        );
+        // Self-times: get contributes 6.5-6.0, put 1.0, compute 5.0 — and
+        // they sum to the full span.
+        assert!((p.steps[0].self_secs - 0.5).abs() < 1e-12);
+        assert!((p.steps[1].self_secs - 1.0).abs() < 1e-12);
+        assert!((p.steps[2].self_secs - 5.0).abs() < 1e-12);
+        assert!((p.span_secs() - 6.5).abs() < 1e-12);
+        assert_eq!(p.kind_secs[0], (EventKind::Compute, 5.0));
+        assert_eq!(describe(p, 8), "w0:get <- w1:put <- w1:compute");
+        assert_eq!(dominant(p, 2), "compute 5.00s · put 1.00s");
+    }
+
+    /// A dependency that was already visible (`dep.t1 <= t0`) must not be
+    /// followed; program order wins, skipping same-worker events that
+    /// finished after this op started (SPIRT's reset-clock fan-out).
+    #[test]
+    fn skips_satisfied_deps_and_overlapping_predecessors() {
+        let mut c = TraceCollector::new(&TraceConfig::on());
+        c.begin_epoch(1);
+        let w = c.span(1, t(0.0), t(1.0), EventKind::Put, 8, 0.0, None);
+        c.note_write("s3/k".into(), w);
+        c.span(0, t(0.0), t(4.0), EventKind::Compute, 0, 0.0, None); // parallel branch
+        c.span(0, t(0.0), t(2.0), EventKind::Compute, 0, 0.0, None); // feeds the get
+        c.span(0, t(2.0), t(3.0), EventKind::Get, 8, 0.0, c.writer_of("s3/k"));
+        // Terminal is the long parallel compute (t1 = 4.0), alone on its path
+        // branch; check the get's predecessor logic directly instead.
+        let e = *c.get(3).unwrap();
+        assert_eq!(
+            predecessor(&c, &e),
+            Some(2),
+            "satisfied dep ignored, overlapping prev (idx 1) skipped"
+        );
+    }
+
+    #[test]
+    fn one_path_per_epoch() {
+        let mut c = TraceCollector::new(&TraceConfig::on());
+        c.begin_epoch(1);
+        c.span(0, t(0.0), t(1.0), EventKind::Compute, 0, 0.0, None);
+        c.begin_epoch(2);
+        c.span(0, t(1.0), t(3.0), EventKind::Compute, 0, 0.0, None);
+        let paths = analyze(&c);
+        assert_eq!(paths.len(), 2);
+        assert_eq!(paths[0].epoch, 1);
+        assert_eq!(paths[1].epoch, 2);
+        // Epoch 2's path chains back into epoch 1's work via program order.
+        assert_eq!(paths[1].steps.len(), 2);
+        assert_eq!(paths[1].start_secs, 0.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! The structured trace event: one record per protocol op, stage span or
+//! fault, stamped with virtual time, payload size and attributed cost.
+
+use crate::sim::VTime;
+
+/// What a [`TraceEvent`] describes. Ordered so per-kind tables iterate in a
+/// stable, meaningful order (stage work first, protocol ops, then faults).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// Model + minibatch fetch at invocation start (`ClusterEnv::state_load`).
+    StateLoad,
+    /// Forward/backward pass (`ClusterEnv::compute_grad`).
+    Compute,
+    /// Local aggregation math applied to the model (`ClusterEnv::apply_update`).
+    ApplyUpdate,
+    /// Synchronization overhead charged outside a substrate call
+    /// (`ClusterEnv::charge_sync`: aggregation CPU, per-round constants).
+    SyncWait,
+    /// Explicit stage advance on a worker clock (`Timeline::advance`).
+    Advance,
+    /// Object-store upload (`Timeline::put`).
+    Put,
+    /// Object-store download (`Timeline::get`).
+    Get,
+    /// Batched object-store download (`Timeline::get_many`).
+    GetMany,
+    /// Redis write (`Timeline::redis_set`, or SPIRT's direct per-worker set).
+    RedisSet,
+    /// Redis read (`Timeline::redis_get`).
+    RedisGet,
+    /// In-database math executed inside a Redis instance (SPIRT's
+    /// `acc_in_db`/`scale_in_db`/`avg_update_in_db`).
+    InDb,
+    /// Queue publish (`Timeline::notify`, MLLess supervisor proceed).
+    Notify,
+    /// Queue wait (`Timeline::poll`, MLLess supervisor round wait).
+    Poll,
+    /// Full-cluster barrier (`Op::Barrier`).
+    Barrier,
+    /// Invocation crash + cold-start retry downtime (`recover_invocation`).
+    CrashCompute,
+    /// Crash at the synchronization point (`ClusterEnv::sync_crash`).
+    CrashSync,
+    /// MLLess supervisor crash + restart (`ClusterEnv::supervisor_crash`).
+    CrashSupervisor,
+    /// An update silently dropped by the fault plan (instant).
+    DropUpdate,
+    /// A poisoned gradient injected by the fault plan (instant).
+    Poison,
+    /// A straggler slowdown applied to this compute span (instant marker).
+    Straggler,
+}
+
+impl EventKind {
+    /// Every kind, in display order.
+    pub const ALL: [EventKind; 20] = [
+        EventKind::StateLoad,
+        EventKind::Compute,
+        EventKind::ApplyUpdate,
+        EventKind::SyncWait,
+        EventKind::Advance,
+        EventKind::Put,
+        EventKind::Get,
+        EventKind::GetMany,
+        EventKind::RedisSet,
+        EventKind::RedisGet,
+        EventKind::InDb,
+        EventKind::Notify,
+        EventKind::Poll,
+        EventKind::Barrier,
+        EventKind::CrashCompute,
+        EventKind::CrashSync,
+        EventKind::CrashSupervisor,
+        EventKind::DropUpdate,
+        EventKind::Poison,
+        EventKind::Straggler,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::StateLoad => "state-load",
+            EventKind::Compute => "compute",
+            EventKind::ApplyUpdate => "apply-update",
+            EventKind::SyncWait => "sync-wait",
+            EventKind::Advance => "advance",
+            EventKind::Put => "put",
+            EventKind::Get => "get",
+            EventKind::GetMany => "get-many",
+            EventKind::RedisSet => "redis-set",
+            EventKind::RedisGet => "redis-get",
+            EventKind::InDb => "in-db",
+            EventKind::Notify => "notify",
+            EventKind::Poll => "poll",
+            EventKind::Barrier => "barrier",
+            EventKind::CrashCompute => "crash-compute",
+            EventKind::CrashSync => "crash-sync",
+            EventKind::CrashSupervisor => "crash-supervisor",
+            EventKind::DropUpdate => "drop-update",
+            EventKind::Poison => "poison",
+            EventKind::Straggler => "straggler",
+        }
+    }
+
+    /// Chrome trace-event category (one lane colour per group in Perfetto).
+    pub fn category(self) -> &'static str {
+        match self {
+            EventKind::StateLoad
+            | EventKind::Compute
+            | EventKind::ApplyUpdate
+            | EventKind::SyncWait
+            | EventKind::Advance => "stage",
+            EventKind::Put
+            | EventKind::Get
+            | EventKind::GetMany
+            | EventKind::RedisSet
+            | EventKind::RedisGet
+            | EventKind::InDb
+            | EventKind::Notify
+            | EventKind::Poll
+            | EventKind::Barrier => "proto",
+            EventKind::CrashCompute
+            | EventKind::CrashSync
+            | EventKind::CrashSupervisor
+            | EventKind::DropUpdate
+            | EventKind::Poison
+            | EventKind::Straggler => "fault",
+        }
+    }
+
+    /// Zero-duration markers rendered as Chrome instant events (`ph:"i"`).
+    pub fn is_instant(self) -> bool {
+        matches!(self, EventKind::DropUpdate | EventKind::Poison | EventKind::Straggler)
+    }
+
+    /// Communication / coordination ops — the population for the sweep's
+    /// p99 op-latency column (excludes local compute and fault downtime).
+    pub fn is_comm(self) -> bool {
+        matches!(
+            self,
+            EventKind::Put
+                | EventKind::Get
+                | EventKind::GetMany
+                | EventKind::RedisSet
+                | EventKind::RedisGet
+                | EventKind::InDb
+                | EventKind::Notify
+                | EventKind::Poll
+                | EventKind::Barrier
+        )
+    }
+}
+
+/// One traced span (or instant, when `t0 == t1`) on a worker's track.
+///
+/// `dep` is an explicit cross-worker happens-before edge (the event index of
+/// the write/notify this op observed); `prev` is the same-worker
+/// program-order predecessor. Both are collector event indices, stable for
+/// the life of the run (ring-buffer eviction only makes old indices
+/// unresolvable, it never renumbers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Worker track; `faults::SUPERVISOR` (`usize::MAX`) for the MLLess
+    /// supervisor's own timeline.
+    pub worker: usize,
+    pub t0: VTime,
+    pub t1: VTime,
+    pub kind: EventKind,
+    /// Payload bytes moved by this op (0 for waits and instants).
+    pub bytes: u64,
+    /// Ledger dollars attributed to this op (sampled around the substrate
+    /// call; 0 for ops that bill elsewhere — see DESIGN.md on residual cost).
+    pub cost: f64,
+    /// Protocol round (minibatch for SPIRT's compute phase) within the epoch.
+    pub round: u32,
+    /// 1-based epoch stamp (0 = before the first `begin_epoch`).
+    pub epoch: u32,
+    /// Cross-worker happens-before edge: index of the event this op observed.
+    pub dep: Option<u64>,
+    /// Same-worker program-order predecessor index.
+    pub prev: Option<u64>,
+}
+
+impl TraceEvent {
+    /// Span duration in seconds.
+    pub fn secs(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_kebab() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in EventKind::ALL {
+            assert!(seen.insert(k.name()), "duplicate name {}", k.name());
+            assert!(
+                k.name().chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "non-kebab name {}",
+                k.name()
+            );
+        }
+        assert_eq!(seen.len(), EventKind::ALL.len());
+    }
+
+    #[test]
+    fn instants_are_faults() {
+        for k in EventKind::ALL {
+            if k.is_instant() {
+                assert_eq!(k.category(), "fault");
+            }
+            if k.is_comm() {
+                assert_eq!(k.category(), "proto");
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Per-op-kind latency/cost summaries over a trace, built on
+//! [`metrics::Histogram`](crate::metrics::Histogram) (nearest-rank
+//! percentiles).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::Histogram;
+
+use super::event::{EventKind, TraceEvent};
+
+/// Latency percentiles and totals for one op kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindStats {
+    pub kind: EventKind,
+    pub count: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub total_secs: f64,
+    pub total_cost: f64,
+}
+
+/// Summarize span latency/cost per kind, in [`EventKind`] display order.
+/// Instant markers (zero-duration fault flags) are excluded.
+pub fn kind_stats<'a>(events: impl IntoIterator<Item = &'a TraceEvent>) -> Vec<KindStats> {
+    let mut lat: BTreeMap<EventKind, Histogram> = BTreeMap::new();
+    let mut cost: BTreeMap<EventKind, f64> = BTreeMap::new();
+    for e in events {
+        if e.kind.is_instant() {
+            continue;
+        }
+        lat.entry(e.kind).or_default().add(e.secs() * 1e3);
+        *cost.entry(e.kind).or_insert(0.0) += e.cost;
+    }
+    lat.into_iter()
+        .map(|(kind, h)| KindStats {
+            kind,
+            count: h.len() as u64,
+            p50_ms: h.percentile(50.0),
+            p95_ms: h.percentile(95.0),
+            p99_ms: h.percentile(99.0),
+            max_ms: h.max(),
+            total_secs: h.total() / 1e3,
+            total_cost: cost[&kind],
+        })
+        .collect()
+}
+
+/// p99 latency (ms) over communication/coordination ops only — the number
+/// the scale sweep records per point when tracing is opted in.
+pub fn p99_comm_ms<'a>(events: impl IntoIterator<Item = &'a TraceEvent>) -> Option<f64> {
+    let mut h = Histogram::new();
+    for e in events {
+        if e.kind.is_comm() {
+            h.add(e.secs() * 1e3);
+        }
+    }
+    if h.is_empty() {
+        None
+    } else {
+        Some(h.percentile(99.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::VTime;
+    use crate::trace::{TraceCollector, TraceConfig};
+
+    fn collector_with_puts(n: usize) -> TraceCollector {
+        let mut c = TraceCollector::new(&TraceConfig::on());
+        for i in 1..=n {
+            // Latencies 1ms, 2ms, …, n ms.
+            let t0 = VTime::from_secs(i as f64);
+            c.span(0, t0, t0 + i as f64 * 1e-3, EventKind::Put, 8, 0.01, None);
+        }
+        c
+    }
+
+    #[test]
+    fn nearest_rank_percentiles_per_kind() {
+        let c = collector_with_puts(100);
+        let stats = kind_stats(c.snapshot().iter());
+        assert_eq!(stats.len(), 1);
+        let s = &stats[0];
+        assert_eq!(s.kind, EventKind::Put);
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 50.0).abs() < 1e-9);
+        assert!((s.p95_ms - 95.0).abs() < 1e-9);
+        assert!((s.p99_ms - 99.0).abs() < 1e-9);
+        assert!((s.max_ms - 100.0).abs() < 1e-9);
+        assert!((s.total_secs - 5.050).abs() < 1e-9);
+        assert!((s.total_cost - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_p99_ignores_compute_and_instants() {
+        let mut c = collector_with_puts(10);
+        c.span(1, VTime::ZERO, VTime::from_secs(100.0), EventKind::Compute, 0, 0.0, None);
+        c.instant(1, VTime::from_secs(1.0), EventKind::Poison);
+        assert!((p99_comm_ms(c.snapshot().iter()).unwrap() - 10.0).abs() < 1e-9);
+        let empty = TraceCollector::new(&TraceConfig::on());
+        assert_eq!(p99_comm_ms(empty.snapshot().iter()), None);
+    }
+}

@@ -1,0 +1,29 @@
+//! Protocol-level tracing: a structured, deterministic event log over the
+//! simulated protocol, plus the analyses built on it.
+//!
+//! Every protocol op flowing through `coordinator::protocol::Timeline`
+//! (put/get/redis ops/notify/poll/advance), every stage span and fault event
+//! in `ClusterEnv`, and the cost each op charged to `metrics::Ledger` emits a
+//! [`TraceEvent`] into the run's [`TraceCollector`] — ring-buffered, and
+//! zero-cost when disabled via [`TraceConfig`] on `EnvConfig` (the default).
+//! The collector is purely observational: tracing on vs off is bit-identical
+//! in virtual time and cost (`rust/tests/determinism.rs`).
+//!
+//! Analyses:
+//! - [`chrome`] — Chrome trace-event JSON for Perfetto / `chrome://tracing`,
+//!   one track per worker, faults as instants, byte-deterministic.
+//! - [`critical_path`] — walks happens-before edges (put→get visibility,
+//!   notify→poll, barriers) plus same-worker program order to name the
+//!   worker/op chain that bounds each epoch.
+//! - [`histogram`] — per-op-kind latency/cost percentiles (p50/p95/p99) on
+//!   `metrics::Histogram`; feeds `docs/trace.md` and the scale sweep's
+//!   optional p99 column.
+
+pub mod chrome;
+pub mod collector;
+pub mod critical_path;
+pub mod event;
+pub mod histogram;
+
+pub use collector::{TraceCollector, TraceConfig, DEFAULT_CAPACITY};
+pub use event::{EventKind, TraceEvent};

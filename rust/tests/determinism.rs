@@ -12,21 +12,24 @@ use slsgpu::cloud::FrameworkKind;
 use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
 use slsgpu::faults::{FaultPlan, PoisonMode};
 use slsgpu::tensor::AggregationRule;
+use slsgpu::trace::TraceConfig;
 use slsgpu::train::{run_session, SessionConfig, SessionReport};
 
 const EPOCHS: usize = 3;
 
-fn session_with(
+fn session_traced(
     fw: FrameworkKind,
     plan: &FaultPlan,
     agg: AggregationRule,
     sync: SyncMode,
+    trace: TraceConfig,
 ) -> SessionReport {
     let cfg = EnvConfig::virtual_paper(fw, "mobilenet", 4)
         .unwrap()
         .with_faults(plan.clone())
         .with_aggregation(agg)
-        .with_sync(sync);
+        .with_sync(sync)
+        .with_trace(trace);
     let mut env = ClusterEnv::new(cfg).unwrap();
     let mut strategy = strategy_for(fw);
     let session_cfg = SessionConfig {
@@ -36,6 +39,15 @@ fn session_with(
         evaluate: false,
     };
     run_session(&mut env, strategy.as_mut(), &session_cfg).unwrap()
+}
+
+fn session_with(
+    fw: FrameworkKind,
+    plan: &FaultPlan,
+    agg: AggregationRule,
+    sync: SyncMode,
+) -> SessionReport {
+    session_traced(fw, plan, agg, sync, TraceConfig::disabled())
 }
 
 fn session(fw: FrameworkKind, plan: &FaultPlan, agg: AggregationRule) -> SessionReport {
@@ -114,6 +126,23 @@ fn async_faulty_sessions_are_bit_identical() {
         let a = session_with(fw, &plan, AggregationRule::ClippedMean { ratio: 1.0 }, mode);
         let b = session_with(fw, &plan, AggregationRule::ClippedMean { ratio: 1.0 }, mode);
         assert_bit_identical(&a, &b, &format!("{} async+faults", fw.name()));
+    }
+}
+
+#[test]
+fn tracing_on_is_bit_identical_to_tracing_off() {
+    // The trace layer is purely observational: enabling it must not move a
+    // single clock or ledger bit, even under the busy fault plan and the
+    // async quorum (where any perturbation of RNG draws or event order
+    // would cascade into different timelines).
+    let plan = busy_plan();
+    for mode in [SyncMode::Bsp, SyncMode::Async { staleness: 2 }] {
+        for fw in FrameworkKind::ALL {
+            let agg = AggregationRule::ClippedMean { ratio: 1.0 };
+            let off = session_traced(fw, &plan, agg, mode, TraceConfig::disabled());
+            let on = session_traced(fw, &plan, agg, mode, TraceConfig::on());
+            assert_bit_identical(&off, &on, &format!("{} traced {}", fw.name(), mode.label()));
+        }
     }
 }
 

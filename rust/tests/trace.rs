@@ -1,0 +1,138 @@
+//! Trace-layer acceptance tests.
+//!
+//! * Chrome export determinism: serializing the same traced runs twice must
+//!   produce bit-identical JSON, and the traced scale sweep must be
+//!   invariant across `--threads` values.
+//! * Hand-checked critical path: a tiny 2-worker, 1-round AllReduce epoch
+//!   has a fully predictable gating chain — the analyzer must walk exactly
+//!   that chain, not program order.
+//! * Opt-in guard: tracing stays disabled by default on every config type
+//!   an exp driver consumes.
+
+use slsgpu::cloud::FrameworkKind;
+use slsgpu::coordinator::EnvConfig;
+use slsgpu::exp::{scale_sweep, trace as exp_trace};
+use slsgpu::report::suite::SuiteConfig;
+use slsgpu::trace::{EventKind, TraceConfig};
+
+fn small_cfg() -> exp_trace::TraceRunConfig {
+    exp_trace::TraceRunConfig {
+        batches_per_epoch: 4,
+        epochs: 2,
+        ..exp_trace::TraceRunConfig::default()
+    }
+}
+
+#[test]
+fn chrome_export_is_bit_identical_across_runs() {
+    let a = exp_trace::run(&small_cfg()).unwrap();
+    let b = exp_trace::run(&small_cfg()).unwrap();
+    let ja = exp_trace::chrome_export(&a);
+    let jb = exp_trace::chrome_export(&b);
+    assert_eq!(ja, jb, "chrome JSON must be byte-stable across runs");
+    assert!(ja.contains("\"traceEvents\""));
+    assert!(ja.ends_with('\n'));
+    // Every architecture contributes a named process and a worker track.
+    for fw in FrameworkKind::ALL {
+        assert!(ja.contains(fw.name()), "missing process for {}", fw.name());
+    }
+    assert!(ja.contains("worker 0") && ja.contains("supervisor"), "{}", &ja[..400]);
+    // The summary and CSV renderings are deterministic too.
+    assert_eq!(
+        exp_trace::render(&a, &small_cfg()),
+        exp_trace::render(&b, &small_cfg())
+    );
+    assert_eq!(exp_trace::render_csv(&a), exp_trace::render_csv(&b));
+}
+
+#[test]
+fn traced_sweep_is_invariant_across_thread_counts() {
+    let cfg = |threads| scale_sweep::SweepConfig {
+        worker_counts: vec![4],
+        batches_per_epoch: 4,
+        threads,
+        trace: true,
+        ..scale_sweep::SweepConfig::default()
+    };
+    let serial = scale_sweep::run(&cfg(1)).unwrap();
+    let parallel = scale_sweep::run(&cfg(4)).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.framework, b.framework);
+        let (pa, pb) = (a.p99_op_ms.unwrap(), b.p99_op_ms.unwrap());
+        assert_eq!(
+            pa.to_bits(),
+            pb.to_bits(),
+            "{} W={}: p99 must not depend on thread count",
+            a.framework.name(),
+            a.workers
+        );
+        assert!(pa > 0.0);
+    }
+}
+
+/// 2 workers, 1 batch, 1 epoch of AllReduce: the epoch is bound by the
+/// round's fixed op sequence — a final sync-overhead charge, behind the
+/// model update, behind the aggregate fetch, behind the master's
+/// aggregate-put / local-aggregation / bulk-fetch, behind a gradient
+/// upload fed by its compute and state load. Asserted step by step.
+#[test]
+fn two_worker_allreduce_critical_path_by_hand() {
+    let cfg = exp_trace::TraceRunConfig {
+        workers: 2,
+        batches_per_epoch: 1,
+        epochs: 1,
+        ..exp_trace::TraceRunConfig::default()
+    };
+    let traces = exp_trace::run_for(&cfg, &[FrameworkKind::AllReduce]).unwrap();
+    let t = &traces[0];
+    assert_eq!(t.paths.len(), 1);
+    let p = &t.paths[0];
+    assert_eq!(p.epoch, 1);
+
+    let kinds: Vec<EventKind> = p.steps.iter().map(|s| s.kind).collect();
+    assert_eq!(
+        kinds,
+        vec![
+            EventKind::SyncWait,
+            EventKind::ApplyUpdate,
+            EventKind::Get,
+            EventKind::Put,
+            EventKind::Advance,
+            EventKind::GetMany,
+            EventKind::Put,
+            EventKind::Compute,
+            EventKind::StateLoad,
+        ],
+        "chain: {}",
+        slsgpu::trace::critical_path::describe(p, 16)
+    );
+    // Steps 3..6 are the master's serialized aggregation (the Fig. 2
+    // bottleneck): aggregate put, local aggregation, bulk fetch — all on
+    // worker 0. The upload that gated the bulk fetch and its compute chain
+    // sit on a single worker too.
+    assert!(p.steps[3..6].iter().all(|s| s.worker == 0), "master ops on w0: {p:?}");
+    let uploader = p.steps[6].worker;
+    assert!(p.steps[6..].iter().all(|s| s.worker == uploader), "upload chain: {p:?}");
+    // Self-times tile the bound span exactly: every hop on the chain is
+    // contiguous with (or overlapped by) its predecessor.
+    let sum: f64 = p.steps.iter().map(|s| s.self_secs).sum();
+    assert!((sum - p.span_secs()).abs() < 1e-6, "sum {sum} vs span {}", p.span_secs());
+    // Compute dominates a 2-worker round.
+    assert_eq!(p.kind_secs[0].0, EventKind::Compute);
+}
+
+#[test]
+fn tracing_defaults_off_everywhere() {
+    assert_eq!(TraceConfig::default(), TraceConfig::disabled());
+    let ec = EnvConfig::virtual_paper(FrameworkKind::Spirt, "mobilenet", 4).unwrap();
+    assert!(!ec.trace.enabled, "EnvConfig::virtual_paper must not trace by default");
+    assert!(
+        !scale_sweep::SweepConfig::default().trace,
+        "sweep tracing must be opt-in (--trace)"
+    );
+    assert!(
+        !SuiteConfig::default().sweep.trace,
+        "the docs suite's sweep must not trace (it would change docs/ output)"
+    );
+}
