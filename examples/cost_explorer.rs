@@ -43,6 +43,7 @@ fn epoch_cost(fw: FrameworkKind, profile: ModelProfile) -> anyhow::Result<f64> {
         agg: slsgpu::tensor::AggregationRule::Mean,
         sync: slsgpu::coordinator::SyncMode::Bsp,
         trace: slsgpu::trace::TraceConfig::disabled(),
+        store: slsgpu::cloud::StoreTierConfig::single(),
     };
     let mut env = ClusterEnv::new(cfg)?;
     strategy_for(fw).run_epoch(&mut env)?;

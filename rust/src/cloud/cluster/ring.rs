@@ -1,0 +1,226 @@
+//! Consistent-hash ring with virtual nodes — deterministic key→shard routing.
+//!
+//! Each shard owns `vnodes` points on a 64-bit ring; a key is routed to the
+//! shard owning the first point clockwise of the key's hash. Walking further
+//! clockwise yields the replica preference list (first `r` *distinct*
+//! shards). Virtual nodes smooth the load split, and — the property the
+//! cluster tier stands on — adding or removing one shard only remaps the
+//! keys whose arcs that shard's points cover, leaving every other key on
+//! its old shard.
+//!
+//! Hashing is FNV-1a over the raw bytes: no `RandomState`, no per-process
+//! seeds, so a (key, shard set, vnodes) triple routes identically on every
+//! run and every host — the determinism tests compare routes bit-for-bit.
+
+/// FNV-1a 64-bit. Stable across runs/platforms (unlike `std`'s hashers).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A consistent-hash ring over shard ids.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// Ring points sorted by hash: (point hash, shard id).
+    points: Vec<(u64, usize)>,
+    /// Shard ids currently on the ring (sorted, distinct).
+    shards: Vec<usize>,
+    vnodes: usize,
+}
+
+impl HashRing {
+    /// Ring over shards `0..shards`, each holding `vnodes` points.
+    pub fn new(shards: usize, vnodes: usize) -> HashRing {
+        assert!(shards > 0, "ring needs at least one shard");
+        assert!(vnodes > 0, "ring needs at least one vnode per shard");
+        let mut ring = HashRing { points: Vec::new(), shards: Vec::new(), vnodes };
+        for id in 0..shards {
+            ring.add_shard(id);
+        }
+        ring
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[usize] {
+        &self.shards
+    }
+
+    /// Hash of one virtual node (`shard`, `vnode` index).
+    fn point_hash(shard: usize, vnode: usize) -> u64 {
+        let mut buf = [0u8; 16];
+        buf[..8].copy_from_slice(&(shard as u64).to_le_bytes());
+        buf[8..].copy_from_slice(&(vnode as u64).to_le_bytes());
+        fnv1a(&buf)
+    }
+
+    /// Add `id`'s virtual nodes to the ring (no-op if already present).
+    pub fn add_shard(&mut self, id: usize) {
+        if self.shards.contains(&id) {
+            return;
+        }
+        self.shards.push(id);
+        self.shards.sort_unstable();
+        for v in 0..self.vnodes {
+            // Hash collisions between distinct points are theoretically
+            // possible; break the tie by shard id so the ring stays a
+            // deterministic total order.
+            self.points.push((Self::point_hash(id, v), id));
+        }
+        self.points.sort_unstable();
+    }
+
+    /// Remove `id`'s virtual nodes (keys on its arcs move to successors).
+    pub fn remove_shard(&mut self, id: usize) {
+        self.shards.retain(|&s| s != id);
+        self.points.retain(|&(_, s)| s != id);
+    }
+
+    /// First ring-point index at or clockwise of `key`'s hash (wrapping).
+    fn start_index(&self, key: &str) -> usize {
+        let h = fnv1a(key.as_bytes());
+        let i = self.points.partition_point(|&(ph, _)| ph < h);
+        if i == self.points.len() {
+            0
+        } else {
+            i
+        }
+    }
+
+    /// The shard owning `key`.
+    pub fn primary(&self, key: &str) -> usize {
+        self.points[self.start_index(key)].1
+    }
+
+    /// Replica preference list: the first `r` distinct shards clockwise of
+    /// `key` (primary first). Clamped to the number of shards on the ring.
+    pub fn shards_for(&self, key: &str, r: usize) -> Vec<usize> {
+        let want = r.clamp(1, self.shards.len());
+        let start = self.start_index(key);
+        let mut out = Vec::with_capacity(want);
+        for k in 0..self.points.len() {
+            let shard = self.points[(start + k) % self.points.len()].1;
+            if !out.contains(&shard) {
+                out.push(shard);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("u/e{}/r{}/w{}", i % 7, i % 24, i)).collect()
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        let ring = HashRing::new(4, 64);
+        for k in keys(200) {
+            let p = ring.primary(&k);
+            assert!(p < 4);
+            assert_eq!(p, HashRing::new(4, 64).primary(&k), "route must be stable");
+            assert_eq!(ring.shards_for(&k, 2)[0], p, "preference list starts at primary");
+        }
+    }
+
+    #[test]
+    fn replica_lists_are_distinct_and_clamped() {
+        let ring = HashRing::new(3, 32);
+        for k in keys(50) {
+            let r = ring.shards_for(&k, 2);
+            assert_eq!(r.len(), 2);
+            assert_ne!(r[0], r[1]);
+            // Asking for more replicas than shards clamps to all shards.
+            let all = ring.shards_for(&k, 10);
+            assert_eq!(all.len(), 3);
+        }
+        // A 1-shard ring routes everything to shard 0.
+        let one = HashRing::new(1, 64);
+        for k in keys(20) {
+            assert_eq!(one.shards_for(&k, 1), vec![0]);
+        }
+    }
+
+    #[test]
+    fn vnodes_spread_load() {
+        // With 64 vnodes the biggest shard should not dwarf the smallest
+        // (a single-point ring routinely gives one shard 60%+).
+        let ring = HashRing::new(4, 64);
+        let mut counts = [0usize; 4];
+        for k in keys(4000) {
+            counts[ring.primary(&k)] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(*min > 0);
+        assert!(*max < 3 * *min, "vnode split too lopsided: {counts:?}");
+    }
+
+    #[test]
+    fn adding_a_shard_only_steals_keys_for_itself() {
+        // The consistent-hashing contract: going 4 -> 5 shards, a key either
+        // keeps its old primary or moves to the new shard — never between
+        // old shards.
+        let before = HashRing::new(4, 64);
+        let mut after = before.clone();
+        after.add_shard(4);
+        let mut moved = 0usize;
+        let ks = keys(2000);
+        for k in &ks {
+            let (b, a) = (before.primary(k), after.primary(k));
+            if a != b {
+                assert_eq!(a, 4, "{k} moved {b} -> {a}, not to the new shard");
+                moved += 1;
+            }
+        }
+        // Roughly 1/5 of keys should move (band wide enough to be stable).
+        assert!(moved > ks.len() / 10 && moved < ks.len() / 2, "moved {moved}");
+    }
+
+    #[test]
+    fn removing_a_shard_only_moves_its_own_keys() {
+        let before = HashRing::new(4, 64);
+        let mut after = before.clone();
+        after.remove_shard(2);
+        assert_eq!(after.num_shards(), 3);
+        for k in keys(2000) {
+            let b = before.primary(&k);
+            if b != 2 {
+                assert_eq!(after.primary(&k), b, "{k} must stay put");
+            } else {
+                assert_ne!(after.primary(&k), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn add_is_idempotent_and_remove_roundtrips() {
+        let mut ring = HashRing::new(3, 16);
+        let routes: Vec<usize> = keys(100).iter().map(|k| ring.primary(k)).collect();
+        ring.add_shard(1); // already present: no-op
+        ring.remove_shard(1);
+        ring.add_shard(1); // back: identical points, identical routes
+        let again: Vec<usize> = keys(100).iter().map(|k| ring.primary(k)).collect();
+        assert_eq!(routes, again);
+    }
+}

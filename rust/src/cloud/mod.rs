@@ -10,6 +10,7 @@
 //! table and why each one preserves the paper's behaviour.
 
 pub mod calibration;
+pub mod cluster;
 pub mod ec2;
 pub mod lambda;
 pub mod object_store;
@@ -20,6 +21,7 @@ pub mod redis;
 pub mod step_functions;
 
 pub use calibration::{FrameworkKind, ModelProfile};
+pub use cluster::{RedisCluster, ShardReport, ShardStats, StoreTierConfig};
 pub use ec2::GpuFleet;
 pub use lambda::LambdaRuntime;
 pub use object_store::ObjectStore;

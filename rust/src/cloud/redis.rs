@@ -42,6 +42,10 @@ pub struct Redis {
     latency: f64,
     net_bw: f64,
     indb_bw: f64,
+    /// Seconds requests spent queued behind other clients of this instance
+    /// (command loop + script engine). Pure bookkeeping — never fed back
+    /// into any timeline — surfaced per shard by `cloud::cluster`.
+    queue_wait: f64,
 }
 
 impl std::fmt::Debug for Redis {
@@ -69,6 +73,7 @@ impl Redis {
             latency: REDIS_LATENCY,
             net_bw: REDIS_BW,
             indb_bw: REDIS_INDB_BW,
+            queue_wait: 0.0,
         }
     }
 
@@ -81,14 +86,20 @@ impl Redis {
     /// loop.
     pub fn set(&mut self, now: VTime, key: &str, slab: Slab, comm: &mut CommStats) -> VTime {
         let bytes = slab.nbytes();
-        let done = self.cmd.serve(now + self.latency, bytes as f64 / self.net_bw).end;
+        let arrival = now + self.latency;
+        let served = self.cmd.serve(arrival, bytes as f64 / self.net_bw);
+        self.queue_wait += served.queueing_delay(arrival);
+        let done = served.end;
         self.store.insert(key.to_string(), (slab, done));
         comm.record(CommKind::Put, bytes);
         comm.comm_time += done - now;
         done
     }
 
-    /// GET: transfer the slab out (waits for visibility).
+    /// GET: transfer the slab out (waits for visibility). The wait for the
+    /// producer's write to land is a stall on the *writer*, not transfer
+    /// overhead: it accrues to `CommStats::visibility_wait`, and only the
+    /// remaining span (latency + wire time + queueing) to `comm_time`.
     pub fn get(&mut self, now: VTime, key: &str, comm: &mut CommStats) -> Result<(VTime, Slab)> {
         let (slab, visible) = self
             .store
@@ -96,9 +107,13 @@ impl Redis {
             .ok_or_else(|| anyhow!("redis[{}]: missing key {key}", self.name))?
             .clone();
         let start = now.max(visible) + self.latency;
-        let done = self.cmd.serve(start, slab.nbytes() as f64 / self.net_bw).end;
+        let served = self.cmd.serve(start, slab.nbytes() as f64 / self.net_bw);
+        self.queue_wait += served.queueing_delay(start);
+        let done = served.end;
         comm.record(CommKind::Get, slab.nbytes());
-        comm.comm_time += done - now;
+        let wait = (visible - now).max(0.0);
+        comm.visibility_wait += wait;
+        comm.comm_time += (done - now) - wait;
         Ok((done, slab))
     }
 
@@ -112,9 +127,13 @@ impl Redis {
     ) -> Result<(VTime, Slab)> {
         let (slab, visible) = self.peek(key)?;
         let start = now.max(visible) + self.latency;
-        let done = self.cmd.serve(start, slab.nbytes() as f64 / CLIENT_TENSOR_BW).end;
+        let served = self.cmd.serve(start, slab.nbytes() as f64 / CLIENT_TENSOR_BW);
+        self.queue_wait += served.queueing_delay(start);
+        let done = served.end;
         comm.record(CommKind::Get, slab.nbytes());
-        comm.comm_time += done - now;
+        let wait = (visible - now).max(0.0);
+        comm.visibility_wait += wait;
+        comm.comm_time += (done - now) - wait;
         Ok((done, slab))
     }
 
@@ -127,10 +146,35 @@ impl Redis {
         comm: &mut CommStats,
     ) -> VTime {
         let bytes = slab.nbytes();
-        let done = self.cmd.serve(now + self.latency, bytes as f64 / CLIENT_TENSOR_BW).end;
+        let arrival = now + self.latency;
+        let served = self.cmd.serve(arrival, bytes as f64 / CLIENT_TENSOR_BW);
+        self.queue_wait += served.queueing_delay(arrival);
+        let done = served.end;
         self.store.insert(key.to_string(), (slab, done));
         comm.record(CommKind::Put, bytes);
         comm.comm_time += done - now;
+        done
+    }
+
+    /// Replica write: the primary pushes the payload to this instance after
+    /// its own ack at `after`. The client is *not* blocked on replication
+    /// (asynchronous, Redis-style), so no `comm_time` accrues — only this
+    /// instance's command loop is occupied and the Put bytes are counted.
+    /// Returns when the replica copy becomes visible.
+    pub fn replicate_set(
+        &mut self,
+        after: VTime,
+        key: &str,
+        slab: Slab,
+        comm: &mut CommStats,
+    ) -> VTime {
+        let bytes = slab.nbytes();
+        let arrival = after + self.latency;
+        let served = self.cmd.serve(arrival, bytes as f64 / self.net_bw);
+        self.queue_wait += served.queueing_delay(arrival);
+        let done = served.end;
+        self.store.insert(key.to_string(), (slab, done));
+        comm.record(CommKind::Put, bytes);
         done
     }
 
@@ -165,7 +209,7 @@ impl Redis {
         let out = self.math.acc(&acc, &g, w)?;
         let bytes = 3 * out.nbytes();
         let start = now.max(v1).max(v2) + self.latency;
-        let done = self.script_engine.serve(start, bytes as f64 / self.indb_bw).end;
+        let done = self.serve_script(start, bytes as f64 / self.indb_bw);
         self.store.insert(dst.to_string(), (out, done));
         comm.record(CommKind::InDb, bytes);
         Ok(done)
@@ -182,10 +226,10 @@ impl Redis {
         comm: &mut CommStats,
     ) -> Result<VTime> {
         let (src_slab, visible) = self.peek(src)?;
-        let out = self.math.acc(&src_slab.zeros_like(), &src_slab, w)?;
+        let out = self.math.scale(&src_slab, w)?;
         let bytes = 2 * out.nbytes();
         let start = now.max(visible) + self.latency;
-        let done = self.script_engine.serve(start, bytes as f64 / self.indb_bw).end;
+        let done = self.serve_script(start, bytes as f64 / self.indb_bw);
         self.store.insert(dst.to_string(), (out, done));
         comm.record(CommKind::InDb, bytes);
         Ok(done)
@@ -208,13 +252,17 @@ impl Redis {
         let start = now.max(v1).max(v2);
         // TorchScript SGD is slower than a scripted buffer add (§4.2: 4.8 s
         // for a 46.8 MB model).
-        let done = self
-            .script_engine
-            .serve(start + self.latency, bytes as f64 / INDB_UPDATE_BW)
-            .end;
+        let done = self.serve_script(start + self.latency, bytes as f64 / INDB_UPDATE_BW);
         self.store.insert(theta_key.to_string(), (out, done));
         comm.record(CommKind::InDb, bytes);
         Ok(done)
+    }
+
+    /// Run a scripted op on the background engine, tracking queueing delay.
+    fn serve_script(&mut self, arrival: VTime, service: f64) -> VTime {
+        let served = self.script_engine.serve(arrival, service);
+        self.queue_wait += served.queueing_delay(arrival);
+        served.end
     }
 
     /// Value + visibility without timeline effects (internal).
@@ -238,14 +286,34 @@ impl Redis {
         self.store.clear();
         self.cmd.reset();
         self.script_engine.reset();
+        self.queue_wait = 0.0;
     }
 
-    /// Bill the hosting EC2 instance for the experiment duration (the paper
-    /// excludes this; we track it under `CostKind::Ec2Redis`).
-    pub fn bill_hosting(&self, duration: f64, ledger: &mut Ledger) {
+    /// Seconds requests spent queued behind other clients of this instance.
+    pub fn queue_wait(&self) -> f64 {
+        self.queue_wait
+    }
+
+    /// Requests handled by the command loop + script engine.
+    pub fn requests(&self) -> u64 {
+        self.cmd.requests() + self.script_engine.requests()
+    }
+
+    /// Total service time across the command loop + script engine
+    /// (utilization numerator over an experiment's duration).
+    pub fn busy_time(&self) -> f64 {
+        self.cmd.busy_time() + self.script_engine.busy_time()
+    }
+
+    /// Bill the hosting EC2 fleet for the experiment duration (the paper
+    /// excludes this; we track it under `CostKind::Ec2Redis`). `instances`
+    /// is how many instances actually ran — SPIRT hosts one per worker and
+    /// the sharded store tier one per shard, not the single instance this
+    /// method used to hard-code.
+    pub fn bill_hosting(&self, duration: f64, instances: usize, ledger: &mut Ledger) {
         ledger.charge(
             crate::metrics::CostKind::Ec2Redis,
-            super::pricing::redis_host_cost(duration, 1),
+            super::pricing::redis_host_cost(duration, instances),
         );
     }
 }
@@ -392,5 +460,78 @@ mod tests {
         let mut c = CommStats::new();
         assert!(r.get(VTime::ZERO, "x", &mut c).is_err());
         assert!(r.acc_in_db(VTime::ZERO, "d", "a", "b", 1.0, &mut c).is_err());
+    }
+
+    #[test]
+    fn visibility_wait_is_not_comm_time() {
+        // A reader arriving long before the producer's write lands used to
+        // book the whole stall as comm_time; the stall now accrues to
+        // visibility_wait and comm_time keeps only the transfer span.
+        let mut r = Redis::new("w0");
+        let mut c = CommStats::new();
+        let visible = r.set(VTime::ZERO, "g", Slab::virtual_of(30_000_000), &mut c);
+        assert!(visible.secs() > 0.3, "120 MB at 300 MB/s");
+        let put_time = c.comm_time;
+
+        let (done, _) = r.get(VTime::ZERO, "g", &mut c).unwrap();
+        let get_span = done.secs(); // reader blocked from t=0 to done
+        let wait = c.visibility_wait;
+        assert!((wait - visible.secs()).abs() < 1e-9, "stall == producer visibility");
+        let get_comm = c.comm_time - put_time;
+        assert!((get_comm + wait - get_span).abs() < 1e-9, "split tiles the span");
+        assert!(get_comm < get_span, "transfer share strictly under the stall-y span");
+
+        // A reader arriving after visibility pays no visibility wait.
+        let (_, _) = r.get(VTime::from_secs(100.0), "g", &mut c).unwrap();
+        assert_eq!(c.visibility_wait, wait, "late reader adds no stall");
+    }
+
+    #[test]
+    fn visibility_split_leaves_timeline_untouched() {
+        // The accounting split is bookkeeping only: completion times must be
+        // what they always were (now.max(visible) + latency + wire time).
+        let mut r = Redis::new("w0");
+        let mut c = CommStats::new();
+        let visible = r.set(VTime::ZERO, "g", Slab::virtual_of(1_000_000), &mut c);
+        let (done, _) = r.get(VTime::ZERO, "g", &mut c).unwrap();
+        let expected = visible.secs() + REDIS_LATENCY + 4_000_000.0 / REDIS_BW;
+        assert!((done.secs() - expected).abs() < 1e-9, "{done:?} vs {expected}");
+    }
+
+    #[test]
+    fn replicate_set_occupies_replica_without_blocking_client() {
+        let mut r = Redis::new("replica");
+        let mut c = CommStats::new();
+        let before = c.comm_time;
+        let vis = r.replicate_set(VTime::from_secs(1.0), "k", Slab::virtual_of(1_000_000), &mut c);
+        assert!(vis.secs() > 1.0, "replica copy lands after the primary ack");
+        assert_eq!(c.comm_time, before, "async replication never blocks the client");
+        assert_eq!(c.ops(CommKind::Put), 1, "replica write is a counted Put");
+        assert_eq!(r.visible_at("k"), Some(vis));
+    }
+
+    #[test]
+    fn queue_wait_tracks_contention() {
+        let mut r = Redis::new("w0");
+        let mut c = CommStats::new();
+        let big = Slab::virtual_of(30_000_000); // 0.4 s of service each
+        r.set(VTime::ZERO, "a", big.clone(), &mut c);
+        assert_eq!(r.queue_wait(), 0.0, "uncontended request never queues");
+        r.set(VTime::ZERO, "b", big, &mut c);
+        assert!(r.queue_wait() > 0.3, "second concurrent client queues");
+        assert_eq!(r.requests(), 2);
+        assert!(r.busy_time() > 0.7);
+    }
+
+    #[test]
+    fn hosting_bill_scales_with_instances() {
+        let mut one = Ledger::new();
+        let mut four = Ledger::new();
+        let r = Redis::new("w0");
+        r.bill_hosting(3600.0, 1, &mut one);
+        r.bill_hosting(3600.0, 4, &mut four);
+        let kind = crate::metrics::CostKind::Ec2Redis;
+        assert!((four.get(kind) - 4.0 * one.get(kind)).abs() < 1e-12);
+        assert_eq!(one.total_paper(), 0.0, "hosting stays outside the paper total");
     }
 }

@@ -11,8 +11,10 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use crate::cloud::calibration::{self, FrameworkKind, ModelProfile};
+use crate::cloud::cluster::SHARD_RESTART_SECS;
 use crate::cloud::{
-    GpuFleet, LambdaRuntime, MessageQueue, ObjectStore, recovery, Redis, StepFunctions,
+    GpuFleet, LambdaRuntime, MessageQueue, ObjectStore, recovery, Redis, RedisCluster,
+    StepFunctions, StoreTierConfig,
 };
 use crate::data::{Dataset, SyntheticCifar, IMG_ELEMS};
 use crate::faults::{FaultPlan, FaultSchedule};
@@ -76,6 +78,9 @@ pub struct EnvConfig {
     pub sync: SyncMode,
     /// Protocol-event tracing (disabled by default; purely observational).
     pub trace: TraceConfig,
+    /// Shared store tier provisioning (shards/replication/eviction). The
+    /// default single-shard tier reproduces the pre-cluster store exactly.
+    pub store: StoreTierConfig,
 }
 
 impl EnvConfig {
@@ -100,6 +105,7 @@ impl EnvConfig {
             agg: AggregationRule::Mean,
             sync: SyncMode::Bsp,
             trace: TraceConfig::disabled(),
+            store: StoreTierConfig::single(),
         })
     }
 
@@ -124,6 +130,12 @@ impl EnvConfig {
     /// Select the update-aggregation rule (builder style).
     pub fn with_aggregation(mut self, agg: AggregationRule) -> EnvConfig {
         self.agg = agg;
+        self
+    }
+
+    /// Provision the shared store tier (builder style).
+    pub fn with_store(mut self, store: StoreTierConfig) -> EnvConfig {
+        self.store = store;
         self
     }
 
@@ -160,6 +172,7 @@ impl EnvConfig {
             agg: AggregationRule::Mean,
             sync: SyncMode::Bsp,
             trace: TraceConfig::disabled(),
+            store: StoreTierConfig::single(),
         })
     }
 }
@@ -202,8 +215,10 @@ pub struct ClusterEnv {
     pub stepfn: StepFunctions,
     /// Per-worker Redis instances (SPIRT's P2P databases).
     pub worker_redis: Vec<Redis>,
-    /// Shared Redis (MLLess update store, LambdaML model store).
-    pub shared_redis: Redis,
+    /// Shared store tier (MLLess update store, LambdaML model store): a
+    /// consistent-hash cluster of Redis shards. `StoreTierConfig::single()`
+    /// makes it behave exactly like the one shared instance it replaced.
+    pub shared_redis: RedisCluster,
     pub fleet: GpuFleet,
 
     // Measurement plane.
@@ -267,6 +282,18 @@ impl ClusterEnv {
             })
             .collect();
 
+        let shared_redis = RedisCluster::new("shared", &cfg.store)?;
+        if let Some(max) = cfg.fault_plan.events.iter().filter_map(|ev| {
+            matches!(ev.kind, crate::faults::FaultKind::ShardCrash).then_some(ev.worker)
+        }).max() {
+            if max >= shared_redis.num_shards() {
+                bail!(
+                    "fault plan crashes shard {max} but the store tier has {} shards",
+                    shared_redis.num_shards()
+                );
+            }
+        }
+
         Ok(ClusterEnv {
             framework: cfg.framework,
             workers,
@@ -286,7 +313,7 @@ impl ClusterEnv {
             queues: MessageQueue::new(),
             stepfn: StepFunctions::new(),
             worker_redis,
-            shared_redis: Redis::new("shared"),
+            shared_redis,
             fleet: GpuFleet::new(cfg.workers),
             ledger: Ledger::new(),
             comm: CommStats::new(),
@@ -315,11 +342,34 @@ impl ClusterEnv {
     }
 
     /// Begin a new epoch: reshuffle shards, bump counter, re-arm the fault
-    /// engine's round counters.
+    /// engine's round counters, and fire any store-shard crashes planned
+    /// for this epoch (the shard goes down at the cluster-wide clock, loses
+    /// its contents, and restarts [`SHARD_RESTART_SECS`] later).
     pub fn begin_epoch(&mut self) {
         self.epoch += 1;
         self.trace.begin_epoch(self.epoch);
         self.faults.begin_epoch(self.epoch);
+        let now = self.max_clock();
+        while let Some(shard) = self.faults.crash_shard(now) {
+            // Invalid shard ids are rejected at construction; ignore
+            // defensively rather than panic mid-run.
+            if self.shared_redis.crash_shard(shard, now).is_ok() {
+                self.recovery.shard_restarts += 1;
+                self.recovery.downtime_secs += SHARD_RESTART_SECS;
+                if self.trace.enabled() {
+                    use crate::faults::SUPERVISOR;
+                    self.trace.span(
+                        SUPERVISOR,
+                        now,
+                        now + SHARD_RESTART_SECS,
+                        EventKind::ShardCrash,
+                        0,
+                        0.0,
+                        None,
+                    );
+                }
+            }
+        }
         let mut rng = self.rng.fork(0xE70C ^ self.epoch as u64);
         for w in &mut self.workers {
             rng.shuffle(&mut w.shard);
@@ -836,6 +886,27 @@ mod tests {
             ]
         );
         assert!(traced.trace.events().all(|e| e.epoch == 1 && e.worker == 0));
+    }
+
+    #[test]
+    fn shard_crash_fires_at_epoch_top_and_counts() {
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::MlLess, "mobilenet", 2)
+            .unwrap()
+            .with_store(StoreTierConfig::sharded(2, 2))
+            .with_faults(crate::faults::FaultPlan::none().shard_crash(1, 1));
+        let mut env = ClusterEnv::new(cfg).unwrap();
+        assert_eq!(env.shared_redis.num_shards(), 2);
+        env.begin_epoch();
+        assert_eq!(env.recovery.shard_restarts, 1);
+        assert!((env.recovery.downtime_secs - SHARD_RESTART_SECS).abs() < 1e-12);
+        env.begin_epoch();
+        assert_eq!(env.recovery.shard_restarts, 1, "one-shot");
+
+        // A plan crashing a shard the tier doesn't have is rejected up front.
+        let bad = EnvConfig::virtual_paper(FrameworkKind::MlLess, "mobilenet", 2)
+            .unwrap()
+            .with_faults(crate::faults::FaultPlan::none().shard_crash(3, 1));
+        assert!(ClusterEnv::new(bad).is_err());
     }
 
     #[test]

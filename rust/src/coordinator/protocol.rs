@@ -45,12 +45,19 @@ pub(crate) fn trace_store_key(store: StoreSel, key: &str) -> String {
     }
 }
 
-/// Trace namespace for Redis keys; `own` resolves [`RedisSel::Own`].
-pub(crate) fn trace_redis_key(sel: RedisSel, own: usize, key: &str) -> String {
+/// Trace namespace for Redis keys; `own` resolves [`RedisSel::Own`]. Keys
+/// on the shared tier carry their owning shard as a coordinate (routing is
+/// deterministic, so writer and reader derive the same name).
+pub(crate) fn trace_redis_key(
+    sel: RedisSel,
+    own: usize,
+    cluster: &crate::cloud::RedisCluster,
+    key: &str,
+) -> String {
     match sel {
         RedisSel::Own => format!("redis{own}/{key}"),
         RedisSel::Peer(j) => format!("redis{j}/{key}"),
-        RedisSel::Shared => format!("redis-shared/{key}"),
+        RedisSel::Shared => format!("redis-shared/s{}/{key}", cluster.primary_of(key)),
     }
 }
 
@@ -344,19 +351,25 @@ impl Timeline<'_> {
         let t0 = env.workers[self.w].clock;
         let traced = env.trace.enabled();
         let bytes = if traced { payload.nbytes() } else { 0 };
-        let r = match sel {
-            RedisSel::Own => &mut env.worker_redis[self.w],
-            RedisSel::Peer(j) => &mut env.worker_redis[j],
-            RedisSel::Shared => &mut env.shared_redis,
+        let done = match sel {
+            RedisSel::Own => env.worker_redis[self.w].set(t0, key, payload, &mut env.comm),
+            RedisSel::Peer(j) => env.worker_redis[j].set(t0, key, payload, &mut env.comm),
+            RedisSel::Shared => {
+                // A write rerouted around a down primary is a failover the
+                // recovery ledger should see (delta over the whole op).
+                let fo0 = env.shared_redis.total_failovers();
+                let done = env.shared_redis.set(t0, key, payload, &mut env.comm);
+                env.recovery.shard_failovers += env.shared_redis.total_failovers() - fo0;
+                done
+            }
         };
-        let done = r.set(t0, key, payload, &mut env.comm);
         env.stages.add(stage, done - t0);
         env.workers[self.w].clock = done;
         if traced {
             // Redis transfers bill via instance hours, not per request: no
             // ledger delta to sample here.
             let idx = env.trace.span(self.w, t0, done, EventKind::RedisSet, bytes, 0.0, None);
-            env.trace.note_write(trace_redis_key(sel, self.w, key), idx);
+            env.trace.note_write(trace_redis_key(sel, self.w, &env.shared_redis, key), idx);
         }
         done
     }
@@ -365,16 +378,22 @@ impl Timeline<'_> {
     pub fn redis_get(&mut self, sel: RedisSel, stage: Stage, key: &str) -> Result<Slab> {
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
-        let r = match sel {
-            RedisSel::Own => &mut env.worker_redis[self.w],
-            RedisSel::Peer(j) => &mut env.worker_redis[j],
-            RedisSel::Shared => &mut env.shared_redis,
+        let (done, slab) = match sel {
+            RedisSel::Own => env.worker_redis[self.w].get(t0, key, &mut env.comm)?,
+            RedisSel::Peer(j) => env.worker_redis[j].get(t0, key, &mut env.comm)?,
+            RedisSel::Shared => {
+                // Reads served by a replica while the primary restarts are
+                // failovers (delta over the whole op).
+                let fo0 = env.shared_redis.total_failovers();
+                let r = env.shared_redis.get(t0, key, &mut env.comm)?;
+                env.recovery.shard_failovers += env.shared_redis.total_failovers() - fo0;
+                r
+            }
         };
-        let (done, slab) = r.get(t0, key, &mut env.comm)?;
         env.stages.add(stage, done - t0);
         env.workers[self.w].clock = done;
         if env.trace.enabled() {
-            let dep = env.trace.writer_of(&trace_redis_key(sel, self.w, key));
+            let dep = env.trace.writer_of(&trace_redis_key(sel, self.w, &env.shared_redis, key));
             env.trace.span(self.w, t0, done, EventKind::RedisGet, slab.nbytes(), 0.0, dep);
         }
         Ok(slab)

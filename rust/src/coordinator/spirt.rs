@@ -182,7 +182,10 @@ impl Strategy for Spirt {
                 let idx = env.trace.span(w, t0, t, EventKind::InDb, 0, 0.0, prev_acc);
                 // Peers fetch the average P2P: register this as its writer
                 // so their `redis_get(Peer(w), ..)` deps resolve.
-                env.trace.note_write(trace_redis_key(RedisSel::Own, w, &avg_key), idx);
+                env.trace.note_write(
+                    trace_redis_key(RedisSel::Own, w, &env.shared_redis, &avg_key),
+                    idx,
+                );
             }
             env.stages.add(Stage::ComputeGradients, t - env.workers[w].clock);
             env.workers[w].clock = t;

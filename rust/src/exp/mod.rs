@@ -15,6 +15,7 @@
 pub mod fig2;
 pub mod fig3;
 pub mod scale_sweep;
+pub mod shard_sweep;
 pub mod spirt_indb;
 pub mod table1;
 pub mod table2;

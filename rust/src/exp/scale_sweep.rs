@@ -17,7 +17,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::cloud::FrameworkKind;
+use crate::cloud::{FrameworkKind, StoreTierConfig};
 use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
 use crate::report::{Align, Cell, Report, Table};
 use crate::util::{fmt_bytes, fmt_duration};
@@ -41,6 +41,9 @@ pub struct SweepConfig {
     /// Record protocol traces and report per-point p99 op latency
     /// (opt-in: tracing buffers every protocol event).
     pub trace: bool,
+    /// Shared store tier provisioning for every point (the shard-sweep
+    /// driver varies this axis; here it is held fixed across the sweep).
+    pub store: StoreTierConfig,
 }
 
 impl Default for SweepConfig {
@@ -53,6 +56,7 @@ impl Default for SweepConfig {
             epochs: 1,
             threads: 0,
             trace: false,
+            store: StoreTierConfig::single(),
         }
     }
 }
@@ -87,7 +91,9 @@ fn run_point(
     workers: usize,
     mode: SyncMode,
 ) -> Result<SweepPoint> {
-    let mut ec = EnvConfig::virtual_paper(fw, &cfg.arch, workers)?.with_sync(mode);
+    let mut ec = EnvConfig::virtual_paper(fw, &cfg.arch, workers)?
+        .with_sync(mode)
+        .with_store(cfg.store.clone());
     if cfg.trace {
         ec = ec.with_trace(crate::trace::TraceConfig::on());
     }
@@ -285,6 +291,7 @@ mod tests {
             epochs: 1,
             threads: 2,
             trace: false,
+            store: StoreTierConfig::single(),
         }
     }
 

@@ -1,0 +1,462 @@
+//! Shard sweep: the store-tier cost/latency frontier for MLLess.
+//!
+//! The scale sweep (`exp::scale_sweep`) holds the store tier fixed and
+//! varies workers; this driver does the opposite experiment for the one
+//! architecture whose critical path runs through the shared store. MLLess
+//! workers publish per-round updates to the shared Redis tier and read
+//! every peer's update back, so at high worker counts the single command
+//! loop becomes the bottleneck the paper never measures. Sweeping
+//! shards × replication × workers answers the provisioning question: how
+//! many shards buy how much epoch time, and what does the extra hosting
+//! (plus replication's wire traffic) cost?
+//!
+//! Every point is an independent deterministic simulation; a Pareto
+//! marker flags, within each worker count, the points where no other
+//! store configuration is both faster and cheaper (epoch seconds vs
+//! paper cost + store hosting).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::cloud::{FrameworkKind, StoreTierConfig};
+use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use crate::metrics::CostKind;
+use crate::report::{Align, Cell, Report, Table};
+use crate::util::{fmt_bytes, fmt_duration};
+use crate::Result;
+
+/// Sweep parameters. Combinations with `replication > shards` are
+/// invalid tiers and silently skipped rather than rejected, so dense
+/// lists like `--shards 1,2,4 --replication 1,2` just work.
+#[derive(Debug, Clone)]
+pub struct ShardSweepConfig {
+    /// Calibrated architecture profile (`mobilenet`, `resnet18`, ...).
+    pub arch: String,
+    /// Shard counts to sweep.
+    pub shard_counts: Vec<usize>,
+    /// Replication factors to sweep.
+    pub replications: Vec<usize>,
+    /// Worker counts to sweep.
+    pub worker_counts: Vec<usize>,
+    /// Gradient batches per worker per epoch (paper: 24).
+    pub batches_per_epoch: usize,
+    /// Epochs simulated per point (metrics are per-epoch averages).
+    pub epochs: usize,
+    /// Simulation threads (0 = one per available core).
+    pub threads: usize,
+}
+
+impl Default for ShardSweepConfig {
+    fn default() -> Self {
+        ShardSweepConfig {
+            arch: "mobilenet".to_string(),
+            shard_counts: vec![1, 2, 4, 8],
+            replications: vec![1, 2],
+            worker_counts: vec![4, 16, 64],
+            batches_per_epoch: 24,
+            epochs: 1,
+            threads: 0,
+        }
+    }
+}
+
+/// One (shards × replication × workers) measurement for MLLess. Every
+/// quantity is a per-epoch mean, matching `scale_sweep::SweepPoint`.
+#[derive(Debug, Clone)]
+pub struct ShardPoint {
+    pub shards: usize,
+    pub replication: usize,
+    pub workers: usize,
+    /// Mean epoch wall time on the virtual timeline (seconds).
+    pub epoch_secs: f64,
+    /// Mean cost per epoch under the paper's model (USD).
+    pub cost_usd: f64,
+    /// Mean store hosting per epoch (`CostKind::Ec2Redis`; the paper's
+    /// model excludes it, which is exactly why the frontier adds it back).
+    pub hosting_usd: f64,
+    /// Mean bytes per epoch on the wire (replication fan-out included).
+    pub wire_bytes: u64,
+    /// Mean store requests per epoch, summed over shards.
+    pub store_requests: u64,
+    /// Mean seconds per epoch requests spent queued, summed over shards.
+    pub queue_wait_secs: f64,
+    /// The busiest shard's share of that queueing (contention signal).
+    pub max_shard_queue_secs: f64,
+    /// Busiest shard's requests over the per-shard mean (1.0 = even).
+    pub load_skew: f64,
+    /// Failover reads (0 unless a fault plan crashes a shard).
+    pub failovers: u64,
+    /// On the per-worker-count Pareto frontier of (epoch time, total $).
+    pub pareto: bool,
+}
+
+impl ShardPoint {
+    /// What the frontier actually trades off: paper cost plus the store
+    /// hosting the paper's model leaves out.
+    pub fn total_usd(&self) -> f64 {
+        self.cost_usd + self.hosting_usd
+    }
+
+    pub fn label(&self) -> String {
+        StoreTierConfig::sharded(self.shards, self.replication).label()
+    }
+}
+
+fn run_point(
+    cfg: &ShardSweepConfig,
+    shards: usize,
+    replication: usize,
+    workers: usize,
+) -> Result<ShardPoint> {
+    let mut ec = EnvConfig::virtual_paper(FrameworkKind::MlLess, &cfg.arch, workers)?
+        .with_store(StoreTierConfig::sharded(shards, replication));
+    ec.batches_per_epoch = cfg.batches_per_epoch;
+    let mut env = ClusterEnv::new(ec)?;
+    let mut strategy = strategy_for(FrameworkKind::MlLess);
+    let epochs = cfg.epochs.max(1);
+    let mut total_secs = 0.0;
+    for _ in 0..epochs {
+        total_secs += strategy.run_epoch(&mut env)?.epoch_secs;
+    }
+    // Hosting is billed for the whole tier over the run's duration; the
+    // recovery path can also charge Ec2Redis, so take the delta.
+    let hosting_before = env.ledger.get(CostKind::Ec2Redis);
+    env.shared_redis.bill_hosting(total_secs, &mut env.ledger);
+    let hosting = env.ledger.get(CostKind::Ec2Redis) - hosting_before;
+
+    let reports = env.shared_redis.shard_reports();
+    let requests: u64 = reports.iter().map(|r| r.requests).sum();
+    let queue_wait: f64 = reports.iter().map(|r| r.queue_wait).sum();
+    let max_queue = reports.iter().map(|r| r.queue_wait).fold(0.0, f64::max);
+    let max_requests = reports.iter().map(|r| r.requests).max().unwrap_or(0);
+    let mean_requests = requests as f64 / reports.len() as f64;
+    let epochs_f = epochs as f64;
+    Ok(ShardPoint {
+        shards,
+        replication,
+        workers,
+        epoch_secs: total_secs / epochs_f,
+        cost_usd: env.ledger.total_paper() / epochs_f,
+        hosting_usd: hosting / epochs_f,
+        wire_bytes: env.comm.wire_bytes() / epochs as u64,
+        store_requests: requests / epochs as u64,
+        queue_wait_secs: queue_wait / epochs_f,
+        max_shard_queue_secs: max_queue / epochs_f,
+        load_skew: if requests == 0 { 1.0 } else { max_requests as f64 / mean_requests },
+        failovers: env.shared_redis.total_failovers(),
+        pareto: false, // filled in by `run` once the whole grid exists
+    })
+}
+
+/// The grid, minus invalid tiers (replication > shards).
+fn tasks_of(cfg: &ShardSweepConfig) -> Vec<(usize, usize, usize)> {
+    let mut tasks = Vec::new();
+    for &w in &cfg.worker_counts {
+        for &s in &cfg.shard_counts {
+            for &r in &cfg.replications {
+                if r <= s {
+                    tasks.push((s, r, w));
+                }
+            }
+        }
+    }
+    tasks
+}
+
+/// Mark, within each worker count, the points no other point dominates
+/// on (epoch seconds, total cost): lower-or-equal on both with at least
+/// one strictly lower kills a point's frontier membership.
+fn mark_frontier(points: &mut [ShardPoint]) {
+    let grid: Vec<(usize, f64, f64)> =
+        points.iter().map(|p| (p.workers, p.epoch_secs, p.total_usd())).collect();
+    for (p, &(w, t, c)) in points.iter_mut().zip(&grid) {
+        p.pareto = !grid
+            .iter()
+            .any(|&(qw, qt, qc)| qw == w && qt <= t && qc <= c && (qt < t || qc < c));
+    }
+}
+
+/// Run the sweep. Points are scheduled over a work-stealing cursor onto
+/// `cfg.threads` std threads; output order is deterministic (workers ×
+/// shards × replication, as configured) regardless of thread count.
+pub fn run(cfg: &ShardSweepConfig) -> Result<Vec<ShardPoint>> {
+    let tasks = tasks_of(cfg);
+    if tasks.is_empty() {
+        return Ok(Vec::new());
+    }
+    let threads = if cfg.threads > 0 {
+        cfg.threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+    .clamp(1, tasks.len());
+
+    let cursor = AtomicUsize::new(0);
+    let outputs: Vec<Vec<(usize, Result<ShardPoint>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= tasks.len() {
+                            break;
+                        }
+                        let (s, r, w) = tasks[i];
+                        out.push((i, run_point(cfg, s, r, w)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sweep thread panicked")).collect()
+    });
+
+    let mut indexed: Vec<(usize, ShardPoint)> = Vec::with_capacity(tasks.len());
+    for (i, res) in outputs.into_iter().flatten() {
+        indexed.push((i, res?));
+    }
+    indexed.sort_by_key(|(i, _)| *i);
+    let mut points: Vec<ShardPoint> = indexed.into_iter().map(|(_, p)| p).collect();
+    mark_frontier(&mut points);
+    Ok(points)
+}
+
+/// Build the sweep report: the full grid plus the frontier marker.
+pub fn report(points: &[ShardPoint], cfg: &ShardSweepConfig) -> Report {
+    let mut t = Table::new(
+        "shard_sweep",
+        &[
+            ("W", Align::Right),
+            ("Tier", Align::Left),
+            ("Epoch", Align::Right),
+            ("Cost ($)", Align::Right),
+            ("Host ($)", Align::Right),
+            ("Wire", Align::Right),
+            ("Queue (s)", Align::Right),
+            ("Hot shard (s)", Align::Right),
+            ("Skew", Align::Right),
+            ("Frontier", Align::Left),
+        ],
+    )
+    .title(format!(
+        "Store-tier shard sweep — MLLess, {} profile, {} batches/epoch",
+        cfg.arch, cfg.batches_per_epoch
+    ));
+    let mut last_w: Option<usize> = None;
+    for p in points {
+        if last_w.is_some() && last_w != Some(p.workers) {
+            t.rule();
+        }
+        last_w = Some(p.workers);
+        t.push_row(vec![
+            Cell::count(p.workers as u64),
+            Cell::text(p.label()),
+            Cell::text(fmt_duration(p.epoch_secs)).with_value(p.epoch_secs),
+            Cell::num(p.cost_usd, 4),
+            Cell::num(p.hosting_usd, 4),
+            Cell::text(fmt_bytes(p.wire_bytes)).with_value(p.wire_bytes as f64),
+            Cell::num(p.queue_wait_secs, 1),
+            Cell::num(p.max_shard_queue_secs, 1),
+            Cell::num(p.load_skew, 2),
+            Cell::text(if p.pareto { "*" } else { "" }),
+        ]);
+    }
+    let fmt_list = |xs: &[usize]| {
+        xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+    };
+    Report::new(
+        "shard_sweep",
+        "Shard sweep — store-tier provisioning frontier (MLLess)",
+        format!(
+            "slsgpu shard-sweep --arch {} --shards {} --replication {} --workers {} --batches {}",
+            cfg.arch,
+            fmt_list(&cfg.shard_counts),
+            fmt_list(&cfg.replications),
+            fmt_list(&cfg.worker_counts),
+            cfg.batches_per_epoch
+        ),
+    )
+    .with_intro(
+        "MLLess is the architecture whose critical path runs through the shared \
+         parameter store: every worker publishes its round update there and reads \
+         every peer's back, so one Redis command loop serializes O(W²) transfers \
+         per round. Each row provisions the store as a consistent-hash cluster \
+         (`Tier` = shards × replication) and re-runs the same seeded epoch; \
+         `Queue` is time requests spent waiting for a shard's command loop \
+         (summed over shards, per epoch), `Hot shard` the busiest shard's share, \
+         `Skew` the busiest shard's request count over the per-shard mean. \
+         `Host ($)` is the tier's EC2 hosting — outside the paper's cost model, \
+         but exactly the money more shards spend — and `*` marks the per-W Pareto \
+         frontier of epoch time vs paper cost + hosting. Replication does not \
+         change epoch time materially (replica copies are asynchronous) but shows \
+         up in `Wire`; it buys crash survival, priced here, not speed.",
+    )
+    .with_table(t)
+}
+
+/// CLI view of [`report`].
+pub fn render(points: &[ShardPoint], cfg: &ShardSweepConfig) -> String {
+    report(points, cfg).to_text()
+}
+
+/// CSV export (one row per point).
+pub fn render_csv(points: &[ShardPoint]) -> String {
+    let mut out = String::from(
+        "shards,replication,workers,epoch_secs,cost_usd,hosting_usd,wire_bytes,\
+         store_requests,queue_wait_secs,max_shard_queue_secs,load_skew,failovers,pareto\n",
+    );
+    for p in points {
+        out.push_str(&format!(
+            "{},{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6},{:.4},{},{}\n",
+            p.shards,
+            p.replication,
+            p.workers,
+            p.epoch_secs,
+            p.cost_usd,
+            p.hosting_usd,
+            p.wire_bytes,
+            p.store_requests,
+            p.queue_wait_secs,
+            p.max_shard_queue_secs,
+            p.load_skew,
+            p.failovers,
+            p.pareto
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ShardSweepConfig {
+        ShardSweepConfig {
+            arch: "mobilenet".to_string(),
+            shard_counts: vec![1, 2],
+            replications: vec![1, 2],
+            worker_counts: vec![4],
+            batches_per_epoch: 4,
+            epochs: 1,
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn sweep_skips_invalid_tiers_and_measures_the_rest() {
+        let points = run(&small_cfg()).unwrap();
+        // s1r2 is invalid (replication > shards) and silently dropped.
+        let tiers: Vec<String> = points.iter().map(|p| p.label()).collect();
+        assert_eq!(tiers, vec!["s1r1", "s2r1", "s2r2"]);
+        for p in &points {
+            assert!(p.epoch_secs > 0.0, "{p:?}");
+            assert!(p.cost_usd > 0.0, "{p:?}");
+            assert!(p.hosting_usd > 0.0, "{p:?}");
+            assert!(p.store_requests > 0, "{p:?}");
+            assert_eq!(p.failovers, 0, "no faults in the sweep: {p:?}");
+        }
+        // Hosting burn rate (USD per virtual second) scales with shards.
+        let rate = |p: &ShardPoint| p.hosting_usd / p.epoch_secs;
+        let s1 = points.iter().find(|p| p.label() == "s1r1").unwrap();
+        let s2 = points.iter().find(|p| p.label() == "s2r1").unwrap();
+        assert!(rate(s2) > 1.5 * rate(s1), "{} vs {}", rate(s2), rate(s1));
+    }
+
+    #[test]
+    fn replication_pays_in_wire_bytes_not_epoch_time() {
+        let points = run(&small_cfg()).unwrap();
+        let get = |label: &str| points.iter().find(|p| p.label() == label).unwrap();
+        let (r1, r2) = (get("s2r1"), get("s2r2"));
+        // Replica copies are asynchronous: the client is acked by the
+        // primary, so they cost wire bytes without stretching the epoch
+        // (they can only delay later ops that queue behind them).
+        assert!(r2.wire_bytes > r1.wire_bytes, "{} vs {}", r2.wire_bytes, r1.wire_bytes);
+        assert!(r2.epoch_secs < r1.epoch_secs * 1.5, "{} vs {}", r2.epoch_secs, r1.epoch_secs);
+    }
+
+    #[test]
+    fn sharding_relieves_store_contention_at_scale() {
+        let cfg = ShardSweepConfig {
+            shard_counts: vec![1, 8],
+            replications: vec![1],
+            worker_counts: vec![32],
+            batches_per_epoch: 4,
+            threads: 0,
+            ..ShardSweepConfig::default()
+        };
+        let points = run(&cfg).unwrap();
+        let get = |s: usize| points.iter().find(|p| p.shards == s).unwrap();
+        let (one, eight) = (get(1), get(8));
+        assert!(
+            eight.queue_wait_secs < one.queue_wait_secs,
+            "8 shards must queue less than 1 at W=32: {} vs {}",
+            eight.queue_wait_secs,
+            one.queue_wait_secs
+        );
+        assert!(
+            eight.epoch_secs <= one.epoch_secs,
+            "less queueing cannot slow the epoch: {} vs {}",
+            eight.epoch_secs,
+            one.epoch_secs
+        );
+    }
+
+    #[test]
+    fn frontier_marks_the_undominated_points_per_worker_count() {
+        let points = run(&small_cfg()).unwrap();
+        for &w in &[4usize] {
+            let group: Vec<&ShardPoint> =
+                points.iter().filter(|p| p.workers == w).collect();
+            assert!(group.iter().any(|p| p.pareto), "W={w} has no frontier");
+            // The fastest and the cheapest points are always undominated.
+            let fastest = group
+                .iter()
+                .min_by(|a, b| a.epoch_secs.total_cmp(&b.epoch_secs))
+                .unwrap();
+            let cheapest = group
+                .iter()
+                .min_by(|a, b| a.total_usd().total_cmp(&b.total_usd()))
+                .unwrap();
+            assert!(fastest.pareto, "{fastest:?}");
+            assert!(cheapest.pareto, "{cheapest:?}");
+            // Every dominated point is truly dominated by some frontier point.
+            for p in &group {
+                if !p.pareto {
+                    assert!(group.iter().any(|q| {
+                        q.pareto
+                            && q.epoch_secs <= p.epoch_secs
+                            && q.total_usd() <= p.total_usd()
+                    }));
+                }
+            }
+        }
+        let table = render(&points, &small_cfg());
+        assert!(table.contains("s2r2") && table.contains("Frontier"), "{table}");
+        let csv = render_csv(&points);
+        assert_eq!(csv.lines().count(), 1 + points.len());
+        assert_eq!(csv.lines().nth(1).unwrap().split(',').count(), 13);
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let mut serial = small_cfg();
+        serial.threads = 1;
+        let mut parallel = small_cfg();
+        parallel.threads = 4;
+        let a = run(&serial).unwrap();
+        let b = run(&parallel).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.shards, x.replication, x.workers), (y.shards, y.replication, y.workers));
+            assert_eq!(
+                x.epoch_secs.to_bits(),
+                y.epoch_secs.to_bits(),
+                "{}: vtime must not depend on thread count",
+                x.label()
+            );
+            assert_eq!(x.cost_usd.to_bits(), y.cost_usd.to_bits());
+            assert_eq!(x.queue_wait_secs.to_bits(), y.queue_wait_secs.to_bits());
+            assert_eq!(x.pareto, y.pareto);
+        }
+    }
+}

@@ -20,7 +20,7 @@
 //! [`crate::faults::poison_demo`] (accuracy is meaningless on size-only
 //! slabs): naive mean vs the robust rules in [`crate::tensor::robust`].
 
-use crate::cloud::FrameworkKind;
+use crate::cloud::{FrameworkKind, StoreTierConfig};
 use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig};
 use crate::faults::{FaultPlan, poison_demo, PoisonMode};
 use crate::metrics::RecoveryStats;
@@ -46,16 +46,22 @@ pub enum Scenario {
     /// The MLLess supervisor crashes at epoch 2, round 12 (no-op for the
     /// other architectures — they have no supervisor to lose).
     SupervisorCrash,
+    /// Shard 0 of the shared store tier crashes at the top of epoch 2,
+    /// losing its contents; the tier runs 2 shards at replication 2 for
+    /// this scenario so reads fail over to the surviving replica. No-op for
+    /// architectures that never touch the shared store.
+    ShardCrash,
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 6] = [
+    pub const ALL: [Scenario; 7] = [
         Scenario::FaultFree,
         Scenario::WorkerCrash,
         Scenario::SyncCrash,
         Scenario::Straggler,
         Scenario::UpdateDrop,
         Scenario::SupervisorCrash,
+        Scenario::ShardCrash,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -66,6 +72,7 @@ impl Scenario {
             Scenario::Straggler => "straggler 4x",
             Scenario::UpdateDrop => "update drop",
             Scenario::SupervisorCrash => "supervisor crash",
+            Scenario::ShardCrash => "store-shard crash",
         }
     }
 }
@@ -99,6 +106,17 @@ pub fn plan_for(scenario: Scenario, cfg: &FaultConfig) -> FaultPlan {
         Scenario::Straggler => FaultPlan::none().straggler(worker, epoch, 0, 4.0, Some(24)),
         Scenario::UpdateDrop => FaultPlan::none().drop_updates(worker, epoch, 0, Some(6)),
         Scenario::SupervisorCrash => FaultPlan::none().supervisor_crash(epoch, 12),
+        Scenario::ShardCrash => FaultPlan::none().shard_crash(0, epoch),
+    }
+}
+
+/// Store tier for a scenario: the shard-crash scenario runs a 2-shard,
+/// fully replicated tier so failover (not unrecoverable data loss) is what
+/// gets measured; every other scenario keeps the paper's single instance.
+pub fn store_for(scenario: Scenario) -> StoreTierConfig {
+    match scenario {
+        Scenario::ShardCrash => StoreTierConfig::sharded(2, 2),
+        _ => StoreTierConfig::single(),
     }
 }
 
@@ -122,7 +140,8 @@ pub struct Table4 {
 
 fn run_one(fw: FrameworkKind, scenario: Scenario, cfg: &FaultConfig) -> Result<Cell> {
     let mut env_cfg = EnvConfig::virtual_paper(fw, &cfg.arch, cfg.workers)?
-        .with_faults(plan_for(scenario, cfg));
+        .with_faults(plan_for(scenario, cfg))
+        .with_store(store_for(scenario));
     env_cfg.seed = cfg.seed;
     let mut env = ClusterEnv::new(env_cfg)?;
     let mut strategy = strategy_for(fw);
@@ -255,7 +274,10 @@ pub fn report(t4: &Table4, cfg: &FaultConfig) -> Report {
          SPIRT absorbs a worker crash and reroutes around a dead peer, AllReduce's \
          master barrier amplifies it, ScatterReduce stalls on the late chunk owner, \
          MLLess only stalls when its supervisor dies, and the GPU fleet pays instance \
-         reboots at on-demand rates. The second table shows the poisoning contrast on \
+         reboots at on-demand rates. The store-shard crash row runs the shared tier \
+         as a 2-shard replicated cluster and downs one shard mid-run: only MLLess \
+         (the shared-store user) sees failover reads; everyone else is bit-identical \
+         to fault-free. The second table shows the poisoning contrast on \
          real gradients: naive mean collapses, clipped mean and coordinate median \
          recover.",
     )
@@ -341,6 +363,39 @@ mod tests {
                     base.vtime_secs.to_bits(),
                     "{fw:?} has no supervisor to lose"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_crash_only_touches_shared_store_users() {
+        // Note the shard-crash cell runs on a 2-shard replicated tier while
+        // the baseline runs the single instance — for the architectures
+        // that never touch the shared store that provisioning difference
+        // (like the crash itself) must not move a single bit.
+        let cfg = small();
+        let t4 = run(&cfg).unwrap();
+        for fw in FrameworkKind::ALL {
+            let base = baseline(&t4.cells, fw);
+            let sc = t4
+                .cells
+                .iter()
+                .find(|c| c.framework == fw && c.scenario == Scenario::ShardCrash)
+                .unwrap();
+            if fw == FrameworkKind::MlLess {
+                assert_eq!(sc.recovery.shard_restarts, 1, "the crash fired");
+                assert!(
+                    sc.recovery.shard_failovers > 0,
+                    "replica reads must cover the downed shard"
+                );
+            } else {
+                assert_eq!(
+                    sc.vtime_secs.to_bits(),
+                    base.vtime_secs.to_bits(),
+                    "{fw:?} never touches the shared store"
+                );
+                assert_eq!(sc.cost_usd.to_bits(), base.cost_usd.to_bits());
+                assert_eq!(sc.recovery.shard_failovers, 0);
             }
         }
     }

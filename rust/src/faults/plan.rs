@@ -59,6 +59,12 @@ pub enum FaultKind {
     /// The worker's produced update is lost before synchronization while
     /// active (message/object drop).
     DropUpdate,
+    /// A shard of the shared store tier crashes at the top of an epoch,
+    /// losing its in-memory contents and serving nothing until it restarts.
+    /// The event's `worker` field holds the *shard id*, not a worker id.
+    /// Reads fail over to replicas (replication permitting); no-op for
+    /// strategies that never touch the shared store.
+    ShardCrash,
     /// The worker submits corrupted gradients while active.
     Poison(PoisonMode),
 }
@@ -151,6 +157,16 @@ impl FaultPlan {
         })
     }
 
+    /// Crash store-tier shard `shard` at the top of `epoch`.
+    pub fn shard_crash(self, shard: usize, epoch: usize) -> FaultPlan {
+        self.with(FaultEvent {
+            worker: shard,
+            kind: FaultKind::ShardCrash,
+            at: Trigger::Round { epoch, round: 0 },
+            rounds: None,
+        })
+    }
+
     /// `worker` computes `factor`× slower for `rounds` rounds from
     /// (epoch, round); `None` = for the rest of the run.
     pub fn straggler(
@@ -215,6 +231,9 @@ impl FaultSchedule {
                 if ev.worker != SUPERVISOR {
                     bail!("supervisor crash events must target SUPERVISOR");
                 }
+            } else if matches!(ev.kind, FaultKind::ShardCrash) {
+                // The worker field is a shard id; the store tier validates
+                // it against its shard count when the env is built.
             } else if ev.worker >= workers {
                 bail!("fault event targets worker {} of {workers}", ev.worker);
             }
@@ -358,6 +377,37 @@ impl FaultSchedule {
     pub fn crash_supervisor(&mut self, round: usize, now: VTime) -> bool {
         self.fire(SUPERVISOR, FaultKind::CrashSupervisor, Some(round), now)
     }
+
+    /// Next store-tier shard crashing at the top of the current epoch, if
+    /// any. Consumes one event per call — loop until `None` to drain an
+    /// epoch's shard crashes. Returns the shard id (the event's `worker`
+    /// field).
+    pub fn crash_shard(&mut self, now: VTime) -> Option<usize> {
+        for (i, ev) in self.events.iter().enumerate() {
+            if self.fired[i] || !matches!(ev.kind, FaultKind::ShardCrash) {
+                continue;
+            }
+            let hit = match ev.at {
+                Trigger::VTime(t) => now.secs() >= t,
+                Trigger::Round { epoch, .. } => self.epoch == epoch,
+            };
+            if hit {
+                self.fired[i] = true;
+                return Some(ev.worker);
+            }
+        }
+        None
+    }
+
+    /// Largest shard id any [`FaultKind::ShardCrash`] event targets (for
+    /// validation against the store tier's shard count).
+    pub fn max_crashed_shard(&self) -> Option<usize> {
+        self.events
+            .iter()
+            .filter(|ev| matches!(ev.kind, FaultKind::ShardCrash))
+            .map(|ev| ev.worker)
+            .max()
+    }
 }
 
 #[cfg(test)]
@@ -450,6 +500,22 @@ mod tests {
         s.begin_epoch(3);
         assert!(s.crash_sync(0, t(0.0)));
         assert!(!s.crash_sync(0, t(0.0)), "one-shot");
+    }
+
+    #[test]
+    fn shard_crash_fires_once_at_its_epoch() {
+        // Shard ids are not worker ids: shard 3 on a 2-worker plan is fine.
+        let plan = FaultPlan::none().shard_crash(3, 2).shard_crash(0, 2);
+        let mut s = FaultSchedule::new(plan, 2).unwrap();
+        assert_eq!(s.max_crashed_shard(), Some(3));
+        s.begin_epoch(1);
+        assert_eq!(s.crash_shard(t(0.0)), None, "wrong epoch");
+        s.begin_epoch(2);
+        assert_eq!(s.crash_shard(t(0.0)), Some(3));
+        assert_eq!(s.crash_shard(t(0.0)), Some(0), "drains in plan order");
+        assert_eq!(s.crash_shard(t(0.0)), None, "one-shot");
+        s.begin_epoch(3);
+        assert_eq!(s.crash_shard(t(0.0)), None);
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! The crate is the paper's testbed rebuilt as a library:
 //!
 //! * [`cloud`] — simulated AWS substrates (Lambda, RedisAI, S3, queues,
-//!   Step Functions, EC2/GPU) with virtual-time latency + billing models.
+//!   Step Functions, EC2/GPU) with virtual-time latency + billing models;
+//!   `cloud::cluster` shards the shared store over a consistent-hash ring
+//!   with replication, failover and deterministic LRU eviction.
 //! * [`coordinator`] — the five training architectures under comparison:
 //!   SPIRT, MLLess, LambdaML AllReduce / ScatterReduce, and the distributed
 //!   GPU baseline. Their shared protocol plumbing (per-worker `Timeline`
@@ -25,9 +27,10 @@
 //! * [`train`] — the epoch/step driver that wires data, strategy, substrates
 //!   and runtime into a training session.
 //! * [`exp`] — drivers that regenerate every table and figure of the paper,
-//!   plus the fault-resilience table (`exp::table4_faults`) and the
+//!   plus the fault-resilience table (`exp::table4_faults`), the
 //!   4→256-worker scalability sweep (`exp::scale_sweep`, parallelized over
-//!   std threads). Every driver returns a typed [`report::Report`].
+//!   std threads) and the store-tier provisioning frontier
+//!   (`exp::shard_sweep`). Every driver returns a typed [`report::Report`].
 //! * [`report`] — the documentation pipeline: the typed report model
 //!   (tables, rows, cells with paper anchors and PASS/WARN verdicts) with
 //!   text/Markdown/CSV/JSON renderers, and the suite runner behind

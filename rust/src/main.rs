@@ -12,6 +12,10 @@
 //! slsgpu scale-sweep [--workers 4,16,64,256] [--modes bsp,async:2]
 //!                    [--arch mobilenet] [--batches 24] [--epochs 1]
 //!                    [--threads 0] [--csv out.csv] [--trace]  # 5 archs × W × mode
+//!                    [--shards 1] [--replication 1]  # store tier, fixed per sweep
+//! slsgpu shard-sweep [--shards 1,2,4,8] [--replication 1,2] [--workers 4,16,64]
+//!                    [--arch mobilenet] [--batches 24] [--epochs 1]
+//!                    [--threads 0] [--csv out.csv]  # MLLess store-tier frontier
 //! slsgpu trace [--arch spirt|all] [--model mobilenet] [--workers 4]
 //!              [--batches 24] [--epochs 1] [--mode bsp]
 //!              [--format summary|chrome|csv] [--out trace.json]
@@ -73,6 +77,7 @@ fn run() -> Result<()> {
         Some("exp") => run_exp(&args),
         Some("fault-tolerance") => run_fault_tolerance(&args),
         Some("scale-sweep") => run_scale_sweep(&args),
+        Some("shard-sweep") => run_shard_sweep(&args),
         Some("trace") => run_trace(&args),
         Some("report") => run_report(&args),
         Some("train") => run_train(&args),
@@ -95,13 +100,13 @@ fn run() -> Result<()> {
         }
         Some(other) => bail!(
             "unknown subcommand {other:?} \
-             (exp|fault-tolerance|scale-sweep|trace|report|train|artifacts)"
+             (exp|fault-tolerance|scale-sweep|shard-sweep|trace|report|train|artifacts)"
         ),
         None => {
             println!("slsgpu — serverless-vs-GPU training testbed (see README)");
             println!(
                 "subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, \
-                 fault-tolerance, scale-sweep, trace, report, train, artifacts"
+                 fault-tolerance, scale-sweep, shard-sweep, trace, report, train, artifacts"
             );
             Ok(())
         }
@@ -151,11 +156,37 @@ fn run_scale_sweep(args: &Args) -> Result<()> {
         epochs: args.get_usize("epochs", 1)?,
         threads: args.get_usize("threads", 0)?,
         trace: args.has_flag("trace"),
+        store: slsgpu::cloud::StoreTierConfig::sharded(
+            args.get_usize("shards", 1)?,
+            args.get_usize("replication", 1)?,
+        ),
     };
     let points = exp::scale_sweep::run(&cfg)?;
     print!("{}", exp::scale_sweep::render(&points, &cfg));
     if let Some(path) = args.get("csv") {
         std::fs::write(path, exp::scale_sweep::render_csv(&points))?;
+        println!("wrote sweep points to {path}");
+    }
+    Ok(())
+}
+
+/// The store-tier frontier: MLLess (the shared-store architecture) across
+/// shards × replication × workers, with the per-W Pareto frontier of
+/// epoch time vs paper cost + store hosting.
+fn run_shard_sweep(args: &Args) -> Result<()> {
+    let cfg = exp::shard_sweep::ShardSweepConfig {
+        arch: args.get_or("arch", "mobilenet").to_string(),
+        shard_counts: parse_list(args.get_or("shards", "1,2,4,8"))?,
+        replications: parse_list(args.get_or("replication", "1,2"))?,
+        worker_counts: parse_list(args.get_or("workers", "4,16,64"))?,
+        batches_per_epoch: args.get_usize("batches", 24)?,
+        epochs: args.get_usize("epochs", 1)?,
+        threads: args.get_usize("threads", 0)?,
+    };
+    let points = exp::shard_sweep::run(&cfg)?;
+    print!("{}", exp::shard_sweep::render(&points, &cfg));
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, exp::shard_sweep::render_csv(&points))?;
         println!("wrote sweep points to {path}");
     }
     Ok(())

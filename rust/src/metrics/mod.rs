@@ -107,8 +107,15 @@ pub enum CommKind {
 pub struct CommStats {
     ops: BTreeMap<CommKind, u64>,
     bytes: BTreeMap<CommKind, u64>,
-    /// Seconds spent blocked on communication (sync stage time).
+    /// Seconds spent blocked on communication (sync stage time). Excludes
+    /// producer-visibility waits, which are stalls on the *writer*, not
+    /// transfer overhead — those accumulate in [`CommStats::visibility_wait`].
     pub comm_time: f64,
+    /// Seconds a reader spent waiting for a key's producer to finish
+    /// writing before its own transfer could start (Redis `get` paths).
+    /// Separated from `comm_time` so sync stall and wire overhead are
+    /// distinguishable in reports.
+    pub visibility_wait: f64,
     /// Contributions skipped by the bounded-staleness sync policy (an
     /// async-mode worker proceeded without them; see
     /// `coordinator::protocol::SyncMode`). Always 0 in BSP mode. Counted
@@ -159,6 +166,7 @@ impl CommStats {
             *self.bytes.entry(*k).or_insert(0) += v;
         }
         self.comm_time += other.comm_time;
+        self.visibility_wait += other.visibility_wait;
         self.stale_skips += other.stale_skips;
     }
 }
@@ -185,6 +193,11 @@ pub struct RecoveryStats {
     pub supervisor_restarts: u64,
     /// SPIRT P2P fetches rerouted around a down peer.
     pub rerouted_fetches: u64,
+    /// Store-tier shards taken down by an injected `ShardCrash` (each
+    /// restarts after a provisioning delay).
+    pub shard_restarts: u64,
+    /// Reads served by a replica because the primary shard was down.
+    pub shard_failovers: u64,
     /// Updates dropped by injected message loss.
     pub dropped_updates: u64,
     /// Gradients corrupted by injected poisoning.
@@ -218,6 +231,12 @@ impl RecoveryStats {
         if self.rerouted_fetches > 0 {
             parts.push(format!("{} rerouted", self.rerouted_fetches));
         }
+        if self.shard_restarts > 0 {
+            parts.push(format!("{} shard down", self.shard_restarts));
+        }
+        if self.shard_failovers > 0 {
+            parts.push(format!("{} failover", self.shard_failovers));
+        }
         if self.dropped_updates > 0 {
             parts.push(format!("{} dropped", self.dropped_updates));
         }
@@ -244,6 +263,8 @@ impl RecoveryStats {
             + self.snapshot_restores
             + self.supervisor_restarts
             + self.rerouted_fetches
+            + self.shard_restarts
+            + self.shard_failovers
             + self.dropped_updates
             + self.poisoned_grads
             > 0
@@ -260,6 +281,8 @@ impl RecoveryStats {
         self.queue_repolls += other.queue_repolls;
         self.supervisor_restarts += other.supervisor_restarts;
         self.rerouted_fetches += other.rerouted_fetches;
+        self.shard_restarts += other.shard_restarts;
+        self.shard_failovers += other.shard_failovers;
         self.dropped_updates += other.dropped_updates;
         self.poisoned_grads += other.poisoned_grads;
         self.straggler_secs += other.straggler_secs;

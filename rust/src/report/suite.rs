@@ -36,6 +36,8 @@ pub struct SuiteConfig {
     pub fault: exp::table4_faults::FaultConfig,
     /// Scale-sweep grid.
     pub sweep: exp::scale_sweep::SweepConfig,
+    /// Shard-sweep grid (store-tier provisioning frontier).
+    pub shard_sweep: exp::shard_sweep::ShardSweepConfig,
     /// Protocol-trace run parameters.
     pub trace: exp::trace::TraceRunConfig,
 }
@@ -50,6 +52,7 @@ impl Default for SuiteConfig {
             indb_minibatches: 24,
             fault: exp::table4_faults::FaultConfig::default(),
             sweep: exp::scale_sweep::SweepConfig::default(),
+            shard_sweep: exp::shard_sweep::ShardSweepConfig::default(),
             trace: exp::trace::TraceRunConfig::default(),
         }
     }
@@ -96,7 +99,7 @@ impl SuiteConfig {
 }
 
 /// The suite's experiment ids, in execution order.
-pub const EXPERIMENT_IDS: [&str; 9] = [
+pub const EXPERIMENT_IDS: [&str; 10] = [
     "table1",
     "table2",
     "fig2",
@@ -105,6 +108,7 @@ pub const EXPERIMENT_IDS: [&str; 9] = [
     "table3",
     "table4_faults",
     "scale_sweep",
+    "shard_sweep",
     "trace",
 ];
 
@@ -148,6 +152,7 @@ pub fn canonical_title(id: &str) -> String {
         "table3" => "Table 3 / Fig. 4 — convergence on the executed model".to_string(),
         "table4_faults" => "Table 4 — Resilience under injected faults".to_string(),
         "scale_sweep" => "Scale sweep — 4 → 256 workers × sync modes".to_string(),
+        "shard_sweep" => "Shard sweep — store-tier provisioning frontier (MLLess)".to_string(),
         "trace" => "Protocol trace — critical path and op latency percentiles".to_string(),
         other => other.to_string(),
     }
@@ -179,6 +184,10 @@ fn run_one(id: &str, cfg: &SuiteConfig) -> Result<Report> {
         "scale_sweep" => {
             let points = exp::scale_sweep::run(&cfg.sweep)?;
             exp::scale_sweep::report(&points, &cfg.sweep)
+        }
+        "shard_sweep" => {
+            let points = exp::shard_sweep::run(&cfg.shard_sweep)?;
+            exp::shard_sweep::report(&points, &cfg.shard_sweep)
         }
         "trace" => {
             let traces = exp::trace::run(&cfg.trace)?;

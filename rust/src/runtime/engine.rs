@@ -276,4 +276,10 @@ impl SlabMath for PjrtMath {
             self.fallback.sgd(theta, g, lr)
         }
     }
+
+    fn scale(&self, src: &Slab, w: f32) -> Result<Slab> {
+        // No dedicated Pallas scale artifact is compiled; the portable loop
+        // is memory-bound either way.
+        self.fallback.scale(src, w)
+    }
 }

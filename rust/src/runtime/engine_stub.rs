@@ -103,6 +103,10 @@ impl SlabMath for PjrtMath {
     fn sgd(&self, theta: &Slab, g: &Slab, lr: f32) -> Result<Slab> {
         self.fallback.sgd(theta, g, lr)
     }
+
+    fn scale(&self, src: &Slab, w: f32) -> Result<Slab> {
+        self.fallback.scale(src, w)
+    }
 }
 
 #[cfg(test)]

@@ -32,6 +32,8 @@ pub trait SlabMath: Send + Sync {
     fn avg_update(&self, theta: &Slab, gsum: &Slab, inv_k: f32, lr: f32) -> Result<Slab>;
     /// `theta - lr * g`.
     fn sgd(&self, theta: &Slab, g: &Slab, lr: f32) -> Result<Slab>;
+    /// `w * src` — a single-source, two-pass op (read src, write out).
+    fn scale(&self, src: &Slab, w: f32) -> Result<Slab>;
 }
 
 /// Pure-Rust [`SlabMath`] (virtual slabs pass through size-only).
@@ -56,6 +58,12 @@ impl SlabMath for RustMath {
         out.axpy(g, -lr)?;
         Ok(out)
     }
+
+    fn scale(&self, src: &Slab, w: f32) -> Result<Slab> {
+        let mut out = src.clone();
+        out.scale(w);
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -73,6 +81,18 @@ mod math_tests {
         assert!((upd.as_slice().unwrap()[0] - 0.9).abs() < 1e-6);
         let sgd = m.sgd(&Slab::from_vec(vec![1.0]), &Slab::from_vec(vec![1.0]), 0.3).unwrap();
         assert!((sgd.as_slice().unwrap()[0] - 0.7).abs() < 1e-6);
+        let scaled = m.scale(&Slab::from_vec(vec![2.0, -4.0]), 0.5).unwrap();
+        assert_eq!(scaled.as_slice().unwrap(), &[1.0, -2.0]);
+    }
+
+    #[test]
+    fn scale_equals_acc_into_zeros() {
+        // The old scale_in_db detour: acc(zeros, src, w) == w * src.
+        let m = RustMath;
+        let src = Slab::from_vec(vec![1.5, -3.0, 0.25]);
+        let via_acc = m.acc(&src.zeros_like(), &src, 0.5).unwrap();
+        let direct = m.scale(&src, 0.5).unwrap();
+        assert_eq!(via_acc.as_slice().unwrap(), direct.as_slice().unwrap());
     }
 
     #[test]

@@ -43,6 +43,9 @@ pub enum EventKind {
     CrashSync,
     /// MLLess supervisor crash + restart (`ClusterEnv::supervisor_crash`).
     CrashSupervisor,
+    /// A store-tier shard crash + restart window (`ClusterEnv::begin_epoch`
+    /// firing `FaultKind::ShardCrash`; span on the supervisor track).
+    ShardCrash,
     /// An update silently dropped by the fault plan (instant).
     DropUpdate,
     /// A poisoned gradient injected by the fault plan (instant).
@@ -53,7 +56,7 @@ pub enum EventKind {
 
 impl EventKind {
     /// Every kind, in display order.
-    pub const ALL: [EventKind; 20] = [
+    pub const ALL: [EventKind; 21] = [
         EventKind::StateLoad,
         EventKind::Compute,
         EventKind::ApplyUpdate,
@@ -71,6 +74,7 @@ impl EventKind {
         EventKind::CrashCompute,
         EventKind::CrashSync,
         EventKind::CrashSupervisor,
+        EventKind::ShardCrash,
         EventKind::DropUpdate,
         EventKind::Poison,
         EventKind::Straggler,
@@ -95,6 +99,7 @@ impl EventKind {
             EventKind::CrashCompute => "crash-compute",
             EventKind::CrashSync => "crash-sync",
             EventKind::CrashSupervisor => "crash-supervisor",
+            EventKind::ShardCrash => "shard-crash",
             EventKind::DropUpdate => "drop-update",
             EventKind::Poison => "poison",
             EventKind::Straggler => "straggler",
@@ -121,6 +126,7 @@ impl EventKind {
             EventKind::CrashCompute
             | EventKind::CrashSync
             | EventKind::CrashSupervisor
+            | EventKind::ShardCrash
             | EventKind::DropUpdate
             | EventKind::Poison
             | EventKind::Straggler => "fault",

@@ -1,0 +1,114 @@
+//! Store-cluster integration tests: full MLLess sessions (the one
+//! architecture whose critical path runs through the shared store) on
+//! sharded/replicated/budgeted store tiers, including a mid-training
+//! `ShardCrash`. The unit tests in `cloud::cluster` pin the tier's local
+//! semantics; these pin what the whole protocol stack does with them.
+
+use slsgpu::cloud::{FrameworkKind, StoreTierConfig};
+use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use slsgpu::faults::FaultPlan;
+use slsgpu::train::{run_session, SessionConfig, SessionReport};
+
+const EPOCHS: usize = 3;
+
+fn mlless_session(store: StoreTierConfig, plan: FaultPlan) -> (SessionReport, ClusterEnv) {
+    let cfg = EnvConfig::virtual_paper(FrameworkKind::MlLess, "mobilenet", 4)
+        .unwrap()
+        .with_store(store)
+        .with_faults(plan);
+    let mut env = ClusterEnv::new(cfg).unwrap();
+    let mut strategy = strategy_for(FrameworkKind::MlLess);
+    let session_cfg = SessionConfig {
+        max_epochs: EPOCHS,
+        target_acc: 2.0,
+        patience: EPOCHS + 1,
+        evaluate: false,
+    };
+    let report = run_session(&mut env, strategy.as_mut(), &session_cfg).unwrap();
+    (report, env)
+}
+
+fn assert_bit_identical(a: &SessionReport, b: &SessionReport, label: &str) {
+    assert_eq!(a.reports.len(), b.reports.len(), "{label}");
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(ra.vtime_secs.to_bits(), rb.vtime_secs.to_bits(), "{label}: e{}", ra.epoch);
+        assert_eq!(ra.cost_usd.to_bits(), rb.cost_usd.to_bits(), "{label}: e{} cost", ra.epoch);
+    }
+    assert_eq!(a.total_vtime_secs.to_bits(), b.total_vtime_secs.to_bits(), "{label}");
+}
+
+#[test]
+fn replicated_tier_survives_a_shard_crash_via_failover() {
+    // Shard 0 crashes at the top of epoch 2 and loses its contents. With
+    // R=2 every key has a live replica, so training rides through on
+    // failover reads/writes — and the whole thing stays deterministic.
+    let plan = FaultPlan::none().shard_crash(0, 2);
+    let (a, env_a) = mlless_session(StoreTierConfig::sharded(2, 2), plan.clone());
+    let (b, env_b) = mlless_session(StoreTierConfig::sharded(2, 2), plan);
+    assert_eq!(a.reports.len(), EPOCHS, "training must complete through the crash");
+    assert_eq!(env_a.recovery.shard_restarts, 1);
+    assert!(
+        env_a.recovery.shard_failovers > 0,
+        "epoch-2 traffic for the crashed shard must fail over"
+    );
+    assert_eq!(env_a.recovery.shard_failovers, env_b.recovery.shard_failovers);
+    assert_bit_identical(&a, &b, "mlless s2r2 + shard crash");
+    // The cluster's own counters agree with the protocol attribution.
+    assert_eq!(env_a.shared_redis.total_failovers(), env_a.recovery.shard_failovers);
+}
+
+#[test]
+fn unreplicated_tier_stalls_through_the_crash_instead() {
+    // Same crash, R=1: there is no replica to fail over to, so writes and
+    // reads keyed to shard 0 wait out the 30 s restart. Slower than the
+    // replicated run's failover path, but never an error — and the stall
+    // is billed to visibility_wait, not transfer time.
+    let plan = FaultPlan::none().shard_crash(0, 2);
+    let (clean, _) = mlless_session(StoreTierConfig::sharded(2, 1), FaultPlan::none());
+    let (crashed, env) = mlless_session(StoreTierConfig::sharded(2, 1), plan);
+    assert_eq!(crashed.reports.len(), EPOCHS);
+    assert_eq!(env.recovery.shard_restarts, 1);
+    assert_eq!(env.recovery.shard_failovers, 0, "R=1 has nowhere to fail over");
+    assert!(
+        crashed.total_vtime_secs > clean.total_vtime_secs,
+        "waiting out the restart must cost virtual time: {} vs {}",
+        crashed.total_vtime_secs,
+        clean.total_vtime_secs
+    );
+    assert!(env.comm.visibility_wait > 0.0, "the stall lands in visibility_wait");
+}
+
+#[test]
+fn shard_reports_account_for_the_session_traffic() {
+    let (_, env) = mlless_session(StoreTierConfig::sharded(4, 1), FaultPlan::none());
+    let reports = env.shared_redis.shard_reports();
+    assert_eq!(reports.len(), 4);
+    let puts: u64 = reports.iter().map(|r| r.stats.puts).sum();
+    let gets: u64 = reports.iter().map(|r| r.stats.gets).sum();
+    // 4 workers × 1 update each × rounds: every publish is read by the
+    // 3 peers, so store reads outnumber writes.
+    assert!(puts > 0);
+    assert!(gets > puts, "{gets} gets vs {puts} puts");
+    // MLLess deletes consumed keys, so nothing stays resident...
+    assert_eq!(reports.iter().map(|r| r.keys).sum::<usize>(), 0);
+    // ...but the hottest-key high-water mark survives the deletions.
+    assert!(reports.iter().any(|r| r.stats.hottest_gets > 0));
+    // With no byte budget configured, nothing is ever evicted.
+    assert_eq!(reports.iter().map(|r| r.stats.evictions).sum::<u64>(), 0);
+}
+
+#[test]
+fn slack_byte_budget_is_timeline_invisible() {
+    // A budget that never binds must not move a single bit: eviction
+    // bookkeeping (touch counters, LRU maps) lives outside the clocks.
+    let slack = StoreTierConfig {
+        capacity_bytes: Some(1 << 40),
+        ..StoreTierConfig::sharded(2, 2)
+    };
+    let (budgeted, env) = mlless_session(slack, FaultPlan::none());
+    let (unbudgeted, _) = mlless_session(StoreTierConfig::sharded(2, 2), FaultPlan::none());
+    let evictions: u64 =
+        env.shared_redis.shard_reports().iter().map(|r| r.stats.evictions).sum();
+    assert_eq!(evictions, 0);
+    assert_bit_identical(&budgeted, &unbudgeted, "slack budget");
+}

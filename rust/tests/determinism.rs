@@ -8,7 +8,7 @@
 //! events at epoch/round coordinates and virtual times) nor the async
 //! quorum selection may introduce any run-to-run variation of its own.
 
-use slsgpu::cloud::FrameworkKind;
+use slsgpu::cloud::{FrameworkKind, StoreTierConfig};
 use slsgpu::coordinator::{strategy_for, ClusterEnv, EnvConfig, SyncMode};
 use slsgpu::faults::{FaultPlan, PoisonMode};
 use slsgpu::tensor::AggregationRule;
@@ -87,6 +87,57 @@ fn busy_plan() -> FaultPlan {
         .drop_updates(0, 2, 0, Some(4))
         .poison(3, 1, PoisonMode::Scale(-4.0))
         .supervisor_crash(2, 10)
+}
+
+fn session_stored(fw: FrameworkKind, store: StoreTierConfig) -> SessionReport {
+    let cfg = EnvConfig::virtual_paper(fw, "mobilenet", 4).unwrap().with_store(store);
+    let mut env = ClusterEnv::new(cfg).unwrap();
+    let mut strategy = strategy_for(fw);
+    let session_cfg = SessionConfig {
+        max_epochs: EPOCHS,
+        target_acc: 2.0,
+        patience: EPOCHS + 1,
+        evaluate: false,
+    };
+    run_session(&mut env, strategy.as_mut(), &session_cfg).unwrap()
+}
+
+#[test]
+fn single_shard_store_is_bit_identical_to_the_default() {
+    // The store-cluster compatibility contract: shards=1, replication=1
+    // degenerates to the pre-cluster single shared instance (pinned
+    // against plain `Redis` bit-for-bit in `cloud::cluster`'s unit
+    // tests). At the session level, any single-shard provisioning —
+    // vnode count is irrelevant when there is one shard to route to —
+    // must leave every architecture's timeline and ledger untouched.
+    let odd_vnodes = StoreTierConfig { vnodes: 7, ..StoreTierConfig::single() };
+    for fw in FrameworkKind::ALL {
+        let default = session(fw, &FaultPlan::none(), AggregationRule::Mean);
+        let explicit = session_stored(fw, StoreTierConfig::single());
+        let reringed = session_stored(fw, odd_vnodes.clone());
+        assert_bit_identical(&default, &explicit, &format!("{} s1r1", fw.name()));
+        assert_bit_identical(&default, &reringed, &format!("{} s1r1 vnodes=7", fw.name()));
+    }
+}
+
+#[test]
+fn sharding_the_store_moves_only_the_shared_store_architecture() {
+    // MLLess is the one strategy routing traffic through the shared
+    // store; for the other four a sharded/replicated tier must be
+    // bit-invisible. For MLLess itself the timeline legitimately moves
+    // (four command loops instead of one), so the assertion there is
+    // determinism of the sharded run.
+    let tier = StoreTierConfig::sharded(4, 2);
+    for fw in FrameworkKind::ALL {
+        let sharded = session_stored(fw, tier.clone());
+        if fw == FrameworkKind::MlLess {
+            let again = session_stored(fw, tier.clone());
+            assert_bit_identical(&sharded, &again, "mlless s4r2 rerun");
+        } else {
+            let default = session(fw, &FaultPlan::none(), AggregationRule::Mean);
+            assert_bit_identical(&default, &sharded, &format!("{} ignores s4r2", fw.name()));
+        }
+    }
 }
 
 #[test]

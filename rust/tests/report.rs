@@ -116,6 +116,14 @@ fn tiny_suite() -> SuiteConfig {
             threads: 2,
             ..Default::default()
         },
+        shard_sweep: exp::shard_sweep::ShardSweepConfig {
+            shard_counts: vec![1, 2],
+            replications: vec![1, 2],
+            worker_counts: vec![4],
+            batches_per_epoch: 4,
+            threads: 2,
+            ..Default::default()
+        },
         ..SuiteConfig::default()
     }
 }
