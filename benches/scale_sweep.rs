@@ -80,6 +80,15 @@ fn main() {
         }
     }
 
+    println!("-- w1024 single points (event-queue core, one BSP epoch, 4 batches) --");
+    // The extended-grid anchor: before the discrete-event scheduler core
+    // these points were dominated by O(W^2 log W)-ish wait resolution and
+    // unbounded busy-interval history; rounds/s here is the before/after
+    // number BENCH_scale_sweep.json's `w1024` section records.
+    for fw in FrameworkKind::ALL {
+        bench_point_report(fw, 1024, SyncMode::Bsp, 4);
+    }
+
     println!("-- trace-layer overhead (BSP, one epoch, best of 3) --");
     for fw in FrameworkKind::ALL {
         for workers in [16, 256] {

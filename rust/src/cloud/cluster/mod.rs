@@ -408,6 +408,15 @@ impl RedisCluster {
         }
     }
 
+    /// Prune every shard's command-loop/script-engine busy history that
+    /// ended at or before `before` (see `Redis::prune_history`). Routing,
+    /// residency, LRU order and all stats are untouched.
+    pub fn prune_history(&mut self, before: VTime) {
+        for sh in &mut self.shards {
+            sh.redis.prune_history(before);
+        }
+    }
+
     /// Crash `shard` at `now`: it loses its in-memory contents and serves
     /// nothing until `now + SHARD_RESTART_SECS`. Reads fail over to
     /// replicas in the meantime.

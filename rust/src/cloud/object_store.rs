@@ -139,6 +139,16 @@ impl ObjectStore {
         self.objects.is_empty()
     }
 
+    /// Drop frontend busy history that ended at or before `before` (see
+    /// `sim::Resource::release`). Placement of every request arriving at
+    /// or after the watermark is unchanged; only the interval history's
+    /// memory is bounded. At W=4096 a single ScatterReduce epoch issues
+    /// tens of millions of frontend requests — without this the sweep's
+    /// busy-interval maps are the dominant allocation.
+    pub fn prune_history(&mut self, before: VTime) {
+        self.frontend.release(before);
+    }
+
     /// Reset timeline + contents (new experiment).
     pub fn clear(&mut self) {
         self.objects.clear();

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use crate::metrics::{CommKind, CommStats, CostKind, Ledger};
-use crate::sim::VTime;
+use crate::sim::{OrderLog, VTime};
 
 use super::calibration::QUEUE_LATENCY;
 use super::pricing;
@@ -24,10 +24,21 @@ pub struct Msg {
     pub visible: VTime,
 }
 
+/// One topic: the message list (drain order) plus an incrementally sorted
+/// log of visibility times, so `kth_visible` — the MLLess supervisor wait
+/// and every SPIRT sync poll, called once per waiter per round — is an
+/// O(1) rank lookup instead of re-sorting W visibilities per call (which
+/// made a 1024-worker round cost O(W² log W) host work).
+#[derive(Debug, Default)]
+struct Topic {
+    msgs: Vec<Msg>,
+    visibility: OrderLog,
+}
+
 /// A named-topic message broker.
 #[derive(Debug, Default)]
 pub struct MessageQueue {
-    topics: BTreeMap<String, Vec<Msg>>,
+    topics: BTreeMap<String, Topic>,
     latency: f64,
     published: u64,
 }
@@ -49,10 +60,9 @@ impl MessageQueue {
         let visible = now + self.latency;
         let body = body.into();
         let bytes = body.len() as u64 + 64; // envelope overhead
-        self.topics
-            .entry(topic.to_string())
-            .or_default()
-            .push(Msg { body, visible });
+        let t = self.topics.entry(topic.to_string()).or_default();
+        t.msgs.push(Msg { body, visible });
+        t.visibility.insert(visible);
         self.published += 1;
         ledger.charge(CostKind::QueueMessages, pricing::queue_cost(1));
         comm.record(CommKind::Publish, bytes);
@@ -62,13 +72,9 @@ impl MessageQueue {
     /// Virtual time at which the `k`-th message (1-based) on `topic` is
     /// visible, or None if fewer than `k` messages were ever published.
     pub fn kth_visible(&self, topic: &str, k: usize) -> Option<VTime> {
-        let msgs = self.topics.get(topic)?;
-        if msgs.len() < k || k == 0 {
-            return None;
-        }
-        let mut times: Vec<VTime> = msgs.iter().map(|m| m.visible).collect();
-        times.sort();
-        Some(times[k - 1])
+        // The per-topic OrderLog is the sorted visibility vector the old
+        // sort-per-call code rebuilt here; the k-th rank is bit-identical.
+        self.topics.get(topic)?.visibility.kth(k)
     }
 
     /// Block (in virtual time) until `count` messages are visible on
@@ -84,7 +90,7 @@ impl MessageQueue {
         let Some(t) = self.kth_visible(topic, count) else {
             bail!(
                 "queue[{topic}]: only {} messages, waiting for {count}",
-                self.topics.get(topic).map(|m| m.len()).unwrap_or(0)
+                self.topics.get(topic).map(|t| t.msgs.len()).unwrap_or(0)
             );
         };
         let done = now.max(t) + self.latency;
@@ -104,16 +110,19 @@ impl MessageQueue {
     ) -> (VTime, Vec<String>) {
         let done = now + self.latency;
         let mut out = Vec::new();
-        if let Some(msgs) = self.topics.get_mut(topic) {
+        if let Some(t) = self.topics.get_mut(topic) {
             let mut rest = Vec::new();
-            for m in msgs.drain(..) {
+            for m in t.msgs.drain(..) {
                 if m.visible <= now {
                     out.push(m.body);
                 } else {
                     rest.push(m);
                 }
             }
-            *msgs = rest;
+            t.msgs = rest;
+            // Draining removes an arbitrary subset; rebuild the rank log
+            // from the survivors.
+            t.visibility.rebuild(t.msgs.iter().map(|m| m.visible));
         }
         ledger.charge(CostKind::QueueMessages, pricing::queue_cost(1));
         comm.record(CommKind::Poll, 64 * (out.len() as u64 + 1));
@@ -123,11 +132,20 @@ impl MessageQueue {
 
     /// Messages currently enqueued on a topic (any visibility).
     pub fn depth(&self, topic: &str) -> usize {
-        self.topics.get(topic).map(|m| m.len()).unwrap_or(0)
+        self.topics.get(topic).map(|t| t.msgs.len()).unwrap_or(0)
     }
 
     pub fn total_published(&self) -> u64 {
         self.published
+    }
+
+    /// Discard a fully consumed topic (bookkeeping only: no charges, no
+    /// clock movement, `total_published` keeps counting). Strategies name
+    /// sync topics per round/epoch, so without this the broker retains
+    /// every round's W messages for the whole sweep — at W=4096 that is
+    /// the difference between bounded and unbounded memory.
+    pub fn drop_topic(&mut self, topic: &str) {
+        self.topics.remove(topic);
     }
 
     pub fn clear(&mut self) {
@@ -185,6 +203,49 @@ mod tests {
         let (_, got) = q.drain_visible(VTime::from_secs(1.0), "t", &mut l, &mut c);
         assert_eq!(got, vec!["a"]);
         assert_eq!(q.depth("t"), 1); // "b" still pending
+    }
+
+    #[test]
+    fn kth_visible_matches_sort_reference_across_drains() {
+        // The incremental OrderLog must agree bit-for-bit with the old
+        // sort-per-call resolution, including after drains remove an
+        // arbitrary visible prefix.
+        let mut q = MessageQueue::new();
+        let (mut l, mut c) = env();
+        let times = [5.0, 1.0, 3.0, 3.0, 9.0, 0.5, 3.0, 7.0];
+        for (i, &t) in times.iter().enumerate() {
+            q.publish(VTime::from_secs(t), "t", format!("m{i}"), &mut l, &mut c);
+        }
+        // Ranks are sorted and complete.
+        let ranks: Vec<VTime> = (1..=times.len()).map(|k| q.kth_visible("t", k).unwrap()).collect();
+        let mut sorted: Vec<VTime> = times.iter().map(|&t| VTime::from_secs(t) + QUEUE_LATENCY).collect();
+        sorted.sort();
+        for (a, b) in ranks.iter().zip(&sorted) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(q.kth_visible("t", times.len() + 1).is_none());
+        // Drain the messages visible by t=4, then re-check every rank.
+        let (_, got) = q.drain_visible(VTime::from_secs(4.0), "t", &mut l, &mut c);
+        assert_eq!(got.len(), sorted.iter().filter(|t| t.secs() <= 4.0).count());
+        let remaining: Vec<VTime> = sorted.into_iter().filter(|t| t.secs() > 4.0).collect();
+        for (k, want) in remaining.iter().enumerate() {
+            assert_eq!(q.kth_visible("t", k + 1).unwrap().to_bits(), want.to_bits());
+        }
+        assert!(q.kth_visible("t", remaining.len() + 1).is_none());
+    }
+
+    #[test]
+    fn drop_topic_is_bookkeeping_only() {
+        let mut q = MessageQueue::new();
+        let (mut l, mut c) = env();
+        q.publish(VTime::ZERO, "round0", "x", &mut l, &mut c);
+        let published = q.total_published();
+        let cost = l.get(CostKind::QueueMessages);
+        q.drop_topic("round0");
+        assert_eq!(q.depth("round0"), 0);
+        assert!(q.kth_visible("round0", 1).is_none());
+        assert_eq!(q.total_published(), published, "publish count survives");
+        assert_eq!(l.get(CostKind::QueueMessages), cost, "no charge for dropping");
     }
 
     #[test]

@@ -289,6 +289,16 @@ impl Redis {
         self.queue_wait = 0.0;
     }
 
+    /// Drop command-loop and script-engine busy history that ended at or
+    /// before `before` (see `sim::Resource::release` for why this cannot
+    /// move any future placement). Called by `ClusterEnv` at epoch
+    /// boundaries so a long sweep's interval history stays bounded;
+    /// `queue_wait`/`busy_time`/request stats are untouched.
+    pub fn prune_history(&mut self, before: VTime) {
+        self.cmd.release(before);
+        self.script_engine.release(before);
+    }
+
     /// Seconds requests spent queued behind other clients of this instance.
     pub fn queue_wait(&self) -> f64 {
         self.queue_wait

@@ -349,6 +349,19 @@ impl ClusterEnv {
         self.epoch += 1;
         self.trace.begin_epoch(self.epoch);
         self.faults.begin_epoch(self.epoch);
+        // Release substrate busy history the new epoch can no longer
+        // touch: every future request arrives at or after the slowest
+        // worker's current clock, and `sim::Resource::release` is
+        // placement-preserving for such arrivals. Keeps the interval maps
+        // (the sweep's dominant allocation at W >= 1024) bounded per
+        // epoch instead of growing for the whole run.
+        let watermark = self.min_clock();
+        self.store.prune_history(watermark);
+        self.gpu_store.prune_history(watermark);
+        self.shared_redis.prune_history(watermark);
+        for r in &mut self.worker_redis {
+            r.prune_history(watermark);
+        }
         let now = self.max_clock();
         while let Some(shard) = self.faults.crash_shard(now) {
             // Invalid shard ids are rejected at construction; ignore
@@ -683,6 +696,14 @@ impl ClusterEnv {
     /// Max worker clock (epoch end time).
     pub fn max_clock(&self) -> VTime {
         self.workers.iter().map(|w| w.clock).fold(VTime::ZERO, VTime::max)
+    }
+
+    /// Min worker clock: no future substrate request can arrive before it
+    /// (clocks never rewind past an epoch boundary — SPIRT's per-minibatch
+    /// clock resets go back only to the current epoch's base). This is the
+    /// watermark `begin_epoch` prunes substrate busy history with.
+    pub fn min_clock(&self) -> VTime {
+        self.workers.iter().map(|w| w.clock).fold(self.max_clock(), VTime::min)
     }
 
     /// Evaluate test accuracy of worker 0's replica (real mode only).

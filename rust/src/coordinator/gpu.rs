@@ -66,6 +66,10 @@ impl Strategy for GpuBaseline {
             // All-gather through the shared bucket (EC2-side bandwidth).
             // Every peer needs every gradient, so a rebooting instance
             // stalls the whole fleet; dropped uploads fall out of the mean.
+            // One key string per worker per round; the fetch loops below
+            // index into this instead of re-formatting W keys per fetcher
+            // (O(W^2) string builds per round at sweep scale).
+            let keys: Vec<String> = (0..w_count).map(|j| format!("{tag}/g{j}")).collect();
             let mut dropped = vec![false; w_count];
             for w in 0..w_count {
                 let mut tl = env.timeline(w);
@@ -73,8 +77,7 @@ impl Strategy for GpuBaseline {
                     dropped[w] = true;
                     continue;
                 }
-                let key = format!("{tag}/g{w}");
-                tl.put(StoreSel::Gpu, Stage::Synchronize, &key, grads[w].share());
+                tl.put(StoreSel::Gpu, Stage::Synchronize, &keys[w], grads[w].share());
             }
 
             // Async mode: one earliest-visible quorum of uploads per round;
@@ -82,8 +85,7 @@ impl Strategy for GpuBaseline {
             // BSP drives its fetches off `dropped` directly, so `picked`
             // stays empty there.
             let uploaded: Vec<usize> = (0..w_count).filter(|&j| !dropped[j]).collect();
-            let up_keys: Vec<String> =
-                uploaded.iter().map(|&j| format!("{tag}/g{j}")).collect();
+            let up_keys: Vec<String> = uploaded.iter().map(|&j| keys[j].clone()).collect();
             let picked: Vec<usize> = match mode {
                 SyncMode::Bsp => Vec::new(),
                 SyncMode::Async { .. } => {
@@ -108,8 +110,7 @@ impl Strategy for GpuBaseline {
                             if dropped[j] {
                                 continue;
                             }
-                            let key = format!("{tag}/g{j}");
-                            fetched.push(tl.get(StoreSel::Gpu, Stage::Synchronize, &key)?);
+                            fetched.push(tl.get(StoreSel::Gpu, Stage::Synchronize, &keys[j])?);
                         }
                     }
                     SyncMode::Async { .. } => {
@@ -119,8 +120,7 @@ impl Strategy for GpuBaseline {
                             if j == w {
                                 continue;
                             }
-                            let key = format!("{tag}/g{j}");
-                            fetched.push(tl.get(StoreSel::Gpu, Stage::Synchronize, &key)?);
+                            fetched.push(tl.get(StoreSel::Gpu, Stage::Synchronize, &keys[j])?);
                         }
                     }
                 }

@@ -257,10 +257,16 @@ impl Strategy for MlLess {
             }
 
             // Published updates are consumed (or quorum-skipped); drop them
-            // from the store.
+            // from the store. The round's topics are likewise dead — every
+            // worker polled `proceed` and the supervisor drained the report
+            // quorum — and topic names are unique per round, so dropping
+            // them keeps queue memory flat across a W=4096 sweep instead of
+            // growing by W+1 messages per round.
             for (key, _) in published.iter().flatten() {
                 env.shared_redis.delete(key);
             }
+            env.queues.drop_topic(&sup_topic);
+            env.queues.drop_topic(&proceed_topic);
         }
 
         let epoch_secs = env.max_clock() - start;

@@ -31,7 +31,7 @@
 use anyhow::Result;
 
 use crate::metrics::Stage;
-use crate::sim::VTime;
+use crate::sim::{EventQueue, VTime};
 use crate::tensor::Slab;
 use crate::trace::EventKind;
 
@@ -195,15 +195,31 @@ impl OpOut {
 /// by `rot`*, so repeated rounds spread the skipped slots across workers
 /// instead of starving a fixed suffix. Returns the chosen indices in
 /// visibility order — the order an async gather fetches them.
+///
+/// Implementation: the quorum wait is resolved on a [`EventQueue`] of
+/// `(visibility, worker)` events. Candidates are pushed in rotated-index
+/// order, so the queue's FIFO tie-break *is* the rotated tie-break, and
+/// popping `quorum` events yields exactly the prefix the previous
+/// full-sort by `(vis[i], (i + n - r) % n)` produced (pinned bit-for-bit
+/// against that reference in the tests below) — without sorting the
+/// `n - quorum` contributions the gather is going to skip anyway.
 pub fn quorum_subset(vis: &[VTime], quorum: usize, rot: usize) -> Vec<usize> {
     let n = vis.len();
     if n == 0 {
         return Vec::new();
     }
     let r = rot % n;
-    let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by_key(|&i| (vis[i], (i + n - r) % n));
-    idx.truncate(quorum.min(n));
+    let take = quorum.min(n);
+    let mut events: EventQueue<usize> = EventQueue::with_capacity(n);
+    for j in 0..n {
+        let i = (j + r) % n; // push order == rotated index order
+        events.push(vis[i], i);
+    }
+    let mut idx = Vec::with_capacity(take);
+    while idx.len() < take {
+        let (_, i) = events.pop().expect("take <= n events queued");
+        idx.push(i);
+    }
     idx
 }
 
@@ -526,6 +542,44 @@ mod tests {
         // quorum larger than n is clamped.
         assert_eq!(quorum_subset(&vis, 9, 0).len(), 4);
         assert!(quorum_subset(&[], 3, 0).is_empty());
+    }
+
+    #[test]
+    fn quorum_subset_matches_the_sort_reference_bit_for_bit() {
+        // The event-queue resolution must reproduce the old full-sort
+        // selection exactly — same indices, same order — across sizes,
+        // rotations and heavy visibility ties.
+        let reference = |vis: &[VTime], quorum: usize, rot: usize| -> Vec<usize> {
+            let n = vis.len();
+            if n == 0 {
+                return Vec::new();
+            }
+            let r = rot % n;
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by_key(|&i| (vis[i], (i + n - r) % n));
+            idx.truncate(quorum.min(n));
+            idx
+        };
+        let mut state: u64 = 0xDE5C_0123;
+        for n in [1usize, 2, 3, 7, 16, 33] {
+            for rot in 0..(2 * n) {
+                let vis: Vec<VTime> = (0..n)
+                    .map(|_| {
+                        state = state
+                            .wrapping_mul(6364136223846793005)
+                            .wrapping_add(1442695040888963407);
+                        VTime::from_secs((state >> 60) as f64) // 0..=15: many ties
+                    })
+                    .collect();
+                for quorum in [1, n / 2, n.saturating_sub(1).max(1), n, n + 3] {
+                    assert_eq!(
+                        quorum_subset(&vis, quorum, rot),
+                        reference(&vis, quorum, rot),
+                        "n={n} rot={rot} quorum={quorum} vis={vis:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -71,6 +71,12 @@ impl ScatterReduce {
             }
         }
 
+        // Partial-aggregate keys are shared by the reduce upload, the
+        // all-gather and the cleanup below; formatting them once per round
+        // keeps the all-gather at O(W) string builds instead of O(W^2).
+        let agg_keys: Vec<String> =
+            (0..w_count).map(|j| format!("{round_tag}/agg{j}")).collect();
+
         // Reduce: worker w aggregates everyone's chunk w, uploads partial.
         for w in 0..w_count {
             let mut parts: Vec<Slab> = own_chunks[w].take().into_iter().collect();
@@ -105,12 +111,7 @@ impl ScatterReduce {
             } else {
                 env.aggregate(w, &parts)?
             };
-            env.timeline(w).put(
-                StoreSel::Shared,
-                Stage::Synchronize,
-                &format!("{round_tag}/agg{w}"),
-                partial,
-            );
+            env.timeline(w).put(StoreSel::Shared, Stage::Synchronize, &agg_keys[w], partial);
         }
 
         // All-gather: everyone downloads the other partials, reassembles,
@@ -120,9 +121,8 @@ impl ScatterReduce {
             let mut parts: Vec<Slab> = Vec::with_capacity(w_count);
             {
                 let mut tl = env.timeline(w);
-                for j in 0..w_count {
-                    let key = format!("{round_tag}/agg{j}");
-                    parts.push(tl.get(StoreSel::Shared, Stage::Synchronize, &key)?);
+                for key in &agg_keys {
+                    parts.push(tl.get(StoreSel::Shared, Stage::Synchronize, key)?);
                 }
             }
             let full = plan.concat(&parts)?;
@@ -137,7 +137,7 @@ impl ScatterReduce {
                     env.store.delete(&format!("{round_tag}/c{w}to{j}"));
                 }
             }
-            env.store.delete(&format!("{round_tag}/agg{w}"));
+            env.store.delete(&agg_keys[w]);
         }
         Ok(())
     }

@@ -22,7 +22,7 @@
 
 use crate::cloud::FrameworkKind;
 use crate::metrics::Stage;
-use crate::sim::VTime;
+use crate::sim::{EventQueue, VTime};
 use crate::tensor::Slab;
 use crate::trace::EventKind;
 use crate::Result;
@@ -82,7 +82,7 @@ impl Strategy for Spirt {
             // fault-tolerance property the SPIRT paper claims). A dropped
             // minibatch gradient never reaches the database: its signal is
             // lost but the function still ran and bills.
-            let mut arrivals = Vec::with_capacity(env.batches_per_epoch);
+            let mut arrivals = EventQueue::with_capacity(env.batches_per_epoch);
             let mut dropped_done = VTime::ZERO;
             for m in 0..env.batches_per_epoch {
                 env.trace.set_round(m);
@@ -105,7 +105,7 @@ impl Strategy for Spirt {
                     dropped_done = dropped_done.max(end);
                     continue;
                 }
-                arrivals.push((env.workers[w].clock, m, inv, g.grad));
+                arrivals.push(env.workers[w].clock, (m, inv, g.grad));
             }
 
             // Phase B — the worker's single-threaded RedisAI serves the
@@ -115,7 +115,9 @@ impl Strategy for Spirt {
             // fired asynchronously: the function returns after its TENSORSET
             // acks; the database chews through the accumulation chain in the
             // background and the *epoch* waits for it, not the functions.
-            arrivals.sort_by(|a, b| a.0.cmp(&b.0));
+            // Popping the event queue yields arrivals earliest-first with
+            // FIFO ties (minibatch order) — the same order the stable sort
+            // on arrival time produced, bit for bit.
             if arrivals.is_empty() {
                 // Every minibatch gradient was dropped: seed an empty sum so
                 // the averaging/update stages still run (a zero update).
@@ -133,7 +135,8 @@ impl Strategy for Spirt {
             // records as explicit edges so the critical path can follow the
             // chain even though worker clocks reset per minibatch.
             let mut prev_acc: Option<u64> = None;
-            for (i, (arrive, m, inv, grad)) in arrivals.into_iter().enumerate() {
+            let mut i = 0usize;
+            while let Some((arrive, (m, inv, grad))) = arrivals.pop() {
                 env.trace.set_round(m);
                 let gbytes = if traced { grad.nbytes() } else { 0 };
                 let gkey = format!("g/e{epoch}/m{m}");
@@ -163,6 +166,7 @@ impl Strategy for Spirt {
                 env.stages.add(Stage::Synchronize, self.kind().batch_overhead());
                 env.lambda.finish_invocation(inv, end, alloc_mb, &mut env.ledger);
                 fn_done = fn_done.max(end);
+                i += 1;
             }
             // Worker resumes when all minibatch functions *and* the in-DB
             // accumulation chain are done.
@@ -217,6 +221,10 @@ impl Strategy for Spirt {
         for w in 0..w_count {
             env.timeline(w).poll(&topic, wait_count)?;
         }
+        // Every worker has observed the quorum; the per-epoch topic's
+        // messages are dead weight from here on (topic names are unique per
+        // epoch, so without this the queue grows by W messages every epoch).
+        env.queues.drop_topic(&topic);
 
         let avg_key = format!("avg/e{epoch}");
         for w in 0..w_count {

@@ -438,6 +438,27 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "sweep-scale run (MLLess is O(W^2) store ops per round); run explicitly"]
+    fn sweep_completes_at_1024_workers() {
+        // The store-tier axis at the scale-sweep's extended worker range:
+        // the event-queue core + history pruning must carry a W=1024 MLLess
+        // epoch through both a single store and a sharded tier.
+        let cfg = ShardSweepConfig {
+            shard_counts: vec![1, 8],
+            replications: vec![1],
+            worker_counts: vec![1024],
+            batches_per_epoch: 1,
+            threads: 0,
+            ..ShardSweepConfig::default()
+        };
+        let points = run(&cfg).unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.epoch_secs > 0.0 && p.store_requests > 0));
+        let get = |s: usize| points.iter().find(|p| p.shards == s).unwrap();
+        assert!(get(8).queue_wait_secs < get(1).queue_wait_secs);
+    }
+
+    #[test]
     fn sweep_is_deterministic_across_thread_counts() {
         let mut serial = small_cfg();
         serial.threads = 1;

@@ -9,7 +9,7 @@
 //! slsgpu exp spirt-indb [--real]             # §4.2 in-DB vs naive
 //! slsgpu exp table3 [--model mobilenet_s] [--epochs 20] [--csv out.csv]
 //! slsgpu fault-tolerance [--arch mobilenet] [--workers 4] [--epochs 3]
-//! slsgpu scale-sweep [--workers 4,16,64,256] [--modes bsp,async:2]
+//! slsgpu scale-sweep [--workers 4,16,64,256] [--modes bsp,async:2]  # up to 4096 workers
 //!                    [--arch mobilenet] [--batches 24] [--epochs 1]
 //!                    [--threads 0] [--csv out.csv] [--trace]  # 5 archs × W × mode
 //!                    [--shards 1] [--replication 1]  # store tier, fixed per sweep

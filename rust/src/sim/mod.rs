@@ -9,9 +9,11 @@
 //! bit-for-bit reproducible.
 
 pub mod resource;
+pub mod sched;
 pub mod vtime;
 
 pub use resource::{Resource, Served};
+pub use sched::{EventQueue, OrderLog};
 pub use vtime::VTime;
 
 /// Advance all clocks to the max (a synchronization barrier). Returns the

@@ -130,6 +130,29 @@ impl Resource {
         self.busy_time = 0.0;
         self.requests = 0;
     }
+
+    /// Drop busy intervals that ended at or before `before`.
+    ///
+    /// Semantics-preserving for any caller whose future arrivals are all
+    /// `>= before`: `earliest_on` never consults an interval ending at or
+    /// before the arrival (it "can neither host the request nor push it
+    /// later"), so pruning them changes no placement — it only bounds the
+    /// history's memory. `ClusterEnv` calls this at epoch boundaries with
+    /// the minimum worker clock as the watermark (clocks never rewind past
+    /// an epoch boundary), which is what keeps a 4096-worker ScatterReduce
+    /// sweep — hundreds of millions of store requests — in bounded memory.
+    /// Accumulated `busy_time`/`requests` stats are untouched.
+    pub fn release(&mut self, before: VTime) {
+        for s in &mut self.servers {
+            s.retain(|_, end| *end > before);
+        }
+    }
+
+    /// Busy intervals currently retained across all servers (memory gauge;
+    /// `release` exists to keep this bounded per epoch).
+    pub fn retained_intervals(&self) -> usize {
+        self.servers.iter().map(|s| s.len()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +253,49 @@ mod tests {
         let round_robin: Vec<(usize, f64)> =
             (0..4).flat_map(|i| (0..4).map(move |w| (w, i as f64))).collect();
         assert_eq!(issue(&worker_major), issue(&round_robin));
+    }
+
+    #[test]
+    fn release_preserves_placements_for_future_arrivals() {
+        // Two identical resources, one pruned at a watermark: every request
+        // arriving at or after the watermark must land bit-identically.
+        let mut full = Resource::new("x", 2);
+        let mut pruned = Resource::new("x", 2);
+        for i in 0..200 {
+            let arr = VTime::from_secs((i % 50) as f64);
+            let dur = 0.25 + (i % 4) as f64 * 0.5; // heterogeneous services
+            full.serve(arr, dur);
+            pruned.serve(arr, dur);
+        }
+        let watermark = VTime::from_secs(60.0);
+        pruned.release(watermark);
+        assert!(pruned.retained_intervals() < full.retained_intervals());
+        for i in 0..100 {
+            let arr = watermark + (i % 7) as f64;
+            let dur = 0.1 + (i % 3) as f64;
+            let a = full.serve(arr, dur);
+            let b = pruned.serve(arr, dur);
+            assert_eq!(a.start.to_bits(), b.start.to_bits(), "req {i} start");
+            assert_eq!(a.end.to_bits(), b.end.to_bits(), "req {i} end");
+        }
+    }
+
+    #[test]
+    fn release_keeps_intervals_straddling_the_watermark() {
+        // An interval that started before but ends after the watermark is
+        // still load: it must survive and still push later arrivals.
+        let mut r = Resource::new("x", 1);
+        r.serve(VTime::ZERO, 10.0); // [0, 10)
+        r.release(VTime::from_secs(5.0));
+        assert_eq!(r.retained_intervals(), 1);
+        let s = r.serve(VTime::from_secs(5.0), 1.0);
+        assert_eq!(s.start.secs(), 10.0, "straddling interval still queues");
+        // Pruning exactly at an interval end drops it (end <= watermark can
+        // neither host nor push a request arriving at the watermark).
+        r.release(VTime::from_secs(11.0));
+        assert_eq!(r.retained_intervals(), 0);
+        assert_eq!(r.requests(), 2, "stats survive pruning");
+        assert_eq!(r.busy_time(), 11.0);
     }
 
     #[test]

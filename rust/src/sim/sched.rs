@@ -1,0 +1,276 @@
+//! Discrete-event scheduling primitives: the event-queue core.
+//!
+//! The simulator is analytic — every substrate op computes its completion
+//! time in closed form — but the *coordination* layer still has to resolve
+//! waits: "which k of these n contributions land first" (quorum gathers),
+//! "when is the k-th message visible" (queue polls), "process completions
+//! in arrival order" (SPIRT's minibatch fan-in). Before this module those
+//! resolutions re-sorted full vectors per call, which is what made
+//! 1024–4096-worker rounds cost O(W² log W) host work. The two structures
+//! here make them O(log W) per event without moving a single bit of
+//! virtual time:
+//!
+//! * [`EventQueue`] — a deterministic min-heap of `(VTime, seq, payload)`
+//!   events. Ties at equal `VTime` pop in **insertion order** (the `seq`
+//!   counter), so a caller that pushes events in its tie-break order gets
+//!   exactly the order a stable sort of `(VTime, push index)` would
+//!   produce. `coordinator::protocol::quorum_subset` pushes candidates in
+//!   rotated-index order and pops the quorum; `coordinator::spirt` pushes
+//!   minibatch completions and pops them in completion order.
+//! * [`OrderLog`] — an incrementally maintained sorted multiset of
+//!   `VTime`s with O(log n) rank queries. `cloud::queue` keeps one per
+//!   topic so `kth_visible` (the MLLess supervisor wait and every queue
+//!   poll) stops re-sorting the topic's full visibility vector per call.
+//!
+//! Both are *order-isomorphic* to the sort-based code they replace — the
+//! unit tests pin the pop/rank sequences bit-for-bit against sort
+//! references over adversarial tie patterns — which is what lets the
+//! determinism suite demand bit-identical vtime/cost/trace output on the
+//! new core.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::VTime;
+
+/// One pending event: fires at `at`; `seq` breaks ties FIFO.
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    at: VTime,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest event
+        // (and, at equal times, the earliest-pushed) on top.
+        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event priority queue.
+///
+/// `pop` yields events in `(VTime, insertion order)` — identical to
+/// stable-sorting the pushed `(at, payload)` pairs by `at`. The insertion
+/// counter is queue-local, so draining and reusing a queue never leaks
+/// ordering state between rounds.
+#[derive(Debug, Clone, Default)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    next_seq: u64,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    pub fn with_capacity(n: usize) -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::with_capacity(n), next_seq: 0 }
+    }
+
+    /// Schedule `payload` at `at`. Events pushed at the same `VTime` pop
+    /// in push order.
+    pub fn push(&mut self, at: VTime, payload: T) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { at, seq, payload });
+    }
+
+    /// Remove and return the earliest event.
+    pub fn pop(&mut self) -> Option<(VTime, T)> {
+        self.heap.pop().map(|e| (e.at, e.payload))
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<VTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain every pending event in firing order.
+    pub fn drain_ordered(&mut self) -> Vec<(VTime, T)> {
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(e) = self.pop() {
+            out.push(e);
+        }
+        out
+    }
+}
+
+/// Incrementally sorted multiset of `VTime`s with O(log n) rank queries.
+///
+/// `insert` places the value *after* any equal elements (binary search on
+/// `partition_point`), so the stored order is exactly what a stable sort
+/// of the insertion sequence would produce — and `kth(k)` is exactly the
+/// value `sorted[k-1]` the old sort-per-call code computed.
+#[derive(Debug, Clone, Default)]
+pub struct OrderLog {
+    sorted: Vec<VTime>,
+}
+
+impl OrderLog {
+    pub fn new() -> OrderLog {
+        OrderLog { sorted: Vec::new() }
+    }
+
+    pub fn insert(&mut self, t: VTime) {
+        let idx = self.sorted.partition_point(|&x| x <= t);
+        self.sorted.insert(idx, t);
+    }
+
+    /// 1-based order statistic: the k-th smallest recorded value.
+    pub fn kth(&self, k: usize) -> Option<VTime> {
+        if k == 0 {
+            return None;
+        }
+        self.sorted.get(k - 1).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.sorted.clear();
+    }
+
+    /// Rebuild from an unsorted iterator (used after a queue drain removes
+    /// an arbitrary subset of messages).
+    pub fn rebuild(&mut self, times: impl Iterator<Item = VTime>) {
+        self.sorted.clear();
+        self.sorted.extend(times);
+        self.sorted.sort();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random times on a coarse grid so ties are
+    /// frequent (the interesting case for tie-break rules).
+    fn grid_times(seed: u64, n: usize) -> Vec<VTime> {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                VTime::from_secs((state >> 59) as f64) // 0..=31, heavy ties
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pop_order_matches_stable_sort_bit_for_bit() {
+        for seed in 1..=20u64 {
+            let times = grid_times(seed, 97);
+            let mut q = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.push(t, i);
+            }
+            // Reference: the sort-based resolution this queue replaces.
+            let mut reference: Vec<(VTime, usize)> =
+                times.iter().copied().zip(0..times.len()).collect();
+            reference.sort_by(|a, b| a.0.cmp(&b.0)); // stable: ties keep push order
+            let drained = q.drain_ordered();
+            assert_eq!(drained.len(), reference.len());
+            for ((ta, pa), (tb, pb)) in drained.iter().zip(&reference) {
+                assert_eq!(ta.to_bits(), tb.to_bits(), "seed {seed}: time bits");
+                assert_eq!(pa, pb, "seed {seed}: tie-break must be FIFO");
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_is_still_earliest_first() {
+        let mut q = EventQueue::new();
+        q.push(VTime::from_secs(5.0), "late");
+        q.push(VTime::from_secs(1.0), "early");
+        assert_eq!(q.peek_time(), Some(VTime::from_secs(1.0)));
+        assert_eq!(q.pop().unwrap().1, "early");
+        q.push(VTime::from_secs(0.5), "earlier still");
+        assert_eq!(q.pop().unwrap().1, "earlier still");
+        assert_eq!(q.pop().unwrap().1, "late");
+        assert!(q.pop().is_none() && q.is_empty());
+    }
+
+    #[test]
+    fn fifo_ties_survive_reuse_across_rounds() {
+        // Draining must reset nothing that would perturb the next round's
+        // tie-break: two identical rounds pop identically.
+        let mut q = EventQueue::new();
+        let round = |q: &mut EventQueue<usize>| {
+            for i in 0..8 {
+                q.push(VTime::from_secs(2.0), i);
+            }
+            q.drain_ordered().into_iter().map(|(_, i)| i).collect::<Vec<_>>()
+        };
+        assert_eq!(round(&mut q), round(&mut q));
+        assert_eq!(round(&mut q), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn order_log_kth_matches_sort_reference() {
+        for seed in 1..=20u64 {
+            let times = grid_times(seed.wrapping_add(100), 61);
+            let mut log = OrderLog::new();
+            let mut reference: Vec<VTime> = Vec::new();
+            for &t in &times {
+                log.insert(t);
+                reference.push(t);
+                let mut sorted = reference.clone();
+                sorted.sort();
+                for k in 1..=reference.len() {
+                    assert_eq!(
+                        log.kth(k).unwrap().to_bits(),
+                        sorted[k - 1].to_bits(),
+                        "seed {seed}: k={k} of {}",
+                        reference.len()
+                    );
+                }
+            }
+        }
+        assert_eq!(OrderLog::new().kth(0), None);
+        assert_eq!(OrderLog::new().kth(1), None);
+    }
+
+    #[test]
+    fn order_log_rebuild_matches_fresh_inserts() {
+        let times = grid_times(7, 33);
+        let mut incremental = OrderLog::new();
+        for &t in &times {
+            incremental.insert(t);
+        }
+        let mut rebuilt = OrderLog::new();
+        rebuilt.rebuild(times.iter().copied());
+        assert_eq!(incremental.len(), rebuilt.len());
+        for k in 1..=times.len() {
+            assert_eq!(incremental.kth(k).unwrap().to_bits(), rebuilt.kth(k).unwrap().to_bits());
+        }
+    }
+}

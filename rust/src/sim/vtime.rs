@@ -23,6 +23,13 @@ impl VTime {
         self.0
     }
 
+    /// Raw IEEE-754 bits of the underlying seconds value. Bit-identity
+    /// assertions (determinism suite, event-queue reference tests) compare
+    /// these instead of going through `secs().to_bits()` at every call site.
+    pub fn to_bits(self) -> u64 {
+        self.0.to_bits()
+    }
+
     pub fn minutes(self) -> f64 {
         self.0 / 60.0
     }

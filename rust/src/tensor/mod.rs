@@ -16,7 +16,7 @@ pub mod slab;
 pub use chunk::ChunkPlan;
 pub use robust::AggregationRule;
 pub use significance::SignificanceFilter;
-pub use slab::Slab;
+pub use slab::{Slab, KERNEL_CHUNK};
 
 use anyhow::Result;
 
@@ -40,29 +40,26 @@ pub trait SlabMath: Send + Sync {
 #[derive(Debug, Default, Clone, Copy)]
 pub struct RustMath;
 
+// All four ops lower onto the one-pass chunked constructors in `slab` —
+// the old `clone` + in-place form copied the source buffer and then swept
+// it again read-modify-write; `axpy_new`/`scale_new` write each output
+// element once and are bit-identical to the old results (pinned by the
+// slab kernel tests and `fused_ops_match_clone_then_mutate` below).
 impl SlabMath for RustMath {
     fn acc(&self, acc: &Slab, g: &Slab, w: f32) -> Result<Slab> {
-        let mut out = acc.clone();
-        out.axpy(g, w)?;
-        Ok(out)
+        Slab::axpy_new(acc, g, w)
     }
 
     fn avg_update(&self, theta: &Slab, gsum: &Slab, inv_k: f32, lr: f32) -> Result<Slab> {
-        let mut out = theta.clone();
-        out.axpy(gsum, -lr * inv_k)?;
-        Ok(out)
+        Slab::axpy_new(theta, gsum, -lr * inv_k)
     }
 
     fn sgd(&self, theta: &Slab, g: &Slab, lr: f32) -> Result<Slab> {
-        let mut out = theta.clone();
-        out.axpy(g, -lr)?;
-        Ok(out)
+        Slab::axpy_new(theta, g, -lr)
     }
 
     fn scale(&self, src: &Slab, w: f32) -> Result<Slab> {
-        let mut out = src.clone();
-        out.scale(w);
-        Ok(out)
+        Ok(Slab::scale_new(src, w))
     }
 }
 
@@ -101,5 +98,41 @@ mod math_tests {
         let out = m.acc(&Slab::virtual_of(8), &Slab::virtual_of(8), 1.0).unwrap();
         assert_eq!(out.len(), 8);
         assert!(!out.is_real());
+    }
+
+    #[test]
+    fn fused_ops_match_clone_then_mutate() {
+        // The pre-fusion reference: clone + in-place op, bit for bit.
+        let m = RustMath;
+        let theta = Slab::from_vec((0..9000).map(|i| (i as f32).sin()).collect());
+        let g = Slab::from_vec((0..9000).map(|i| (i as f32).cos()).collect());
+        let cases: Vec<(Slab, Slab)> = vec![
+            (m.acc(&theta, &g, 0.7).unwrap(), {
+                let mut r = theta.share();
+                r.axpy(&g, 0.7).unwrap();
+                r
+            }),
+            (m.avg_update(&theta, &g, 0.25, 0.1).unwrap(), {
+                let mut r = theta.share();
+                r.axpy(&g, -0.1 * 0.25).unwrap();
+                r
+            }),
+            (m.sgd(&theta, &g, 0.3).unwrap(), {
+                let mut r = theta.share();
+                r.axpy(&g, -0.3).unwrap();
+                r
+            }),
+            (m.scale(&g, -2.5).unwrap(), {
+                let mut r = g.share();
+                r.scale(-2.5);
+                r
+            }),
+        ];
+        for (got, want) in &cases {
+            let got: Vec<u32> = got.as_slice().unwrap().iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> =
+                want.as_slice().unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want);
+        }
     }
 }

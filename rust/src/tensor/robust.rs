@@ -86,14 +86,22 @@ fn check(slabs: &[Slab]) -> Result<(usize, bool)> {
     Ok((len, slabs.iter().all(|s| s.is_real())))
 }
 
-/// Median of a sorted-in-place value list (mean of middles for even k).
+/// Median via selection (`select_nth_unstable`), reordering `values` in
+/// place: O(k) instead of the full O(k log k) sort the old implementation
+/// paid per call — and `coordinate_median` calls this once *per parameter*.
+/// The median is a function of the value multiset only, so selection
+/// returns exactly the values the sort-based version produced (mean of the
+/// two middles for even k).
 fn median_of(values: &mut [f64]) -> f64 {
-    values.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
     let k = values.len();
+    let (lo, mid, _) = values.select_nth_unstable_by(k / 2, f64::total_cmp);
+    let hi = *mid;
     if k % 2 == 1 {
-        values[k / 2]
+        hi
     } else {
-        0.5 * (values[k / 2 - 1] + values[k / 2])
+        // The k/2-1'th order statistic is the max of the left partition.
+        let lo_max = lo.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        0.5 * (lo_max + hi)
     }
 }
 
@@ -108,12 +116,31 @@ pub fn clipped_mean(slabs: &[Slab], ratio: f64) -> Result<Slab> {
     let mut sorted = norms.clone();
     let clip = ratio * median_of(&mut sorted);
     let inv_k = 1.0 / slabs.len() as f32;
-    let mut acc = Slab::zeros(len);
-    for (s, norm) in slabs.iter().zip(norms.iter()) {
-        let w = if *norm > clip && *norm > 0.0 { (clip / norm) as f32 } else { 1.0 };
-        acc.axpy(s, w * inv_k)?;
+    let weights: Vec<f32> = norms
+        .iter()
+        .map(|norm| {
+            let w = if *norm > clip && *norm > 0.0 { (clip / norm) as f32 } else { 1.0 };
+            w * inv_k
+        })
+        .collect();
+    // Single blocked pass (same shape as `Slab::mean`): per output element
+    // the weighted adds still run in slab order with the old `+= w * y`
+    // expression, so the result is bit-identical to the k-sweep `axpy` form
+    // it replaces while touching each gradient block once, cache-resident.
+    let views: Vec<&[f32]> = slabs.iter().map(|s| s.as_slice()).collect::<Result<_>>()?;
+    let mut out = vec![0.0f32; len];
+    let mut start = 0;
+    while start < len {
+        let end = (start + super::KERNEL_CHUNK).min(len);
+        let ob = &mut out[start..end];
+        for (v, w) in views.iter().zip(weights.iter()) {
+            for (x, y) in ob.iter_mut().zip(v[start..end].iter()) {
+                *x += *w * *y;
+            }
+        }
+        start = end;
     }
-    Ok(acc)
+    Ok(Slab::from_vec(out))
 }
 
 /// Coordinate-wise median across `slabs`. Virtual if any input is.
@@ -215,5 +242,64 @@ mod tests {
     fn mismatched_lengths_error() {
         assert!(coordinate_median(&[slab(&[1.0]), slab(&[1.0, 2.0])]).is_err());
         assert!(clipped_mean(&[], 1.0).is_err());
+    }
+
+    fn noise(seed: u64, len: usize) -> Vec<f32> {
+        let mut state = seed;
+        (0..len)
+            .map(|_| {
+                state = state
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((state >> 40) as f32) / (1u64 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn selection_median_matches_sort_reference() {
+        // Value-identity against the old sort-based median, odd and even k,
+        // with duplicate values in the mix.
+        for k in 1..=9usize {
+            let mut vals: Vec<f64> =
+                noise(77 + k as u64, k).into_iter().map(|x| (x * 8.0).round()).collect();
+            let mut sorted = vals.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let reference = if k % 2 == 1 {
+                sorted[k / 2]
+            } else {
+                0.5 * (sorted[k / 2 - 1] + sorted[k / 2])
+            };
+            assert_eq!(median_of(&mut vals).to_bits(), reference.to_bits(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn blocked_clipped_mean_is_bit_identical_to_axpy_sweeps() {
+        // Multi-chunk inputs with one outlier so the clip path is active.
+        let len = 2 * super::super::KERNEL_CHUNK + 9;
+        let mut slabs: Vec<Slab> = (0..4).map(|i| Slab::from_vec(noise(i, len))).collect();
+        let mut big = noise(99, len);
+        for x in &mut big {
+            *x *= 50.0;
+        }
+        slabs.push(Slab::from_vec(big));
+
+        // Reference: the pre-blocking implementation — per-slab axpy sweeps.
+        let norms: Vec<f64> = slabs.iter().map(|s| s.l2_norm_sq().sqrt()).collect();
+        let mut sorted = norms.clone();
+        let clip = 1.0 * median_of(&mut sorted);
+        let inv_k = 1.0 / slabs.len() as f32;
+        let mut reference = Slab::zeros(len);
+        for (s, norm) in slabs.iter().zip(norms.iter()) {
+            let w = if *norm > clip && *norm > 0.0 { (clip / norm) as f32 } else { 1.0 };
+            reference.axpy(s, w * inv_k).unwrap();
+        }
+
+        let got = clipped_mean(&slabs, 1.0).unwrap();
+        let gb: Vec<u32> = got.as_slice().unwrap().iter().map(|x| x.to_bits()).collect();
+        let rb: Vec<u32> =
+            reference.as_slice().unwrap().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, rb);
     }
 }

@@ -10,6 +10,26 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+/// Block length for the chunked element-wise kernels below.
+///
+/// The contract (see DESIGN.md "Chunked tensor kernels"):
+///
+/// * Element-wise ops (`axpy`, `scale`, `sgd`, `mean`, the `axpy_new` /
+///   `scale_new` constructors) are **bit-identical** to the unchunked loops
+///   they replaced — chunking only re-blocks the iteration, each element
+///   still sees exactly the same sequence of operations.
+/// * Chunked *reductions* (`l2_norm_sq`) sum per-chunk partials instead of
+///   one long serial chain. That is bit-identical for slabs up to one chunk
+///   (the unit-test regime) and exact on integer-valued data, but may differ
+///   in the last ulp from the serial sum on general data longer than a
+///   chunk — callers that need the old bits must not exceed `KERNEL_CHUNK`.
+///
+/// 4096 f32 lanes = 16 KiB per operand block: two operands stay resident in
+/// a 32 KiB L1 slice, and the fixed trip count lets the autovectorizer emit
+/// clean SIMD bodies (see the Pallas guide's tiling discussion — same idea,
+/// CPU-sized).
+pub const KERNEL_CHUNK: usize = 4096;
+
 /// A flat f32 tensor slab.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Slab {
@@ -85,12 +105,15 @@ impl Slab {
 
     /// `self += w * g` — the aggregation primitive (pure-Rust path, used by
     /// the "naive" baselines; the in-database path runs the PJRT kernel).
+    /// Chunk-blocked, bit-identical to the plain loop (see [`KERNEL_CHUNK`]).
     pub fn axpy(&mut self, g: &Slab, w: f32) -> Result<()> {
         self.check_len(g)?;
         if let (Slab::Real(a), Slab::Real(b)) = (&mut *self, g) {
             let a = Arc::make_mut(a);
-            for (x, y) in a.iter_mut().zip(b.iter()) {
-                *x += w * *y;
+            for (ac, bc) in a.chunks_mut(KERNEL_CHUNK).zip(b.chunks(KERNEL_CHUNK)) {
+                for (x, y) in ac.iter_mut().zip(bc.iter()) {
+                    *x += w * *y;
+                }
             }
         }
         Ok(())
@@ -99,8 +122,10 @@ impl Slab {
     /// `self *= s`.
     pub fn scale(&mut self, s: f32) {
         if let Slab::Real(v) = self {
-            for x in Arc::make_mut(v).iter_mut() {
-                *x *= s;
+            for c in Arc::make_mut(v).chunks_mut(KERNEL_CHUNK) {
+                for x in c.iter_mut() {
+                    *x *= s;
+                }
             }
         }
     }
@@ -110,14 +135,63 @@ impl Slab {
         self.axpy(g, -lr)
     }
 
+    /// Sum of squares, accumulated per [`KERNEL_CHUNK`] block. Breaking the
+    /// one long serial add chain into per-chunk partials is what lets the
+    /// reduction vectorize; the bit-level contract is documented on
+    /// [`KERNEL_CHUNK`] (identical ≤ one chunk, exact on integer data).
     pub fn l2_norm_sq(&self) -> f64 {
         match self {
-            Slab::Real(v) => v.iter().map(|x| (*x as f64) * (*x as f64)).sum(),
+            Slab::Real(v) => v
+                .chunks(KERNEL_CHUNK)
+                .map(|c| c.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>())
+                .sum(),
             Slab::Virtual { .. } => 0.0,
         }
     }
 
+    /// `a + w * b` as a fresh slab, built in one pass. This is the kernel
+    /// behind [`crate::tensor::RustMath`]'s `acc`/`sgd`/`avg_update`: the
+    /// old `clone` + `axpy` form memcpy'd the source and then re-walked it
+    /// read-modify-write; this writes each output element once. Matches
+    /// `clone`+`axpy` exactly — same length check, same `*a + w * *b`
+    /// element expression, and the result is a shared handle to `a` unless
+    /// both operands are real.
+    pub fn axpy_new(a: &Slab, b: &Slab, w: f32) -> Result<Slab> {
+        a.check_len(b)?;
+        if let (Slab::Real(x), Slab::Real(y)) = (a, b) {
+            let mut out = Vec::with_capacity(x.len());
+            for (xc, yc) in x.chunks(KERNEL_CHUNK).zip(y.chunks(KERNEL_CHUNK)) {
+                out.extend(xc.iter().zip(yc.iter()).map(|(p, q)| *p + w * *q));
+            }
+            Ok(Slab::Real(Arc::new(out)))
+        } else {
+            Ok(a.share())
+        }
+    }
+
+    /// `w * src` as a fresh slab, built in one pass (the single-source
+    /// counterpart of [`Slab::axpy_new`]; bit-identical to `clone`+`scale`).
+    pub fn scale_new(src: &Slab, w: f32) -> Slab {
+        match src {
+            Slab::Real(v) => {
+                let mut out = Vec::with_capacity(v.len());
+                for c in v.chunks(KERNEL_CHUNK) {
+                    out.extend(c.iter().map(|x| *x * w));
+                }
+                Slab::Real(Arc::new(out))
+            }
+            Slab::Virtual { len } => Slab::Virtual { len: *len },
+        }
+    }
+
     /// Mean of `k` slabs (all must be same length). Virtual if any input is.
+    ///
+    /// Single blocked pass: each [`KERNEL_CHUNK`]-sized block of the output
+    /// accumulates every input's matching block while it is cache-resident,
+    /// instead of the old `k` full-length `axpy` sweeps (k × 100 MB of
+    /// traffic per aggregation at paper scale). Per element the adds still
+    /// run in slab order with the same `+= w * y` expression, so the result
+    /// is bit-identical to the multi-pass form.
     pub fn mean(slabs: &[Slab]) -> Result<Slab> {
         if slabs.is_empty() {
             bail!("mean of zero slabs");
@@ -129,12 +203,21 @@ impl Slab {
         if slabs.iter().any(|s| !s.is_real()) {
             return Ok(Slab::Virtual { len });
         }
-        let mut acc = Slab::zeros(len);
+        let views: Vec<&[f32]> = slabs.iter().map(|s| s.as_slice()).collect::<Result<_>>()?;
         let w = 1.0 / slabs.len() as f32;
-        for s in slabs {
-            acc.axpy(s, w)?;
+        let mut out = vec![0.0f32; len];
+        let mut start = 0;
+        while start < len {
+            let end = (start + KERNEL_CHUNK).min(len);
+            let ob = &mut out[start..end];
+            for v in &views {
+                for (x, y) in ob.iter_mut().zip(v[start..end].iter()) {
+                    *x += w * *y;
+                }
+            }
+            start = end;
         }
-        Ok(acc)
+        Ok(Slab::Real(Arc::new(out)))
     }
 }
 
@@ -224,5 +307,105 @@ mod tests {
         b.axpy(&a, 1.0).unwrap();
         assert_eq!(b.as_slice().unwrap(), &[2.0, -4.0]);
         assert_eq!(a.as_slice().unwrap(), &[1.0, -2.0]);
+    }
+
+    // ---- chunked-kernel bit-equality pins --------------------------------
+    // Each test compares a chunked kernel against the plain unchunked loop
+    // it replaced, bit for bit, on data spanning several KERNEL_CHUNK blocks
+    // plus a ragged tail. These are the regression anchors for the contract
+    // documented on KERNEL_CHUNK.
+
+    /// Deterministic quasi-random f32s (LCG), length deliberately not a
+    /// multiple of KERNEL_CHUNK so the remainder path is exercised.
+    fn noise(seed: u64, len: usize) -> Vec<f32> {
+        let mut state = seed;
+        (0..len)
+            .map(|_| {
+                state = state
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((state >> 40) as f32) / (1u64 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    const PIN_LEN: usize = 3 * KERNEL_CHUNK + 17;
+
+    #[test]
+    fn chunked_axpy_is_bit_identical_to_plain_loop() {
+        let a0 = noise(1, PIN_LEN);
+        let b0 = noise(2, PIN_LEN);
+        let mut reference = a0.clone();
+        for (x, y) in reference.iter_mut().zip(b0.iter()) {
+            *x += 0.37 * *y;
+        }
+        let mut a = Slab::from_vec(a0);
+        a.axpy(&Slab::from_vec(b0), 0.37).unwrap();
+        assert_eq!(bits(a.as_slice().unwrap()), bits(&reference));
+    }
+
+    #[test]
+    fn chunked_scale_is_bit_identical_to_plain_loop() {
+        let v0 = noise(3, PIN_LEN);
+        let reference: Vec<f32> = v0.iter().map(|x| *x * -1.9).collect();
+        let mut s = Slab::from_vec(v0.clone());
+        s.scale(-1.9);
+        assert_eq!(bits(s.as_slice().unwrap()), bits(&reference));
+        // The one-pass constructor agrees with the in-place kernel.
+        let fresh = Slab::scale_new(&Slab::from_vec(v0), -1.9);
+        assert_eq!(bits(fresh.as_slice().unwrap()), bits(&reference));
+    }
+
+    #[test]
+    fn axpy_new_is_bit_identical_to_clone_then_axpy() {
+        let a = Slab::from_vec(noise(4, PIN_LEN));
+        let b = Slab::from_vec(noise(5, PIN_LEN));
+        let mut reference = a.share();
+        reference.axpy(&b, -0.125).unwrap();
+        let fused = Slab::axpy_new(&a, &b, -0.125).unwrap();
+        assert_eq!(bits(fused.as_slice().unwrap()), bits(reference.as_slice().unwrap()));
+        // Mixed real/virtual operands keep the clone+axpy semantics.
+        assert!(Slab::axpy_new(&a, &Slab::virtual_of(PIN_LEN), 1.0).unwrap().is_real());
+        assert!(!Slab::axpy_new(&Slab::virtual_of(PIN_LEN), &b, 1.0).unwrap().is_real());
+        assert!(Slab::axpy_new(&a, &Slab::virtual_of(7), 1.0).is_err());
+    }
+
+    #[test]
+    fn single_pass_mean_is_bit_identical_to_axpy_sweeps() {
+        let slabs: Vec<Slab> =
+            (0..5).map(|i| Slab::from_vec(noise(10 + i, PIN_LEN))).collect();
+        // Reference: the old multi-pass form — zeros, then one full-length
+        // axpy per slab.
+        let mut reference = Slab::zeros(PIN_LEN);
+        let w = 1.0 / slabs.len() as f32;
+        for s in &slabs {
+            reference.axpy(s, w).unwrap();
+        }
+        let got = Slab::mean(&slabs).unwrap();
+        assert_eq!(bits(got.as_slice().unwrap()), bits(reference.as_slice().unwrap()));
+    }
+
+    #[test]
+    fn l2_norm_sq_keeps_old_bits_within_one_chunk() {
+        // ≤ KERNEL_CHUNK elements: one partial == the old serial chain.
+        let v = noise(6, KERNEL_CHUNK);
+        let serial: f64 = v.iter().map(|x| (*x as f64) * (*x as f64)).sum();
+        assert_eq!(Slab::from_vec(v).l2_norm_sq().to_bits(), serial.to_bits());
+    }
+
+    #[test]
+    fn l2_norm_sq_is_exact_on_integer_data_across_chunks() {
+        // Integer-valued f32s: every partial and the final sum are exact, so
+        // chunked == serial == the closed form regardless of association.
+        let v: Vec<f32> = (0..PIN_LEN).map(|i| ((i % 7) as f32) - 3.0).collect();
+        let serial: f64 = v.iter().map(|x| (*x as f64) * (*x as f64)).sum();
+        let expected: f64 = v.iter().map(|x| (*x * *x) as f64).sum();
+        let got = Slab::from_vec(v).l2_norm_sq();
+        assert_eq!(got.to_bits(), serial.to_bits());
+        assert_eq!(got, expected);
     }
 }

@@ -198,6 +198,32 @@ fn tracing_on_is_bit_identical_to_tracing_off() {
 }
 
 #[test]
+fn event_queue_core_matches_stepped_semantics_across_the_matrix() {
+    // The scheduler core resolves waits through `sim::{EventQueue,
+    // OrderLog}` (heap pops and rank lookups) where the seed implementation
+    // stepped/re-sorted per op. Equivalence to the stepped core is pinned
+    // piecewise at the unit level (sort-reference tests in `sim::sched`,
+    // `coordinator::protocol::quorum_subset`, `cloud::queue`); this test
+    // closes the loop end to end: every cell of the full matrix — all five
+    // architectures × {BSP, bounded-staleness async} × the busy fault plan
+    // × tracing {off, on} — must (a) reproduce vtime/cost bit-for-bit on a
+    // rerun and (b) be unmoved by tracing, i.e. the event core resolves
+    // existing waits without creating or reordering any.
+    let plan = busy_plan();
+    let agg = AggregationRule::ClippedMean { ratio: 1.0 };
+    for mode in [SyncMode::Bsp, SyncMode::Async { staleness: 2 }] {
+        for fw in FrameworkKind::ALL {
+            let off_a = session_traced(fw, &plan, agg, mode, TraceConfig::disabled());
+            let off_b = session_traced(fw, &plan, agg, mode, TraceConfig::disabled());
+            let on = session_traced(fw, &plan, agg, mode, TraceConfig::on());
+            let label = format!("{} {} event-core", fw.name(), mode.label());
+            assert_bit_identical(&off_a, &off_b, &format!("{label} rerun"));
+            assert_bit_identical(&off_a, &on, &format!("{label} traced"));
+        }
+    }
+}
+
+#[test]
 fn faults_change_the_trace_but_only_the_faults() {
     // Sanity check that the fault plan is actually exercised: the faulty
     // trace must differ from the fault-free one for every serverless

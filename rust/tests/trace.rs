@@ -120,6 +120,16 @@ fn two_worker_allreduce_critical_path_by_hand() {
     assert!((sum - p.span_secs()).abs() < 1e-6, "sum {sum} vs span {}", p.span_secs());
     // Compute dominates a 2-worker round.
     assert_eq!(p.kind_secs[0].0, EventKind::Compute);
+
+    // The event-queue scheduler core resolves this run's waits through a
+    // heap instead of per-op scans; the analyzer's walk must not notice:
+    // a second run reproduces the same chain, rendered byte for byte.
+    let again = exp_trace::run_for(&cfg, &[FrameworkKind::AllReduce]).unwrap();
+    assert_eq!(
+        slsgpu::trace::critical_path::describe(p, 16),
+        slsgpu::trace::critical_path::describe(&again[0].paths[0], 16),
+        "critical path must be byte-stable across runs on the event core"
+    );
 }
 
 #[test]
