@@ -1,0 +1,40 @@
+#!/usr/bin/env python3
+"""Regenerate the audit golden files from the fixture mini-repo.
+
+The goldens under ``rust/tests/golden/`` are what `rust/tests/audit.rs`
+compares the Rust auditor's output against; producing them with
+``audit.py`` makes the byte-identity of the two implementations part of
+the test suite rather than a CI-only property.
+
+Usage: ``python3 python/tools/gen_audit_goldens.py``
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import audit  # noqa: E402
+from report_replica import report_json, report_text  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+FIXTURE = os.path.join(REPO, "rust", "tests", "fixtures", "audit")
+GOLDEN = os.path.join(REPO, "rust", "tests", "golden")
+
+
+def main():
+    ws = audit.workspace_from_disk(FIXTURE)
+    result = audit.run(ws)
+    r = audit.render(result)
+    for name, contents in [
+        ("audit_fixture.txt", report_text(r)),
+        ("audit_fixture.json", report_json(r)),
+    ]:
+        path = os.path.join(GOLDEN, name)
+        with open(path, "w", encoding="utf-8", newline="") as f:
+            f.write(contents)
+        print(f"wrote {os.path.relpath(path, REPO)} ({len(contents)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,335 @@
+//! Rule evaluation, `audit:allow` suppression, and the audit result model.
+//!
+//! Allow syntax: a line comment containing the `audit:allow` marker,
+//! immediately followed by the rule name and a reason in parentheses,
+//! separated by a comma. Allows are parsed from the scanner's *comment*
+//! view only, so the marker never fires from a string literal — and note
+//! that writing a literal example of the full syntax in a `rust/src`
+//! comment registers as a real (and then stale) allow, which is why this
+//! paragraph spells it out instead of showing one.
+//!
+//! Placement: trailing on the offending line, or on a comment-only line
+//! directly above, in which case it covers the statement that starts on
+//! the next code line — every following code line up to and including the
+//! first whose trimmed code ends with `;`, `{` or `}`, capped at
+//! [`MAX_ALLOW_SPAN`] lines — so multi-line calls (a trace span split
+//! across arguments) need a single annotation. An allow that suppresses
+//! nothing, names an unknown rule, or carries no reason is itself a
+//! finding (`stale-allow`), and stale-allow findings cannot be allowed.
+
+use std::collections::BTreeMap;
+
+use super::rules::{RuleId, ALL, DATA_MARKER, LINE_RULES, PAGE_MARKER};
+use super::scanner::{scan, ScanLine};
+use super::workspace::Workspace;
+
+/// Longest statement (in lines) a comment-line allow can cover.
+pub const MAX_ALLOW_SPAN: usize = 12;
+
+const ALLOW_MARKER: &str = "audit:allow(";
+
+/// One rule hit, suppressed or not.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: RuleId,
+    pub file: String,
+    /// 1-based line; registration/docs findings anchor to line 1.
+    pub line: usize,
+    pub detail: String,
+    /// `Some(reason)` when an `audit:allow` covers this finding.
+    pub suppressed: Option<String>,
+}
+
+/// One well-formed `audit:allow` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: RuleId,
+    pub file: String,
+    pub line: usize,
+    pub reason: String,
+    pub used: bool,
+}
+
+/// Full audit result: every finding (suppressed and open), every valid
+/// allow, and per-rule scope sizes for the summary table.
+#[derive(Debug, Clone, Default)]
+pub struct Audit {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<Allow>,
+    /// Rule name -> number of files in that rule's scope.
+    pub checked: BTreeMap<&'static str, usize>,
+}
+
+impl Audit {
+    /// Findings not covered by an allow.
+    pub fn open(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_none())
+    }
+
+    /// Number of unsuppressed findings.
+    pub fn open_count(&self) -> usize {
+        self.open().count()
+    }
+
+    /// True when the audit gate passes.
+    pub fn clean(&self) -> bool {
+        self.open_count() == 0
+    }
+}
+
+/// Lines a well-formed allow at `line` (1-based) covers.
+fn coverage(scanned: &[ScanLine], line: usize) -> Vec<usize> {
+    let idx = line - 1;
+    if idx >= scanned.len() {
+        return Vec::new();
+    }
+    if !scanned[idx].code.trim().is_empty() {
+        return vec![line];
+    }
+    let mut out = Vec::new();
+    let end = (idx + 1 + MAX_ALLOW_SPAN).min(scanned.len());
+    for (k, scan_line) in scanned.iter().enumerate().take(end).skip(idx + 1) {
+        let code = scan_line.code.trim();
+        if code.is_empty() {
+            continue;
+        }
+        out.push(k + 1);
+        if matches!(code.chars().last(), Some(';') | Some('{') | Some('}')) {
+            break;
+        }
+    }
+    out
+}
+
+struct ParsedAllow {
+    line: usize,
+    rule: RuleId,
+    reason: String,
+    covers: Vec<usize>,
+    used: bool,
+}
+
+/// Parse every allow in a file; malformed ones become findings directly.
+fn parse_allows(path: &str, scanned: &[ScanLine], findings: &mut Vec<Finding>) -> Vec<ParsedAllow> {
+    let mut allows = Vec::new();
+    for (idx, line) in scanned.iter().enumerate() {
+        let ln = idx + 1;
+        let mut rest = line.comment.as_str();
+        while let Some(at) = rest.find(ALLOW_MARKER) {
+            let after = &rest[at + ALLOW_MARKER.len()..];
+            let Some(close) = after.find(')') else {
+                findings.push(Finding {
+                    rule: RuleId::StaleAllow,
+                    file: path.to_string(),
+                    line: ln,
+                    detail: "malformed audit:allow (missing closing parenthesis)".to_string(),
+                    suppressed: None,
+                });
+                break;
+            };
+            let inner = &after[..close];
+            let (name, reason) = match inner.find(',') {
+                Some(comma) => (inner[..comma].trim(), inner[comma + 1..].trim()),
+                None => (inner.trim(), ""),
+            };
+            match RuleId::from_name(name) {
+                None => findings.push(Finding {
+                    rule: RuleId::StaleAllow,
+                    file: path.to_string(),
+                    line: ln,
+                    detail: format!("audit:allow names unknown rule `{name}`"),
+                    suppressed: None,
+                }),
+                Some(_) if reason.is_empty() => findings.push(Finding {
+                    rule: RuleId::StaleAllow,
+                    file: path.to_string(),
+                    line: ln,
+                    detail: format!("audit:allow({name}) has no justification"),
+                    suppressed: None,
+                }),
+                Some(rule) => allows.push(ParsedAllow {
+                    line: ln,
+                    rule,
+                    reason: reason.to_string(),
+                    covers: coverage(scanned, ln),
+                    used: false,
+                }),
+            }
+            rest = &after[close + 1..];
+        }
+    }
+    allows
+}
+
+/// Cargo.toml target registration (rule 4).
+fn check_registration(ws: &Workspace, findings: &mut Vec<Finding>) -> usize {
+    let mut registered: BTreeMap<&'static str, Vec<String>> = BTreeMap::new();
+    if let Some(cargo) = ws.get("Cargo.toml") {
+        let mut kind: Option<&'static str> = None;
+        let mut name = String::new();
+        for (idx, raw) in cargo.lines().enumerate() {
+            let line = raw.trim();
+            if line.starts_with('[') {
+                kind = match line {
+                    "[[test]]" => Some("test"),
+                    "[[bench]]" => Some("bench"),
+                    "[[example]]" => Some("example"),
+                    _ => None,
+                };
+                name.clear();
+                continue;
+            }
+            let Some(k) = kind else { continue };
+            if let Some(v) = toml_str(line, "name") {
+                name = v.to_string();
+            }
+            if let Some(v) = toml_str(line, "path") {
+                registered.entry(k).or_default().push(v.to_string());
+                if ws.get(v).is_none() {
+                    findings.push(Finding {
+                        rule: RuleId::TargetRegistration,
+                        file: "Cargo.toml".to_string(),
+                        line: idx + 1,
+                        detail: format!("[[{k}]] {name} points at missing {v}"),
+                        suppressed: None,
+                    });
+                }
+            }
+        }
+    }
+    let empty = Vec::new();
+    let mut candidates = 0usize;
+    for (kind, dir) in [("test", "rust/tests"), ("bench", "benches"), ("example", "examples")] {
+        let paths = registered.get(kind).unwrap_or(&empty);
+        for file in ws.direct_rs(dir) {
+            candidates += 1;
+            if !paths.iter().any(|p| p == file) {
+                findings.push(Finding {
+                    rule: RuleId::TargetRegistration,
+                    file: file.to_string(),
+                    line: 1,
+                    detail: format!(
+                        "no [[{kind}]] entry in Cargo.toml (auto-discovery is off: this target never builds)"
+                    ),
+                    suppressed: None,
+                });
+            }
+        }
+    }
+    candidates
+}
+
+/// Parse `key = "value"` from one trimmed Cargo.toml line.
+fn toml_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let rest = line.strip_prefix(key)?.trim_start();
+    let rest = rest.strip_prefix('=')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    rest.split('"').next()
+}
+
+/// Generated-docs markers (rule 6).
+fn check_docs(ws: &Workspace, findings: &mut Vec<Finding>) -> usize {
+    let mut count = 0usize;
+    for path in ws.docs("md") {
+        count += 1;
+        if !ws.get(path).is_some_and(|c| c.contains(PAGE_MARKER)) {
+            findings.push(Finding {
+                rule: RuleId::GeneratedDocs,
+                file: path.to_string(),
+                line: 1,
+                detail: "suite-owned page lacks the generated-file marker".to_string(),
+                suppressed: None,
+            });
+        }
+    }
+    for path in ws.docs("json") {
+        count += 1;
+        if !ws.get(path).is_some_and(|c| c.contains(DATA_MARKER)) {
+            findings.push(Finding {
+                rule: RuleId::GeneratedDocs,
+                file: path.to_string(),
+                line: 1,
+                detail: "suite-owned data file lacks the generated-data marker".to_string(),
+                suppressed: None,
+            });
+        }
+    }
+    count
+}
+
+/// Run every rule over the workspace.
+pub fn run(ws: &Workspace) -> Audit {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut src_files = 0usize;
+    let mut in_scope: BTreeMap<&'static str, usize> = BTreeMap::new();
+
+    for (path, contents) in ws.rust_src() {
+        src_files += 1;
+        let scanned = scan(contents);
+        let mut file_allows = parse_allows(path, &scanned, &mut findings);
+        for rule in LINE_RULES {
+            if !rule.in_scope(path) {
+                continue;
+            }
+            *in_scope.entry(rule.name()).or_insert(0) += 1;
+            for (idx, line) in scanned.iter().enumerate() {
+                let ln = idx + 1;
+                let Some(detail) = rule.match_line(&line.code) else { continue };
+                let suppressed = file_allows
+                    .iter_mut()
+                    .find(|a| a.rule == rule && a.covers.contains(&ln))
+                    .map(|a| {
+                        a.used = true;
+                        a.reason.clone()
+                    });
+                findings.push(Finding {
+                    rule,
+                    file: path.to_string(),
+                    line: ln,
+                    detail,
+                    suppressed,
+                });
+            }
+        }
+        for a in file_allows {
+            if !a.used {
+                findings.push(Finding {
+                    rule: RuleId::StaleAllow,
+                    file: path.to_string(),
+                    line: a.line,
+                    detail: format!("audit:allow({}) suppresses nothing (stale)", a.rule.name()),
+                    suppressed: None,
+                });
+            } else {
+                allows.push(Allow {
+                    rule: a.rule,
+                    file: path.to_string(),
+                    line: a.line,
+                    reason: a.reason,
+                    used: true,
+                });
+            }
+        }
+    }
+
+    let reg_candidates = check_registration(ws, &mut findings);
+    let docs_count = check_docs(ws, &mut findings);
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    allows.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+
+    let mut checked = BTreeMap::new();
+    for rule in ALL {
+        let n = match rule {
+            RuleId::TargetRegistration => reg_candidates,
+            RuleId::GeneratedDocs => docs_count,
+            RuleId::StaleAllow => src_files,
+            _ => in_scope.get(rule.name()).copied().unwrap_or(0),
+        };
+        checked.insert(rule.name(), n);
+    }
+    Audit { findings, allows, checked }
+}

@@ -1,0 +1,49 @@
+//! Repo-native invariant auditor: static analysis over this repository's
+//! own sources, enforcing the contracts every bit-identical result rests
+//! on.
+//!
+//! The auditor is self-contained (no external deps, matching the crate's
+//! zero-dependency default build) and deliberately simple: a
+//! comment/string-aware line [`scanner`], a catalogue of token-level
+//! [`rules`], a whitelist-driven [`workspace`] model of the repo (sources,
+//! Cargo.toml targets, docs tree), an [`engine`] that applies rules and
+//! `audit:allow` suppressions, and a [`report`] layer that renders the
+//! result through the typed `report::` model — so the audit output is as
+//! deterministic as the experiment tables, and CI can compare the cargo
+//! run byte-for-byte against the toolchain-less fallback
+//! `python/tools/audit.py`.
+//!
+//! Entry points: [`audit_repo`] (from a checkout) and [`audit_workspace`]
+//! (from an in-memory fixture, used by the rule tests).
+
+pub mod engine;
+pub mod report;
+pub mod rules;
+pub mod scanner;
+pub mod workspace;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+pub use engine::{Allow, Audit, Finding};
+pub use rules::RuleId;
+pub use workspace::Workspace;
+
+/// Audit a repo checkout rooted at `root`.
+pub fn audit_repo(root: &Path) -> Result<Audit> {
+    let ws = Workspace::from_disk(root)?;
+    Ok(engine::run(&ws))
+}
+
+/// Audit an in-memory workspace (fixtures, tests).
+pub fn audit_workspace(ws: &Workspace) -> Audit {
+    engine::run(ws)
+}
+
+impl Audit {
+    /// The deterministic audit report (text/JSON via `report::` renderers).
+    pub fn report(&self) -> crate::report::Report {
+        report::render(self)
+    }
+}

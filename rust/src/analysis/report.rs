@@ -1,0 +1,126 @@
+//! Render an [`Audit`] as a typed [`crate::report::Report`].
+//!
+//! The audit gate consumes the text view (`cargo run -- audit`) and CI
+//! compares it byte-for-byte against `python/tools/audit.py`, so the
+//! construction here must stay deterministic: rules in catalogue order,
+//! findings sorted by (file, line, rule), suppressions by (file, line) —
+//! the engine already guarantees the sort, this module only lays out
+//! tables.
+
+use crate::report::{Align, Cell, Report, Section, Table};
+
+use super::engine::Audit;
+use super::rules::ALL;
+
+/// The command line shown in report provenance.
+pub const AUDIT_COMMAND: &str = "cargo run -- audit (fallback: python3 python/tools/audit.py)";
+
+/// Build the deterministic audit report.
+pub fn render(audit: &Audit) -> Report {
+    let mut summary = Table::new(
+        "audit_rules",
+        &[
+            ("rule", Align::Left),
+            ("scope", Align::Left),
+            ("files", Align::Right),
+            ("open", Align::Right),
+            ("allowed", Align::Right),
+        ],
+    )
+    .title("Audited invariants");
+    for rule in ALL {
+        let open = audit
+            .findings
+            .iter()
+            .filter(|f| f.rule == rule && f.suppressed.is_none())
+            .count();
+        let allowed = audit
+            .findings
+            .iter()
+            .filter(|f| f.rule == rule && f.suppressed.is_some())
+            .count();
+        let files = audit.checked.get(rule.name()).copied().unwrap_or(0);
+        summary.push_row(vec![
+            Cell::text(rule.name()),
+            Cell::text(rule.scope()),
+            Cell::count(files as u64),
+            Cell::count(open as u64),
+            Cell::count(allowed as u64),
+        ]);
+    }
+    let note = if audit.clean() {
+        format!(
+            "audit: clean — 0 open findings, {} suppression(s) in force.",
+            audit.allows.len()
+        )
+    } else {
+        format!(
+            "audit: {} open finding(s), {} suppression(s) in force.",
+            audit.open_count(),
+            audit.allows.len()
+        )
+    };
+
+    let mut report = Report::new(
+        "audit",
+        "Invariant audit — determinism, accounting and registration contracts",
+        AUDIT_COMMAND,
+    )
+    .with_intro(
+        "Static token-level audit of the invariants every result in this repo rests on: \
+         no unordered-container iteration in simulation paths, no wall clock or ambient \
+         state in virtual time, f32 reductions only under the tensor:: chunked-kernel \
+         contract, every test/bench/example registered in Cargo.toml, trace events built \
+         only at the sanctioned emit points, and generated-docs markers on every \
+         suite-owned page. Violations are either fixed or carry an explicit audit:allow \
+         with a justification; stale allows are findings themselves. Rule catalogue: \
+         DESIGN.md §7.",
+    )
+    .with_section(Section::new().table(summary).note(note));
+
+    if audit.open_count() > 0 {
+        let mut t = Table::new(
+            "audit_findings",
+            &[
+                ("rule", Align::Left),
+                ("file", Align::Left),
+                ("line", Align::Right),
+                ("detail", Align::Left),
+            ],
+        )
+        .title("Open findings");
+        for f in audit.open() {
+            t.push_row(vec![
+                Cell::text(f.rule.name()),
+                Cell::text(&f.file),
+                Cell::count(f.line as u64),
+                Cell::text(&f.detail),
+            ]);
+        }
+        report = report.with_section(Section::new().heading("Findings").table(t));
+    }
+
+    if !audit.allows.is_empty() {
+        let mut t = Table::new(
+            "audit_allows",
+            &[
+                ("rule", Align::Left),
+                ("file", Align::Left),
+                ("line", Align::Right),
+                ("reason", Align::Left),
+            ],
+        )
+        .title("Suppressions in force");
+        for a in &audit.allows {
+            t.push_row(vec![
+                Cell::text(a.rule.name()),
+                Cell::text(&a.file),
+                Cell::count(a.line as u64),
+                Cell::text(&a.reason),
+            ]);
+        }
+        report = report.with_section(Section::new().heading("Suppressions").table(t));
+    }
+
+    report
+}

@@ -1,0 +1,283 @@
+//! Comment/string-aware line scanner for the invariant auditor.
+//!
+//! Rules match *tokens in code*, so a file is first split into a per-line
+//! **code view** (comments and the contents of string/char literals blanked
+//! out) and a per-line **comment view** (only comment text, which is where
+//! `audit:allow` annotations live). The split is a small lexer state
+//! machine, not a parser: it understands line comments, nested block
+//! comments, plain and raw strings (`r"…"`, `r#"…"#`, byte variants), char
+//! literals, and the char-literal vs lifetime ambiguity. That is enough
+//! to keep pattern strings inside the rule definitions themselves — or an
+//! unordered container mentioned in a doc comment — from ever matching.
+//!
+//! The scanner is ported line-for-line in `python/tools/audit.py`; the two
+//! must stay byte-equivalent (the CI audit job compares full reports).
+
+/// One source line split into its code and comment parts.
+#[derive(Debug, Clone, Default)]
+pub struct ScanLine {
+    /// Line text with comments and literal contents removed.
+    pub code: String,
+    /// Comment text on the line (including the `//` / `/*` markers).
+    pub comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Normal,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+    CharLit,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split `src` into per-line code and comment views.
+pub fn scan(src: &str) -> Vec<ScanLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = ScanLine::default();
+    let mut state = State::Normal;
+    let mut depth = 0usize; // block-comment nesting
+    let mut raw_hashes = 0usize; // '#' count of the open raw string
+    let mut escaped = false; // inside Str/CharLit, previous char was '\'
+    let mut prev_code = ' '; // last code char seen (raw-string lookbehind)
+    let mut i = 0usize;
+    let n = chars.len();
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            if state == State::LineComment {
+                state = State::Normal;
+            }
+            escaped = false;
+            prev_code = ' ';
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+                if c == '/' && next == '/' {
+                    state = State::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    state = State::BlockComment;
+                    depth = 1;
+                    cur.comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    cur.code.push(' ');
+                    prev_code = ' ';
+                    i += 1;
+                } else if (c == 'r' || (c == 'b' && next == 'r')) && !is_ident(prev_code) {
+                    // Possible raw string: (r|br) '#'* '"'
+                    let mut j = i + if c == 'b' { 2 } else { 1 };
+                    let mut h = 0usize;
+                    while j < n && chars[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        cur.code.push(' ');
+                        state = State::RawStr;
+                        raw_hashes = h;
+                        prev_code = ' ';
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        prev_code = c;
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: a backslash or a closing
+                    // quote two chars on means a literal; otherwise it is
+                    // a lifetime and scanning just continues.
+                    let next2 = if i + 2 < n { chars[i + 2] } else { '\0' };
+                    if next == '\\' {
+                        state = State::CharLit;
+                        escaped = true;
+                        cur.code.push(' ');
+                        prev_code = ' ';
+                        i += 2;
+                    } else if next2 == '\'' && next != '\'' {
+                        cur.code.push_str("   ");
+                        prev_code = ' ';
+                        i += 3;
+                    } else {
+                        cur.code.push(' ');
+                        prev_code = ' ';
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    prev_code = c;
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment => {
+                let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+                if c == '/' && next == '*' {
+                    depth += 1;
+                    cur.comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && next == '/' {
+                    depth -= 1;
+                    cur.comment.push_str("*/");
+                    i += 2;
+                    if depth == 0 {
+                        state = State::Normal;
+                    }
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if escaped {
+                    escaped = false;
+                } else if c == '\\' {
+                    escaped = true;
+                } else if c == '"' {
+                    state = State::Normal;
+                }
+                i += 1;
+            }
+            State::RawStr => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..raw_hashes {
+                        if i + 1 + k >= n || chars[i + 1 + k] != '#' {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        state = State::Normal;
+                        i += 1 + raw_hashes;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            State::CharLit => {
+                if escaped {
+                    escaped = false;
+                } else if c == '\\' {
+                    escaped = true;
+                } else if c == '\'' {
+                    state = State::Normal;
+                }
+                i += 1;
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code(src: &str) -> Vec<String> {
+        scan(src).into_iter().map(|l| l.code).collect()
+    }
+
+    fn comment(src: &str) -> Vec<String> {
+        scan(src).into_iter().map(|l| l.comment).collect()
+    }
+
+    #[test]
+    fn line_comments_leave_code_view() {
+        let c = code("let x = 1; // uses HashMap\nlet y = 2;\n");
+        assert_eq!(c[0], "let x = 1; ");
+        assert_eq!(c[1], "let y = 2;");
+        let m = comment("let x = 1; // uses HashMap\n");
+        assert_eq!(m[0], "// uses HashMap");
+    }
+
+    #[test]
+    fn nested_block_comments_are_stripped() {
+        let src = "a /* outer /* inner */ still */ b\n";
+        assert_eq!(code(src)[0], "a  b");
+        assert!(comment(src)[0].contains("inner"));
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let c = code("before /* HashMap\nHashSet */ after\n");
+        assert_eq!(c[0], "before ");
+        assert_eq!(c[1], " after");
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let c = code("let s = \"Instant::now\"; call();\n");
+        assert_eq!(c[0], "let s =  ; call();");
+    }
+
+    #[test]
+    fn escaped_quote_does_not_close_string() {
+        let c = code("let s = \"a\\\"HashMap\"; tail\n");
+        assert_eq!(c[0], "let s =  ; tail");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let c = code("let s = r#\"EventKind:: \"quoted\" \"#; x\n");
+        assert_eq!(c[0], "let s =  ; x");
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_raw_string() {
+        let c = code("let var = attr\"\";\n");
+        // `attr` keeps its final r; the plain string after it is blanked.
+        assert_eq!(c[0], "let var = attr ;");
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let c = code("let c = 'x'; fn f<'a>(v: &'a str) {}\n");
+        assert_eq!(c[0], "let c =    ; fn f< a>(v: & a str) {}");
+        let c = code("let nl = '\\n'; let q = '\\'';\n");
+        assert_eq!(c[0], "let nl =  ; let q =  ;");
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_count() {
+        let src = "let s = \"first\nsecond HashMap\"; after\n";
+        let lines = scan(src);
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].code, "let s =  ");
+        assert_eq!(lines[1].code, "; after");
+    }
+
+    #[test]
+    fn allow_text_lands_in_comment_view_only() {
+        let src = "use std::collections::BTreeMap; // audit:allow(x, y)\n";
+        let lines = scan(src);
+        assert!(!lines[0].code.contains("audit:allow"));
+        assert!(lines[0].comment.contains("audit:allow(x, y)"));
+    }
+
+    #[test]
+    fn trailing_line_without_newline_is_kept() {
+        let lines = scan("let a = 1;");
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].code, "let a = 1;");
+    }
+}

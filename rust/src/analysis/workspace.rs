@@ -1,0 +1,173 @@
+//! The audited file set: a deterministic, whitelist-driven repo model.
+//!
+//! A [`Workspace`] maps repo-relative paths (forward slashes, sorted) to
+//! file contents. It can be built from disk — collecting exactly the files
+//! the rules care about — or assembled in memory for fixture tests. The
+//! collection is a whitelist, not a recursive crawl of the repo root, so
+//! fixture mini-repos under `rust/tests/fixtures/` are never scanned when
+//! auditing the real repo (integration tests are direct children of
+//! `rust/tests/`, matching the cargo convention under `autotests=false`).
+//!
+//! Collected set:
+//! - `Cargo.toml`
+//! - `rust/src/**/*.rs` (recursive)
+//! - `rust/tests/*.rs`, `benches/*.rs`, `examples/*.rs` (direct children)
+//! - `docs/**/*.md`, `docs/**/*.json` (recursive)
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Sorted map of repo-relative path -> contents.
+#[derive(Debug, Clone, Default)]
+pub struct Workspace {
+    files: BTreeMap<String, String>,
+}
+
+impl Workspace {
+    /// Empty workspace, for fixture assembly in tests.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add (or replace) one file.
+    pub fn add(&mut self, path: &str, contents: impl Into<String>) -> &mut Self {
+        self.files.insert(path.to_string(), contents.into());
+        self
+    }
+
+    /// Build the audited file set from a repo checkout.
+    pub fn from_disk(root: &Path) -> Result<Workspace> {
+        let mut ws = Workspace::new();
+        let cargo = root.join("Cargo.toml");
+        if cargo.is_file() {
+            ws.files.insert(
+                "Cargo.toml".to_string(),
+                fs::read_to_string(&cargo).with_context(|| format!("read {}", cargo.display()))?,
+            );
+        }
+        collect(root, "rust/src", true, &["rs"], &mut ws.files)?;
+        collect(root, "rust/tests", false, &["rs"], &mut ws.files)?;
+        collect(root, "benches", false, &["rs"], &mut ws.files)?;
+        collect(root, "examples", false, &["rs"], &mut ws.files)?;
+        collect(root, "docs", true, &["md", "json"], &mut ws.files)?;
+        Ok(ws)
+    }
+
+    /// All files, sorted by path.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.files.iter().map(|(p, c)| (p.as_str(), c.as_str()))
+    }
+
+    /// Contents of one file, if collected.
+    pub fn get(&self, path: &str) -> Option<&str> {
+        self.files.get(path).map(String::as_str)
+    }
+
+    /// `rust/src/**/*.rs`, sorted.
+    pub fn rust_src(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.iter().filter(|(p, _)| p.starts_with("rust/src/") && p.ends_with(".rs"))
+    }
+
+    /// Direct `.rs` children of `dir` (e.g. `rust/tests`), sorted.
+    pub fn direct_rs(&self, dir: &str) -> Vec<&str> {
+        let prefix = format!("{dir}/");
+        self.files
+            .keys()
+            .filter(|p| {
+                p.starts_with(&prefix)
+                    && p.ends_with(".rs")
+                    && !p[prefix.len()..].contains('/')
+            })
+            .map(String::as_str)
+            .collect()
+    }
+
+    /// `docs/**` files with the given extension, sorted.
+    pub fn docs(&self, ext: &str) -> Vec<&str> {
+        let suffix = format!(".{ext}");
+        self.files
+            .keys()
+            .filter(|p| p.starts_with("docs/") && p.ends_with(&suffix))
+            .map(String::as_str)
+            .collect()
+    }
+}
+
+/// Collect files under `root/rel` into `out`, keyed by forward-slash
+/// relative path. Directory entries are visited in sorted order so the
+/// result is reproducible across platforms and filesystems.
+fn collect(
+    root: &Path,
+    rel: &str,
+    recursive: bool,
+    exts: &[&str],
+    out: &mut BTreeMap<String, String>,
+) -> Result<()> {
+    let dir = root.join(rel);
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<(String, bool)> = Vec::new();
+    for entry in fs::read_dir(&dir).with_context(|| format!("read dir {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let is_dir = entry.file_type()?.is_dir();
+        entries.push((name, is_dir));
+    }
+    entries.sort();
+    for (name, is_dir) in entries {
+        let child_rel = format!("{rel}/{name}");
+        if is_dir {
+            if recursive {
+                collect(root, &child_rel, true, exts, out)?;
+            }
+        } else if exts.iter().any(|e| name.ends_with(&format!(".{e}"))) {
+            let path = root.join(&child_rel);
+            let contents = fs::read_to_string(&path)
+                .with_context(|| format!("read {}", path.display()))?;
+            out.insert(child_rel, contents);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_memory_selectors() {
+        let mut ws = Workspace::new();
+        ws.add("Cargo.toml", "[package]\n");
+        ws.add("rust/src/sim/vtime.rs", "fn a() {}\n");
+        ws.add("rust/src/cloud/redis.rs", "fn b() {}\n");
+        ws.add("rust/tests/integration.rs", "#[test]\nfn t() {}\n");
+        ws.add("rust/tests/fixtures/audit/rust/src/sim/x.rs", "nested\n");
+        ws.add("benches/micro.rs", "fn main() {}\n");
+        ws.add("docs/REPORT.md", "# r\n");
+        ws.add("docs/data/table2.json", "{}\n");
+
+        let src: Vec<&str> = ws.rust_src().map(|(p, _)| p).collect();
+        assert_eq!(src, vec!["rust/src/cloud/redis.rs", "rust/src/sim/vtime.rs"]);
+        // Fixture mini-repos are not direct children of rust/tests.
+        assert_eq!(ws.direct_rs("rust/tests"), vec!["rust/tests/integration.rs"]);
+        assert_eq!(ws.direct_rs("benches"), vec!["benches/micro.rs"]);
+        assert_eq!(ws.docs("md"), vec!["docs/REPORT.md"]);
+        assert_eq!(ws.docs("json"), vec!["docs/data/table2.json"]);
+    }
+
+    #[test]
+    fn from_disk_skips_fixture_trees() {
+        // When run under `cargo test` the CWD is the package root.
+        let ws = Workspace::from_disk(Path::new(".")).unwrap();
+        if ws.get("Cargo.toml").is_none() {
+            // Not a repo checkout (e.g. sandboxed harness); nothing to assert.
+            return;
+        }
+        assert!(ws.get("rust/src/lib.rs").is_some());
+        assert!(ws.iter().all(|(p, _)| !p.contains("fixtures/")));
+    }
+}

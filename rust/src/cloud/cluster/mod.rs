@@ -27,7 +27,7 @@
 
 pub mod ring;
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -141,11 +141,12 @@ struct Shard {
     seq: u64,
     /// Touch-order index: seq -> key (the LRU end is the smallest seq).
     lru: BTreeMap<u64, String>,
-    /// key -> (current seq, resident bytes).
-    resident: HashMap<String, (u64, u64)>,
+    /// key -> (current seq, resident bytes). Ordered maps here and below:
+    /// only keyed lookups touch them (unordered-iteration audit invariant).
+    resident: BTreeMap<String, (u64, u64)>,
     resident_bytes: u64,
     /// Live per-key read counts backing the hottest-key high-water mark.
-    reads: HashMap<String, u64>,
+    reads: BTreeMap<String, u64>,
     stats: ShardStats,
 }
 
@@ -156,9 +157,9 @@ impl Shard {
             down_until: None,
             seq: 0,
             lru: BTreeMap::new(),
-            resident: HashMap::new(),
+            resident: BTreeMap::new(),
             resident_bytes: 0,
-            reads: HashMap::new(),
+            reads: BTreeMap::new(),
             stats: ShardStats::default(),
         }
     }

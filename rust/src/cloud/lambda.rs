@@ -14,7 +14,7 @@
 //! strategy code between `begin_invocation` and `finish_invocation`; this
 //! module owns the init/billing bookkeeping and the warm-pool state.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::metrics::{CostKind, Ledger};
 use crate::sim::VTime;
@@ -37,7 +37,10 @@ pub struct Invocation {
 /// Per-experiment Lambda runtime: warm pool + billing statistics.
 #[derive(Debug, Default)]
 pub struct LambdaRuntime {
-    warm: HashSet<usize>,
+    /// Workers with a warm sandbox. Ordered set: membership is all the
+    /// warm-pool logic needs, and keeping sim-path containers ordered is
+    /// the `unordered-iteration` audit invariant.
+    warm: BTreeSet<usize>,
     pub invocations: u64,
     pub cold_starts: u64,
     pub billed_secs: f64,

@@ -6,7 +6,7 @@
 //! substrate, LambdaML (AllReduce/ScatterReduce) uses it as the shared
 //! gradient bucket, and Lambda state loads read batches from it.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
@@ -20,7 +20,9 @@ use super::pricing;
 /// In-process S3: objects are real slabs, time is virtual.
 #[derive(Debug)]
 pub struct ObjectStore {
-    objects: HashMap<String, (Slab, VTime)>, // value + time it became visible
+    // Key -> (value, time it became visible). Ordered map: only keyed
+    // lookups touch it (unordered-iteration audit invariant).
+    objects: BTreeMap<String, (Slab, VTime)>,
     frontend: Resource,
     latency: f64,
     bandwidth: f64,
@@ -40,7 +42,7 @@ impl ObjectStore {
     /// Custom latency/bandwidth/parallelism (used by ablation benches).
     pub fn with_profile(latency: f64, bandwidth: f64, servers: usize) -> ObjectStore {
         ObjectStore {
-            objects: HashMap::new(),
+            objects: BTreeMap::new(),
             frontend: Resource::new("s3", servers),
             latency,
             bandwidth,
@@ -162,6 +164,23 @@ mod tests {
 
     fn env() -> (Ledger, CommStats) {
         (Ledger::new(), CommStats::new())
+    }
+
+    #[test]
+    fn put_get_times_match_closed_form() {
+        // Pin put/get completion times to the closed-form latency model.
+        // The store container holds (slab, visibility) per key and is only
+        // ever consulted by keyed lookup, so these exact f64 equalities are
+        // invariant under the HashMap->BTreeMap swap (and would catch any
+        // future change that lets container state leak into the timeline).
+        let mut s3 = ObjectStore::new();
+        let (mut l, mut c) = env();
+        let slab = Slab::from_vec(vec![0.5f32; 1024]);
+        let bytes = slab.nbytes() as f64;
+        let t_put = s3.put(VTime::ZERO, "k", slab, &mut l, &mut c);
+        assert_eq!(t_put.secs(), S3_LATENCY + bytes / S3_BW);
+        let (t_get, _) = s3.get(t_put, "k", &mut l, &mut c).unwrap();
+        assert_eq!(t_get.secs(), t_put.secs() + S3_LATENCY + bytes / S3_BW);
     }
 
     #[test]

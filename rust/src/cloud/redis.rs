@@ -16,7 +16,7 @@
 //! Redis command processing is single-threaded: one queueing server, so
 //! concurrent clients serialize exactly like a real instance.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -32,7 +32,10 @@ use super::calibration::{
 /// One Redis/RedisAI instance.
 pub struct Redis {
     name: String,
-    store: HashMap<String, (Slab, VTime)>,
+    /// Key -> (slab, visibility time). Ordered map: only keyed lookups
+    /// touch it, and keeping sim-path containers ordered is the
+    /// `unordered-iteration` audit invariant.
+    store: BTreeMap<String, (Slab, VTime)>,
     cmd: Resource, // single-threaded command loop (network transfers)
     /// RedisAI executes scripted tensor ops on a background worker thread
     /// (AI.SCRIPTEXEC threadpool) — the command loop stays responsive while
@@ -66,7 +69,7 @@ impl Redis {
     pub fn with_math(name: impl Into<String>, math: Arc<dyn SlabMath>) -> Redis {
         Redis {
             name: name.into(),
-            store: HashMap::new(),
+            store: BTreeMap::new(),
             cmd: Resource::new("redis-cmd", 1),
             script_engine: Resource::new("redisai-scripts", 1),
             math,

@@ -164,6 +164,7 @@ impl Strategy for MlLess {
                 use crate::faults::SUPERVISOR;
                 let cost = env.ledger.total_full() - cost0;
                 let dep = env.trace.notify_dep(&sup_topic, wait_count);
+                // audit:allow(trace-emit, MLLess supervisor-track emit point - DESIGN.md §6)
                 env.trace.span(SUPERVISOR, t0, t, EventKind::Poll, 0, cost, dep);
             }
             if let Some(restart) = env.supervisor_crash(round, t) {
@@ -181,6 +182,7 @@ impl Strategy for MlLess {
             if traced {
                 use crate::faults::SUPERVISOR;
                 let cost = env.ledger.total_full() - cost0;
+                // audit:allow(trace-emit, MLLess supervisor notify emit point - DESIGN.md §6)
                 let idx = env.trace.span(
                     SUPERVISOR,
                     self.supervisor_clock,

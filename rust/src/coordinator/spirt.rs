@@ -143,6 +143,7 @@ impl Strategy for Spirt {
                 let t = env.worker_redis[w].set(arrive, &gkey, grad, &mut env.comm);
                 env.stages.add(Stage::ComputeGradients, t - arrive);
                 if traced {
+                    // audit:allow(trace-emit, SPIRT private-op emit point - DESIGN.md §6)
                     env.trace.span(w, arrive, t, EventKind::RedisSet, gbytes, 0.0, None);
                 }
 
@@ -153,6 +154,7 @@ impl Strategy for Spirt {
                     env.worker_redis[w].acc_in_db(t, "gsum", "gsum", &gkey, 1.0, &mut env.comm)?
                 };
                 if traced {
+                    // audit:allow(trace-emit, SPIRT in-DB accumulation chain - private-op emit point, DESIGN.md §6)
                     let idx =
                         env.trace.span(w, t, acc_done, EventKind::InDb, gbytes, 0.0, prev_acc);
                     prev_acc = idx;
@@ -183,6 +185,7 @@ impl Strategy for Spirt {
                 &mut env.comm,
             )?;
             if traced {
+                // audit:allow(trace-emit, SPIRT in-DB averaging - private-op emit point, DESIGN.md §6)
                 let idx = env.trace.span(w, t0, t, EventKind::InDb, 0, 0.0, prev_acc);
                 // Peers fetch the average P2P: register this as its writer
                 // so their `redis_get(Peer(w), ..)` deps resolve.
@@ -284,6 +287,7 @@ impl Strategy for Spirt {
             if traced {
                 // Fused in-DB update; same-worker program order links it to
                 // the final-gradient write just above.
+                // audit:allow(trace-emit, SPIRT fused in-DB update - private-op emit point, DESIGN.md §6)
                 env.trace.span(w, t0, t, EventKind::InDb, 0, 0.0, None);
             }
             env.stages.add(Stage::ModelUpdate, t - env.workers[w].clock);

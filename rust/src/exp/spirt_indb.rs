@@ -8,6 +8,7 @@
 
 use std::rc::Rc;
 use std::sync::Arc;
+// audit:allow(vtime-purity, measures host wall time of the real PJRT path - never enters vtime)
 use std::time::Instant;
 
 use crate::cloud::Redis;
@@ -72,6 +73,7 @@ pub fn run(engine: Option<(Rc<Engine>, &str)>, minibatches: usize) -> Result<Out
         None => (11_700_000, Redis::new("indb-bench"), false),
     };
     let mut comm = CommStats::new();
+    // audit:allow(vtime-purity, real_wall_ms is host-side reporting for EXPERIMENTS.md - not vtime)
     let wall_start = Instant::now();
 
     // ---- Averaging: naive fetch-update-store ----------------------------

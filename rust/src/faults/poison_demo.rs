@@ -69,6 +69,7 @@ impl Task {
         let mut y = Vec::with_capacity(n);
         for _ in 0..n {
             let xi: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            // audit:allow(float-reduction, 16-wide dot product in fixed order - demo data gen, not a kernel or vtime path)
             let margin: f32 = xi.iter().zip(w_true).map(|(a, b)| a * b).sum::<f32>()
                 + rng.normal_f32(0.0, 0.5);
             y.push(if margin >= 0.0 { 1.0 } else { -1.0 });
@@ -87,6 +88,7 @@ impl Task {
         for i in lo..hi {
             let xi = &self.x[i * DIM..(i + 1) * DIM];
             let yi = self.y[i];
+            // audit:allow(float-reduction, 16-wide dot product in fixed order - demo gradient, checked by its accuracy tests)
             let m: f32 = xi.iter().zip(theta).map(|(a, b)| a * b).sum();
             // d/dw ln(1+exp(-y w·x)) = -y x σ(-y w·x)
             let s = 1.0 / (1.0 + (yi * m).exp());
@@ -102,6 +104,7 @@ impl Task {
         let correct = (0..self.len())
             .filter(|&i| {
                 let xi = &self.x[i * DIM..(i + 1) * DIM];
+                // audit:allow(float-reduction, 16-wide dot product in fixed order - demo accuracy metric)
                 let m: f32 = xi.iter().zip(theta).map(|(a, b)| a * b).sum();
                 (m >= 0.0) == (self.y[i] >= 0.0)
             })

@@ -39,11 +39,18 @@
 //!   event log over every protocol op/stage/fault (zero-cost when disabled),
 //!   with Chrome trace-event export, critical-path analysis and per-op-kind
 //!   latency percentiles behind `slsgpu trace`.
+//! * [`analysis`] — the repo-native invariant auditor: a static-analysis
+//!   pass over this repository's own sources that enforces the
+//!   determinism, accounting and registration contracts (unordered
+//!   iteration, vtime purity, float-reduction discipline, target
+//!   registration, trace-emit confinement, generated-docs markers) behind
+//!   `slsgpu audit`, with audited `audit:allow` suppressions.
 //!
 //! Time in experiment outputs is *virtual* (the paper's AWS time axis,
 //! calibrated from the paper's own measurements — see
 //! [`cloud::calibration`]); bytes, gradients and accuracies are real.
 
+pub mod analysis;
 pub mod cloud;
 pub mod config;
 pub mod coordinator;

@@ -24,6 +24,7 @@
 //!               [--sweep-batches 24] [--threads 0] [--fault-epochs 3]
 //! slsgpu train --framework spirt --model mobilenet_s --epochs 5
 //! slsgpu artifacts                            # list compiled artifacts
+//! slsgpu audit [--root .] [--format text|json] # invariant audit (exit 1 on findings)
 //! ```
 //!
 //! Experiments that execute real gradients need `make artifacts` first and
@@ -80,6 +81,7 @@ fn run() -> Result<()> {
         Some("shard-sweep") => run_shard_sweep(&args),
         Some("trace") => run_trace(&args),
         Some("report") => run_report(&args),
+        Some("audit") => run_audit(&args),
         Some("train") => run_train(&args),
         Some("artifacts") => {
             let engine = engine_from(&args)?;
@@ -100,17 +102,39 @@ fn run() -> Result<()> {
         }
         Some(other) => bail!(
             "unknown subcommand {other:?} \
-             (exp|fault-tolerance|scale-sweep|shard-sweep|trace|report|train|artifacts)"
+             (exp|fault-tolerance|scale-sweep|shard-sweep|trace|report|audit|train|artifacts)"
         ),
         None => {
             println!("slsgpu — serverless-vs-GPU training testbed (see README)");
             println!(
                 "subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, \
-                 fault-tolerance, scale-sweep, shard-sweep, trace, report, train, artifacts"
+                 fault-tolerance, scale-sweep, shard-sweep, trace, report, audit, train, \
+                 artifacts"
             );
             Ok(())
         }
     }
+}
+
+/// The invariant audit: scan the repo's own sources against the rule
+/// catalogue in `analysis::rules` (DESIGN.md §7) and print the
+/// deterministic report. Exits 1 when any finding is not covered by an
+/// `audit:allow` — CI runs this as a blocking gate and compares the output
+/// byte-for-byte against `python/tools/audit.py`.
+fn run_audit(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.get_or("root", "."));
+    let audit = slsgpu::analysis::audit_repo(&root)?;
+    let report = audit.report();
+    match args.get_or("format", "text") {
+        "text" => print!("{}", report.to_text()),
+        "json" => println!("{}", report.to_json()),
+        other => bail!("unknown format {other:?} (text|json)"),
+    }
+    if !audit.clean() {
+        eprintln!("audit: {} unsuppressed finding(s)", audit.open_count());
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 /// Regenerate the `docs/` tree: run the full virtual-mode experiment suite

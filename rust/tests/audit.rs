@@ -1,0 +1,244 @@
+//! Integration tests for the invariant auditor (`slsgpu::analysis`).
+//!
+//! Three layers:
+//! - fixture goldens: the mini-repo under `rust/tests/fixtures/audit/` is
+//!   audited and the rendered report compared byte-for-byte against
+//!   goldens produced by `python/tools/gen_audit_goldens.py` — so the
+//!   byte-identity of the Rust and Python auditors is a test, not just a
+//!   CI property;
+//! - in-memory workspaces: each rule's firing, suppression and scope
+//!   behaviour pinned with minimal assembled inputs;
+//! - the repo itself: `cargo run -- audit` must be clean, which is also
+//!   asserted here so `cargo test` alone catches a new violation.
+
+use std::path::Path;
+
+use slsgpu::analysis::{audit_repo, audit_workspace, RuleId, Workspace};
+
+const FIXTURE_DIR: &str = "rust/tests/fixtures/audit";
+
+fn fixture_audit() -> slsgpu::analysis::Audit {
+    let ws = Workspace::from_disk(Path::new(FIXTURE_DIR)).expect("fixture dir readable");
+    audit_workspace(&ws)
+}
+
+// ---------------------------------------------------------------------------
+// Fixture goldens (cross-checked against the Python auditor)
+
+#[test]
+fn fixture_text_matches_python_golden() {
+    let report = fixture_audit().report();
+    assert_eq!(report.to_text(), include_str!("golden/audit_fixture.txt"));
+}
+
+#[test]
+fn fixture_json_matches_python_golden() {
+    let report = fixture_audit().report();
+    assert_eq!(
+        format!("{}\n", report.to_json()),
+        include_str!("golden/audit_fixture.json")
+    );
+}
+
+#[test]
+fn fixture_counts_are_pinned() {
+    let audit = fixture_audit();
+    assert_eq!(audit.open_count(), 14);
+    assert_eq!(audit.allows.len(), 3);
+    assert!(!audit.clean());
+    // Every rule fires at least once across open + suppressed findings.
+    for rule in [
+        RuleId::UnorderedIteration,
+        RuleId::VtimePurity,
+        RuleId::FloatReduction,
+        RuleId::TargetRegistration,
+        RuleId::TraceEmit,
+        RuleId::GeneratedDocs,
+        RuleId::StaleAllow,
+    ] {
+        assert!(
+            audit.findings.iter().any(|f| f.rule == rule),
+            "rule {:?} never fired in the fixture",
+            rule
+        );
+    }
+}
+
+#[test]
+fn fixture_audit_is_deterministic() {
+    let a = fixture_audit().report().to_text();
+    let b = fixture_audit().report().to_text();
+    assert_eq!(a, b);
+}
+
+// ---------------------------------------------------------------------------
+// In-memory workspaces: per-rule behaviour
+
+fn ws_with(path: &str, src: &str) -> Workspace {
+    let mut ws = Workspace::new();
+    ws.add(path, src);
+    ws
+}
+
+#[test]
+fn unordered_iteration_fires_in_sim_paths_only() {
+    let src = "use std::collections::HashMap;\n";
+    let audit = audit_workspace(&ws_with("rust/src/sim/vtime.rs", src));
+    assert_eq!(audit.open_count(), 1);
+    assert_eq!(audit.findings[0].rule, RuleId::UnorderedIteration);
+    assert_eq!(audit.findings[0].line, 1);
+
+    // runtime/ is out of scope by design (host-side memoization only).
+    let audit = audit_workspace(&ws_with("rust/src/runtime/engine.rs", src));
+    assert!(audit.findings.iter().all(|f| f.rule != RuleId::UnorderedIteration));
+}
+
+#[test]
+fn tokens_in_comments_and_strings_do_not_fire() {
+    let src = "// HashMap in a comment\nlet s = \"Instant::now\";\n";
+    let audit = audit_workspace(&ws_with("rust/src/sim/vtime.rs", src));
+    assert!(audit.clean(), "{:?}", audit.findings);
+}
+
+#[test]
+fn vtime_purity_exempts_util_cli() {
+    let src = "let args = std::env::args();\n";
+    let audit = audit_workspace(&ws_with("rust/src/util/cli.rs", src));
+    assert!(audit.clean());
+    let audit = audit_workspace(&ws_with("rust/src/util/json.rs", src));
+    assert_eq!(audit.open_count(), 1);
+    assert_eq!(audit.findings[0].rule, RuleId::VtimePurity);
+}
+
+#[test]
+fn float_reduction_exempts_tensor() {
+    let src = "pub fn s(xs: &[f32]) -> f32 { xs.iter().sum::<f32>() }\n";
+    let audit = audit_workspace(&ws_with("rust/src/tensor/kernels.rs", src));
+    assert!(audit.clean());
+    let audit = audit_workspace(&ws_with("rust/src/exp/table1.rs", src));
+    assert_eq!(audit.open_count(), 1);
+    assert_eq!(audit.findings[0].rule, RuleId::FloatReduction);
+}
+
+#[test]
+fn trace_emit_exempts_sanctioned_files() {
+    let src = "let e = EventKind::Poll;\n";
+    for exempt in [
+        "rust/src/coordinator/protocol.rs",
+        "rust/src/coordinator/env.rs",
+        "rust/src/trace/mod.rs",
+    ] {
+        let audit = audit_workspace(&ws_with(exempt, src));
+        assert!(audit.clean(), "{exempt} should be exempt");
+    }
+    let audit = audit_workspace(&ws_with("rust/src/coordinator/spirt.rs", src));
+    assert_eq!(audit.open_count(), 1);
+    assert_eq!(audit.findings[0].rule, RuleId::TraceEmit);
+}
+
+#[test]
+fn trailing_allow_suppresses_and_is_listed() {
+    let src = "use std::collections::HashMap; // audit:allow(unordered-iteration, lookup only)\n";
+    let audit = audit_workspace(&ws_with("rust/src/cloud/redis.rs", src));
+    assert!(audit.clean());
+    assert_eq!(audit.findings.len(), 1);
+    assert_eq!(audit.findings[0].suppressed.as_deref(), Some("lookup only"));
+    assert_eq!(audit.allows.len(), 1);
+    assert_eq!(audit.allows[0].rule, RuleId::UnorderedIteration);
+}
+
+#[test]
+fn comment_line_allow_covers_the_following_statement() {
+    let src = "// audit:allow(trace-emit, spans the whole call)\n\
+               let idx = trace.span(\n    a,\n    EventKind::Poll,\n);\n";
+    let audit = audit_workspace(&ws_with("rust/src/coordinator/spirt.rs", src));
+    assert!(audit.clean(), "{:?}", audit.findings);
+    assert_eq!(audit.allows.len(), 1);
+}
+
+#[test]
+fn allow_does_not_reach_past_the_statement_end() {
+    // The allow covers the first statement (ends with `;`); the second
+    // HashMap line is outside its span and stays open.
+    let src = "// audit:allow(unordered-iteration, first statement only)\n\
+               let a: HashMap<u32, u32> = HashMap::new();\n\
+               let b: HashMap<u32, u32> = HashMap::new();\n";
+    let audit = audit_workspace(&ws_with("rust/src/sim/vtime.rs", src));
+    assert_eq!(audit.open_count(), 1);
+    assert_eq!(audit.open().next().unwrap().line, 3);
+}
+
+#[test]
+fn stale_unknown_and_reasonless_allows_are_findings() {
+    let src = "// audit:allow(unordered-iteration, nothing below)\n\
+               fn a() {}\n\
+               // audit:allow(bogus-rule, whatever)\n\
+               // audit:allow(vtime-purity)\n";
+    let audit = audit_workspace(&ws_with("rust/src/sim/vtime.rs", src));
+    let details: Vec<&str> = audit.open().map(|f| f.detail.as_str()).collect();
+    assert_eq!(audit.open_count(), 3);
+    assert!(audit.open().all(|f| f.rule == RuleId::StaleAllow));
+    assert!(details.iter().any(|d| d.contains("suppresses nothing")));
+    assert!(details.iter().any(|d| d.contains("unknown rule `bogus-rule`")));
+    assert!(details.iter().any(|d| d.contains("has no justification")));
+}
+
+#[test]
+fn registration_catches_ghosts_and_unregistered_targets() {
+    let mut ws = Workspace::new();
+    ws.add(
+        "Cargo.toml",
+        "[package]\nname = \"x\"\n\n\
+         [[test]]\nname = \"present\"\npath = \"rust/tests/present.rs\"\n\n\
+         [[test]]\nname = \"ghost\"\npath = \"rust/tests/ghost.rs\"\n",
+    );
+    ws.add("rust/tests/present.rs", "#[test]\nfn t() {}\n");
+    ws.add("rust/tests/orphan.rs", "#[test]\nfn t() {}\n");
+    let audit = audit_workspace(&ws);
+    assert_eq!(audit.open_count(), 2);
+    let mut opens = audit.open();
+    let ghost = opens.next().unwrap();
+    assert_eq!(ghost.file, "Cargo.toml");
+    assert!(ghost.detail.contains("points at missing rust/tests/ghost.rs"));
+    let orphan = opens.next().unwrap();
+    assert_eq!(orphan.file, "rust/tests/orphan.rs");
+    assert!(orphan.detail.contains("no [[test]] entry"));
+}
+
+#[test]
+fn docs_markers_are_required() {
+    let mut ws = Workspace::new();
+    ws.add("docs/good.md", "# t\n\n> Generated by `slsgpu report` — do not edit by hand.\n");
+    ws.add("docs/bad.md", "# hand-written\n");
+    ws.add("docs/data/good.json", "{\"command\":\"slsgpu exp\"}\n");
+    ws.add("docs/data/bad.json", "{}\n");
+    let audit = audit_workspace(&ws);
+    assert_eq!(audit.open_count(), 2);
+    let files: Vec<&str> = audit.open().map(|f| f.file.as_str()).collect();
+    assert_eq!(files, vec!["docs/bad.md", "docs/data/bad.json"]);
+}
+
+// ---------------------------------------------------------------------------
+// The repo audits itself
+
+#[test]
+fn repo_audit_is_clean() {
+    // CWD under `cargo test` is the package root. Skip quietly when the
+    // sources are not present (e.g. a packaged test run).
+    let audit = match audit_repo(Path::new(".")) {
+        Ok(a) => a,
+        Err(_) => return,
+    };
+    if audit.checked.get("stale-allow").copied().unwrap_or(0) == 0 {
+        return; // no rust/src tree collected; not a checkout
+    }
+    let open: Vec<String> = audit
+        .open()
+        .map(|f| format!("{}:{} {} — {}", f.file, f.line, f.rule.name(), f.detail))
+        .collect();
+    assert!(open.is_empty(), "repo audit found open violations:\n{}", open.join("\n"));
+    assert!(
+        !audit.allows.is_empty(),
+        "the repo carries known suppressions; none being found means the scanner broke"
+    );
+}

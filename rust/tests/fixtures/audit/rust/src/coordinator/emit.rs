@@ -1,0 +1,17 @@
+//! Fixture: trace-emit confinement — one rogue construction, one
+//! multi-line emit covered by a single statement-scoped allow.
+
+pub fn rogue() {
+    let _ = EventKind::Poll;
+}
+
+pub fn sanctioned_multiline() {
+    // audit:allow(trace-emit, fixture - multi-line span covered by one annotation)
+    let _idx = trace.span(
+        SUPERVISOR,
+        t0,
+        t,
+        EventKind::Notify,
+        0,
+    );
+}

@@ -1,0 +1,5 @@
+//! Fixture: the sanctioned emit point — construction here is fine.
+
+pub fn emit() {
+    let _ = EventKind::Poll;
+}

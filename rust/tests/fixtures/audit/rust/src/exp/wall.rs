@@ -1,0 +1,20 @@
+//! Fixture: vtime-purity and float-reduction positives, plus the stale
+//! allow variants (unknown rule, missing reason).
+
+// audit:allow(vtime-purity, fixture - import sanctioned for host-side reporting)
+use std::time::Instant;
+
+pub fn wall_ms() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+pub fn reduce(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}
+
+// audit:allow(no-such-rule, typo in the rule name)
+pub fn unknown_rule() {}
+
+// audit:allow(vtime-purity)
+pub fn missing_reason() {}

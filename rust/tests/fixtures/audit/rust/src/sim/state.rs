@@ -1,0 +1,22 @@
+//! Fixture: unordered-iteration positives and negatives.
+//! A HashMap mentioned in a comment is never a finding.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+pub struct State {
+    pub by_worker: HashMap<usize, u64>,
+    pub warm: HashSet<usize>, // audit:allow(unordered-iteration, membership-only set - never iterated)
+    pub ordered: BTreeMap<usize, u64>,
+}
+
+pub fn describe() -> &'static str {
+    "uses HashMap internally" // token inside a string literal: not a finding
+}
+
+// audit:allow(unordered-iteration, stale - nothing below matches)
+pub fn ordered_only(m: &BTreeMap<usize, u64>) -> u64 {
+    m.values().sum()
+}
+
+// audit:allow(vtime-purity, unterminated
+pub fn noop() {}

@@ -1,0 +1,6 @@
+//! Fixture: tensor:: owns the chunked-kernel contract, so f32 reductions
+//! here are exempt from float-reduction.
+
+pub fn ksum(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}

@@ -1,0 +1,5 @@
+//! Fixture: util::cli is the one sanctioned ambient-state reader.
+
+pub fn argv() -> Vec<String> {
+    std::env::args().collect()
+}
