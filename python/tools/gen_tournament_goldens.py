@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Generate ``rust/tests/golden/tournament_fixture.{txt,md,json}``.
+
+Builds the exact tournament-shaped fixture that
+``rust/tests/tournament.rs::fixture()`` builds — same table ids, column
+set, Pareto marks, and section layout as ``exp::tournament::report`` —
+and renders it through the byte-exact replica in ``report_replica.py``.
+Run from the repo root:
+
+    python3 python/tools/gen_tournament_goldens.py
+
+Regenerate only when the renderer format or the tournament grid dialect
+deliberately changes; the golden tests exist to catch *accidental* drift.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import report_replica as rr  # noqa: E402
+
+COLUMNS = [
+    ("Framework", rr.LEFT),
+    ("Rule", rr.LEFT),
+    ("Time (s)", rr.RIGHT),
+    ("Cost ($)", rr.RIGHT),
+    ("Acc (%)", rr.RIGHT),
+    ("dAcc (pts)", rr.RIGHT),
+    ("Pareto", rr.LEFT),
+    ("Recovery", rr.LEFT),
+]
+
+
+def grid_row(fw, rule, time, cost, acc, dacc, pareto, recovery):
+    return [
+        rr.cell(fw),
+        rr.cell(rule),
+        rr.num_cell(time, 1),
+        rr.num_cell(cost, 4),
+        rr.num_cell(acc, 1),
+        rr.cell(f"{dacc:+.1f}", value=dacc),
+        rr.cell("*" if pareto else "-"),
+        rr.cell(recovery),
+    ]
+
+
+def fixture():
+    coalition = rr.table("tournament_coalition", COLUMNS, title="Attack: coalition")
+    rr.push_row(coalition, grid_row("spirt", "mean", 412.5, 0.0315, 52.1, -34.6, False, "16 poisoned"))
+    rr.push_row(coalition, grid_row("spirt", "krum", 437.2, 0.0341, 86.3, -0.4, True, "16 poisoned"))
+    rr.rule(coalition)
+    rr.push_row(coalition, grid_row("allreduce", "mean", 398.1, 0.0287, 52.1, -34.6, True, "16 poisoned"))
+    rr.push_row(
+        coalition, grid_row("allreduce", "trimmed-mean", 421.9, 0.0312, 86.1, -0.6, True, "16 poisoned")
+    )
+
+    storm = rr.table("tournament_preemption_storm", COLUMNS, title="Attack: preemption-storm")
+    rr.push_row(storm, grid_row("spirt", "mean", 498.7, 0.0389, 86.7, 0.0, True, "3 preempted"))
+    rr.push_row(storm, grid_row("spirt", "coord-median", 530.4, 0.0452, 86.7, 0.0, False, "3 preempted"))
+    rr.rule(storm)
+    rr.push_row(storm, grid_row("allreduce", "mean", 471.3, 0.0344, 86.7, 0.0, True, "3 preempted"))
+    rr.push_row(
+        storm, grid_row("allreduce", "coord-median", 503.8, 0.0401, 86.7, 0.0, False, "3 preempted")
+    )
+
+    return rr.report(
+        "tournament",
+        "Robustness tournament — aggregation rule × attack × architecture",
+        "slsgpu robustness-tournament --model mobilenet --workers 8 --epochs 2 --seed 42",
+        intro=[
+            "Fixed input for the tournament golden-file tests: the (framework x rule) grid "
+            "dialect with Pareto verdicts, byte-stable across runs and platforms."
+        ],
+        sections=[
+            rr.section(
+                heading="Attack: coalition",
+                paragraphs=["Workers 1 and 2 collude on the same rounds; the mean diverges."],
+                tables=[coalition],
+            ),
+            # Report::with_note appends to the last section, so the
+            # report-level note lands here.
+            rr.section(
+                heading="Attack: preemption-storm",
+                paragraphs=["Correlated spot preemptions; accuracy is unharmed, time is not."],
+                tables=[storm],
+                notes=["note: every cell is an independent seeded simulation."],
+            ),
+        ],
+    )
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    golden = os.path.join(root, "rust", "tests", "golden")
+    os.makedirs(golden, exist_ok=True)
+    r = fixture()
+    outputs = {
+        "tournament_fixture.txt": rr.report_text(r),
+        "tournament_fixture.md": rr.report_md(r),
+        "tournament_fixture.json": rr.report_json(r),
+    }
+    for name, contents in outputs.items():
+        path = os.path.join(golden, name)
+        with open(path, "w", encoding="utf-8") as fh:
+            fh.write(contents)
+        print(f"wrote {path} ({len(contents)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

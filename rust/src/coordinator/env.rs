@@ -478,10 +478,52 @@ impl ClusterEnv {
 
     /// Did the fault plan crash `w`'s in-flight invocation (the one whose
     /// gradient was just computed)? Consumes the event when it fires.
+    /// Spot preemptions fire through the same gate: the recovery mechanics
+    /// (cold start + reload + recompute, billed again) are identical, but a
+    /// preemption is counted separately and marked on the supervisor track
+    /// so a storm stays legible as one in the event log.
     pub fn crash_in_compute(&mut self, w: usize) -> bool {
         let round = self.faults.current_round(w);
         let now = self.workers[w].clock;
-        self.faults.crash_compute(w, round, now)
+        if self.faults.crash_compute(w, round, now) {
+            return true;
+        }
+        if self.faults.preempted(w, round, now) {
+            self.recovery.preemptions += 1;
+            if self.trace.enabled() {
+                use crate::faults::SUPERVISOR;
+                self.trace.instant(SUPERVISOR, now, EventKind::Preemption);
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Partition reachability gate: if the fault plan has `w` cut off at
+    /// its current clock, defer it to the heal time (charged as
+    /// synchronization wait) before the protocol op proceeds. Every
+    /// `Timeline` communication op consults this first — which is exactly
+    /// what makes a partitioned worker's writes, notifies and polls
+    /// invisible to its peers until the partition heals, and so what the
+    /// visibility/quorum paths observe.
+    pub fn partition_gate(&mut self, w: usize) {
+        let now = self.workers[w].clock;
+        let Some(hit) = self.faults.partition_until(w, now) else {
+            return;
+        };
+        if self.trace.enabled() {
+            use crate::faults::SUPERVISOR;
+            for (start, heal) in &hit.newly {
+                let (s, h) = (VTime::from_secs(*start), VTime::from_secs(*heal));
+                self.trace.span(SUPERVISOR, s, h, EventKind::Partition, 0, 0.0, None);
+                self.trace.instant(SUPERVISOR, h, EventKind::PartitionHeal);
+            }
+        }
+        let wait = hit.until - now.secs();
+        if wait > 0.0 {
+            self.recovery.partition_secs += wait;
+            self.charge_sync(w, wait);
+        }
     }
 
     /// Platform retry after a compute-phase crash: the worker pays a cold

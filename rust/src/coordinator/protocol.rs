@@ -27,6 +27,15 @@
 //! [`CommStats::stale_skips`](crate::metrics::CommStats) — they are the
 //! price async pays in lost signal, and the scale sweep reports them next
 //! to the time/cost wins.
+//!
+//! Network partitions planned by the fault engine are enforced here, at
+//! the only layer that knows the acting worker: every communication op
+//! first consults `ClusterEnv::partition_gate`, which defers a partitioned
+//! worker to its heal time before the op runs. Because the deferral lands
+//! *before* the substrate call, a partitioned worker's writes, notifies
+//! and uploads become visible only after the heal — the visibility and
+//! quorum paths ([`store_quorum`], queue waits) therefore see the
+//! reachability mask without any changes of their own, in every strategy.
 
 use anyhow::Result;
 
@@ -291,6 +300,7 @@ impl Timeline<'_> {
 
     /// Upload to an object store; completion time becomes the new clock.
     pub fn put(&mut self, store: StoreSel, stage: Stage, key: &str, payload: Slab) -> VTime {
+        self.env.partition_gate(self.w);
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
         let traced = env.trace.enabled();
@@ -313,6 +323,7 @@ impl Timeline<'_> {
 
     /// Download from an object store (blocks on visibility).
     pub fn get(&mut self, store: StoreSel, stage: Stage, key: &str) -> Result<Slab> {
+        self.env.partition_gate(self.w);
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
         let traced = env.trace.enabled();
@@ -340,6 +351,7 @@ impl Timeline<'_> {
         stage: Stage,
         keys: &[String],
     ) -> Result<Vec<Slab>> {
+        self.env.partition_gate(self.w);
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
         let traced = env.trace.enabled();
@@ -363,6 +375,7 @@ impl Timeline<'_> {
 
     /// Transfer a payload into a Redis instance.
     pub fn redis_set(&mut self, sel: RedisSel, stage: Stage, key: &str, payload: Slab) -> VTime {
+        self.env.partition_gate(self.w);
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
         let traced = env.trace.enabled();
@@ -392,6 +405,7 @@ impl Timeline<'_> {
 
     /// Transfer a payload out of a Redis instance (blocks on visibility).
     pub fn redis_get(&mut self, sel: RedisSel, stage: Stage, key: &str) -> Result<Slab> {
+        self.env.partition_gate(self.w);
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
         let (done, slab) = match sel {
@@ -419,6 +433,7 @@ impl Timeline<'_> {
     /// visibility time. Publishes are not charged to a stage (they are
     /// sub-millisecond next to the payload transfers around them).
     pub fn notify(&mut self, topic: &str, body: impl Into<String>) -> VTime {
+        self.env.partition_gate(self.w);
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
         let traced = env.trace.enabled();
@@ -438,6 +453,7 @@ impl Timeline<'_> {
     /// Block until `count` messages are visible on `topic`; the wait is
     /// charged as synchronization time.
     pub fn poll(&mut self, topic: &str, count: usize) -> Result<VTime> {
+        self.env.partition_gate(self.w);
         let env = &mut *self.env;
         let t0 = env.workers[self.w].clock;
         let traced = env.trace.enabled();
@@ -752,6 +768,31 @@ mod tests {
                 "worker {w}: traced and untraced clocks must match"
             );
         }
+    }
+
+    #[test]
+    fn partitioned_worker_ops_defer_to_heal() {
+        use crate::faults::FaultPlan;
+        let cfg = EnvConfig::virtual_paper(FrameworkKind::AllReduce, "mobilenet", 2)
+            .unwrap()
+            .with_faults(FaultPlan::none().partition(&[0], 0.0, 40.0));
+        let mut e = ClusterEnv::new(cfg).unwrap();
+        let n = e.n_params;
+        let done =
+            e.timeline(0).put(StoreSel::Shared, Stage::Synchronize, "k", Slab::virtual_of(n));
+        assert!(done.secs() >= 40.0, "op deferred to heal, got {}", done.secs());
+        assert!((e.recovery.partition_secs - 40.0).abs() < 1e-9);
+        // Peer visibility follows the deferred write: the reachability mask
+        // is what the quorum/visibility paths observe.
+        assert!(e.store.visible_at("k").unwrap().secs() > 40.0);
+        // After the heal the worker is reachable again: no further gating.
+        let healed = e.workers[0].clock;
+        e.timeline(0).notify("t", "go");
+        assert!(e.workers[0].clock - healed < 1.0);
+        assert!((e.recovery.partition_secs - 40.0).abs() < 1e-9);
+        // The unpartitioned peer is never gated.
+        e.timeline(1).notify("t", "go2");
+        assert!(e.workers[1].clock.secs() < 1.0);
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod table1;
 pub mod table2;
 pub mod table3;
 pub mod table4_faults;
+pub mod tournament;
 pub mod trace;
 
 pub use crate::report::{rel_err, vs_paper};

@@ -1,0 +1,586 @@
+//! Robustness tournament: aggregation rule × adversarial regime ×
+//! architecture, with a cost/accuracy Pareto verdict per cell family.
+//!
+//! Table 4 measures one fault at a time under the default (mean)
+//! aggregation. The tournament asks the composite question the SPIRT
+//! robustness claims actually hinge on: *which aggregation rule should each
+//! architecture run when the environment is adversarial, and what does that
+//! choice cost?* Every cell is one deterministic session of a paper-scale
+//! workload under one of the four adversarial regimes from `faults::`
+//! (colluding Byzantine coalition, healing network partition, heavy-tailed
+//! Pareto stragglers, correlated spot-preemption storm), with one of five
+//! aggregation rules (`mean`, `clipped:1`, `coord-median`, `krum:2`,
+//! `trimmed:2`) driving `ClusterEnv::aggregate` — so the rule's extra
+//! compute is billed on the virtual clock and in the ledger.
+//!
+//! The accuracy axis cannot come from size-only slabs, so it comes from the
+//! same real-gradient logistic task as the poisoning demo
+//! ([`crate::faults::poison_demo::coalition_accuracy`]): under the
+//! coalition regime the demo's coalition (workers 1 and 2 of 8, `Scale(-8)`)
+//! poisons its shards; under the other regimes the adversary corrupts
+//! timing/availability but not gradient values, so accuracy is the rule's
+//! clean-run accuracy (robust estimators pay a small bias even with no
+//! adversary — that is exactly the cost the Pareto column weighs).
+//!
+//! Per (attack × architecture) family the five rule-cells are scored on
+//! (cost, accuracy): a rule is Pareto-optimal when no other rule is at
+//! least as cheap *and* at least as accurate with one strict improvement.
+//! Cells run in parallel on std threads (work-stealing cursor, like the
+//! scale sweep); results are bit-identical for any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::cloud::FrameworkKind;
+use crate::coordinator::{strategy_for, ClusterEnv, EnvConfig};
+use crate::faults::{poison_demo, FaultPlan, PoisonMode};
+use crate::metrics::RecoveryStats;
+use crate::report::{Align, Cell as RCell, Report, Section, Table};
+use crate::tensor::AggregationRule;
+use crate::train::{run_session, SessionConfig};
+use crate::Result;
+
+/// The four adversarial regimes (column families of the grid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attack {
+    /// Workers 1 and 2 collude: both submit `Scale(-8)`-poisoned updates on
+    /// the same rounds from the middle epoch onward.
+    Coalition,
+    /// Worker 1 is partitioned from the network from the start of the run;
+    /// the partition heals at a planned virtual time (45 s).
+    Partition,
+    /// Workers 1–3 draw heavy-tailed (Pareto, alpha 1.5) compute slowdowns
+    /// every round from the middle epoch onward.
+    StragglerTail,
+    /// Workers 1–3 are spot-preempted in one correlated burst mid-epoch and
+    /// pay cold-start restarts.
+    PreemptionStorm,
+}
+
+impl Attack {
+    pub const ALL: [Attack; 4] = [
+        Attack::Coalition,
+        Attack::Partition,
+        Attack::StragglerTail,
+        Attack::PreemptionStorm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Attack::Coalition => "coalition",
+            Attack::Partition => "partition",
+            Attack::StragglerTail => "straggler-tail",
+            Attack::PreemptionStorm => "preemption-storm",
+        }
+    }
+
+    /// Parse a CLI spec (`coalition|partition|straggler-tail|preemption-storm`).
+    pub fn parse(spec: &str) -> Result<Attack> {
+        let spec = spec.trim().to_ascii_lowercase();
+        for a in Attack::ALL {
+            if spec == a.name() {
+                return Ok(a);
+            }
+        }
+        anyhow::bail!(
+            "unknown attack {spec:?} (coalition|partition|straggler-tail|preemption-storm)"
+        )
+    }
+}
+
+/// The rule roster every (attack × architecture) family competes over.
+pub fn rules() -> [AggregationRule; 5] {
+    [
+        AggregationRule::Mean,
+        AggregationRule::ClippedMean { ratio: 1.0 },
+        AggregationRule::CoordMedian,
+        AggregationRule::Krum { f: 2 },
+        AggregationRule::TrimmedMean { k: 2 },
+    ]
+}
+
+/// The coalition: 2 of 8 workers, below every roster rule's breakdown
+/// point (krum:2 needs `n >= f + 3 = 5`, trimmed:2 needs `n > 2k = 4`).
+pub const COALITION: [usize; 2] = [1, 2];
+/// The coalition's poison: large negative scaling, the regime where the
+/// plain mean demonstrably diverges (asserted in the tests below).
+pub const COALITION_MODE: PoisonMode = PoisonMode::Scale(-8.0);
+/// Victims of the straggler-tail and preemption-storm regimes.
+pub const STORM_VICTIMS: [usize; 3] = [1, 2, 3];
+
+/// Tournament knobs.
+#[derive(Debug, Clone)]
+pub struct TournamentConfig {
+    /// Calibrated model profile for the sessions (`mobilenet`, ...).
+    pub model: String,
+    /// Architectures to run (default: all five).
+    pub frameworks: Vec<FrameworkKind>,
+    /// Adversarial regimes to run (default: all four).
+    pub attacks: Vec<Attack>,
+    /// Session workers. Must be >= 5 so `krum:2` has `n >= f + 3`
+    /// contributions to score (the accuracy axis always uses the demo's
+    /// 8-worker task so its columns stay comparable across configs).
+    pub workers: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Simulation threads (0 = one per available core).
+    pub threads: usize,
+}
+
+impl Default for TournamentConfig {
+    fn default() -> Self {
+        TournamentConfig {
+            model: "mobilenet".to_string(),
+            frameworks: FrameworkKind::ALL.to_vec(),
+            attacks: Attack::ALL.to_vec(),
+            workers: 8,
+            epochs: 2,
+            seed: 42,
+            threads: 0,
+        }
+    }
+}
+
+/// Deterministic fault plan for one regime. The adversarial epoch is the
+/// middle of the run, mirroring `table4_faults::plan_for`.
+pub fn plan_for(attack: Attack, cfg: &TournamentConfig) -> FaultPlan {
+    let epoch = (cfg.epochs / 2 + 1).min(cfg.epochs);
+    match attack {
+        Attack::Coalition => FaultPlan::none().coalition(&COALITION, epoch, 0, None, COALITION_MODE),
+        // Start at vtime 0 so the victim's *first* communication op is the
+        // one that defers (every architecture's first sync lands well
+        // before the 45 s heal), making the regime observable for all five
+        // topologies regardless of their round cadence.
+        Attack::Partition => FaultPlan::none().partition(&[1], 0.0, 45.0),
+        Attack::StragglerTail => {
+            FaultPlan::none().pareto_stragglers(&STORM_VICTIMS, epoch, 0, 1.5, 1.0, cfg.seed, None)
+        }
+        Attack::PreemptionStorm => FaultPlan::none().preemption_storm(&STORM_VICTIMS, epoch, 12),
+    }
+}
+
+/// One (architecture × attack × rule) measurement.
+#[derive(Debug, Clone)]
+pub struct TournamentCell {
+    pub framework: FrameworkKind,
+    pub attack: Attack,
+    pub rule: AggregationRule,
+    /// Session wall time on the virtual timeline (seconds).
+    pub vtime_secs: f64,
+    /// Session cost under the paper's model (USD).
+    pub cost_usd: f64,
+    /// Final accuracy of the real-gradient logistic task under this
+    /// (attack, rule) — shared across architectures by construction.
+    pub accuracy: f64,
+    pub recovery: RecoveryStats,
+    /// Pareto-optimal on (cost, accuracy) within its (attack × architecture)
+    /// family of rule-cells.
+    pub pareto: bool,
+}
+
+/// The full grid plus the clean-run headline the accuracy deltas read
+/// against.
+#[derive(Debug, Clone)]
+pub struct Tournament {
+    pub cells: Vec<TournamentCell>,
+    /// Fault-free accuracy of the plain mean on the demo task.
+    pub clean_acc: f64,
+}
+
+/// Accuracy axis, precomputed per (poisoned?, rule): the logistic-task
+/// runs are independent of the session grid, so each unique pair trains
+/// once.
+struct AccTable {
+    clean: Vec<f64>,
+    coalition: Vec<f64>,
+}
+
+fn accuracy_axis(seed: u64) -> Result<AccTable> {
+    let mut clean = Vec::new();
+    let mut coalition = Vec::new();
+    for rule in rules() {
+        clean.push(poison_demo::coalition_accuracy(
+            seed,
+            poison_demo::DEMO_WORKERS,
+            &[],
+            COALITION_MODE,
+            rule,
+        )?);
+        coalition.push(poison_demo::coalition_accuracy(
+            seed,
+            poison_demo::DEMO_WORKERS,
+            &COALITION,
+            COALITION_MODE,
+            rule,
+        )?);
+    }
+    Ok(AccTable { clean, coalition })
+}
+
+fn run_cell(
+    cfg: &TournamentConfig,
+    fw: FrameworkKind,
+    attack: Attack,
+    rule: AggregationRule,
+) -> Result<(f64, f64, RecoveryStats)> {
+    let mut env_cfg = EnvConfig::virtual_paper(fw, &cfg.model, cfg.workers)?
+        .with_faults(plan_for(attack, cfg))
+        .with_aggregation(rule);
+    env_cfg.seed = cfg.seed;
+    let mut env = ClusterEnv::new(env_cfg)?;
+    let mut strategy = strategy_for(fw);
+    let session = SessionConfig {
+        max_epochs: cfg.epochs,
+        target_acc: 2.0, // unreachable: run the full epoch budget
+        patience: cfg.epochs + 1,
+        evaluate: false,
+    };
+    let report = run_session(&mut env, strategy.as_mut(), &session)?;
+    Ok((report.total_vtime_secs, report.total_cost_usd, env.recovery.clone()))
+}
+
+/// Mark the Pareto-optimal cells of one (attack × architecture) family on
+/// (cost down, accuracy up). Equal-on-both cells dominate nobody, so ties
+/// all stay on the frontier; the scan is index-ordered and deterministic.
+fn mark_pareto(family: &mut [TournamentCell]) {
+    let scores: Vec<(f64, f64)> = family.iter().map(|c| (c.cost_usd, c.accuracy)).collect();
+    for (i, cell) in family.iter_mut().enumerate() {
+        let (ci, ai) = scores[i];
+        cell.pareto = !scores.iter().enumerate().any(|(j, &(cj, aj))| {
+            j != i && cj <= ci && aj >= ai && (cj < ci || aj > ai)
+        });
+    }
+}
+
+/// Run the tournament grid. Cells are scheduled over a work-stealing
+/// cursor onto `cfg.threads` std threads; output order is deterministic
+/// (framework × attack × rule, as configured) regardless of thread count.
+pub fn run(cfg: &TournamentConfig) -> Result<Tournament> {
+    anyhow::ensure!(
+        cfg.workers >= 5,
+        "tournament needs >= 5 workers so krum:2 has n >= f + 3 contributions"
+    );
+    anyhow::ensure!(
+        !cfg.frameworks.is_empty() && !cfg.attacks.is_empty(),
+        "empty tournament grid"
+    );
+    let acc = accuracy_axis(cfg.seed)?;
+    let roster = rules();
+
+    let tasks: Vec<(FrameworkKind, Attack, usize)> = cfg
+        .frameworks
+        .iter()
+        .flat_map(|&fw| {
+            cfg.attacks.iter().flat_map(move |&a| (0..roster.len()).map(move |r| (fw, a, r)))
+        })
+        .collect();
+    let threads = if cfg.threads > 0 {
+        cfg.threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+    .clamp(1, tasks.len());
+
+    let cursor = AtomicUsize::new(0);
+    type CellOut = (f64, f64, RecoveryStats);
+    let outputs: Vec<Vec<(usize, Result<CellOut>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= tasks.len() {
+                            break;
+                        }
+                        let (fw, attack, r) = tasks[i];
+                        out.push((i, run_cell(cfg, fw, attack, roster[r])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("tournament thread panicked")).collect()
+    });
+
+    let mut indexed: Vec<(usize, CellOut)> = Vec::with_capacity(tasks.len());
+    for (i, res) in outputs.into_iter().flatten() {
+        indexed.push((i, res?));
+    }
+    indexed.sort_by_key(|(i, _)| *i);
+
+    let mut cells: Vec<TournamentCell> = indexed
+        .into_iter()
+        .map(|(i, (vtime_secs, cost_usd, recovery))| {
+            let (fw, attack, r) = tasks[i];
+            let accuracy = match attack {
+                Attack::Coalition => acc.coalition[r],
+                _ => acc.clean[r],
+            };
+            TournamentCell {
+                framework: fw,
+                attack,
+                rule: roster[r],
+                vtime_secs,
+                cost_usd,
+                accuracy,
+                recovery,
+                pareto: false,
+            }
+        })
+        .collect();
+
+    // Families are contiguous runs of `roster.len()` cells by construction.
+    for family in cells.chunks_mut(roster.len()) {
+        mark_pareto(family);
+    }
+    Ok(Tournament { cells, clean_acc: acc.clean[0] })
+}
+
+fn attack_blurb(attack: Attack) -> &'static str {
+    match attack {
+        Attack::Coalition => {
+            "Workers 1 and 2 collude, both submitting Scale(-8)-poisoned updates on the \
+             same rounds from the middle epoch onward. The accuracy column is the \
+             real-gradient demo task under the same 2-of-8 coalition: the plain mean \
+             diverges, the robust rules hold."
+        }
+        Attack::Partition => {
+            "Worker 1 is partitioned from the network over virtual seconds [0, 45): every \
+             communication op it attempts defers to the heal, so its writes surface to \
+             the quorum/visibility paths only afterwards. Gradients are never corrupted, \
+             so accuracy is each rule's clean-run accuracy."
+        }
+        Attack::StragglerTail => {
+            "Workers 1-3 draw deterministic Pareto(alpha=1.5) compute slowdowns every \
+             round from the middle epoch onward — the occasional 10x+ tail event is the \
+             point. Accuracy is each rule's clean-run accuracy."
+        }
+        Attack::PreemptionStorm => {
+            "Workers 1-3 are spot-preempted in one correlated burst mid-epoch; each pays \
+             a cold-start restart, billed like any invocation retry. Accuracy is each \
+             rule's clean-run accuracy."
+        }
+    }
+}
+
+/// Build the tournament report: one section per attack, each a
+/// (framework × rule) table with the Pareto verdict. No paper anchors —
+/// the grid extends beyond the paper; its hard bounds live in the tests.
+pub fn report(t: &Tournament, cfg: &TournamentConfig) -> Report {
+    let fw_names: Vec<&str> = cfg.frameworks.iter().map(|f| f.name()).collect();
+    let attack_names: Vec<&str> = cfg.attacks.iter().map(|a| a.name()).collect();
+    let mut rep = Report::new(
+        "tournament",
+        "Robustness tournament — aggregation rule × attack × architecture",
+        format!(
+            "slsgpu robustness-tournament --model {} --workers {} --epochs {} --seed {}",
+            cfg.model, cfg.workers, cfg.epochs, cfg.seed
+        ),
+    )
+    .with_intro(format!(
+        "Every cell is one deterministic session of the {} workload ({} workers, {} \
+         epochs) under one adversarial regime, with the named aggregation rule driving \
+         every aggregation in the protocol (its extra compute is billed on the virtual \
+         clock and in the ledger). Accuracy comes from the real-gradient logistic demo \
+         task under the same regime; the fault-free mean reaches {:.1}%. Within each \
+         (attack, architecture) family a rule is Pareto-optimal (*) when no other rule \
+         is at least as cheap and at least as accurate with one strict improvement. \
+         Architectures: {}. Attacks: {}.",
+        cfg.model,
+        cfg.workers,
+        cfg.epochs,
+        t.clean_acc * 100.0,
+        fw_names.join(", "),
+        attack_names.join(", "),
+    ));
+
+    for &attack in &cfg.attacks {
+        let mut table = Table::new(
+            format!("tournament_{}", attack.name().replace('-', "_")),
+            &[
+                ("Framework", Align::Left),
+                ("Rule", Align::Left),
+                ("Time (s)", Align::Right),
+                ("Cost ($)", Align::Right),
+                ("Acc (%)", Align::Right),
+                ("dAcc (pts)", Align::Right),
+                ("Pareto", Align::Left),
+                ("Recovery", Align::Left),
+            ],
+        )
+        .title(format!("Attack: {}", attack.name()));
+        let mut last_fw: Option<FrameworkKind> = None;
+        for cell in t.cells.iter().filter(|c| c.attack == attack) {
+            if last_fw.is_some() && last_fw != Some(cell.framework) {
+                table.rule();
+            }
+            last_fw = Some(cell.framework);
+            let dacc = (cell.accuracy - t.clean_acc) * 100.0;
+            table.push_row(vec![
+                RCell::text(cell.framework.name()),
+                RCell::text(cell.rule.name()),
+                RCell::num(cell.vtime_secs, 1),
+                RCell::num(cell.cost_usd, 4),
+                RCell::num(cell.accuracy * 100.0, 1),
+                RCell::text(format!("{dacc:+.1}")).with_value(dacc),
+                RCell::text(if cell.pareto { "*" } else { "-" }),
+                RCell::text(cell.recovery.summary()),
+            ]);
+        }
+        rep = rep.with_section(
+            Section::new()
+                .heading(format!("Attack: {}", attack.name()))
+                .paragraph(attack_blurb(attack))
+                .table(table),
+        );
+    }
+    rep.with_note(
+        "Bit-identical across reruns and thread counts: every cell is an independent \
+         seeded simulation, the accuracy axis is a seeded real-gradient run, and the \
+         Pareto scan is index-ordered (asserted in the tests and in \
+         rust/tests/determinism.rs).",
+    )
+}
+
+/// CLI view of [`report`].
+pub fn render(t: &Tournament, cfg: &TournamentConfig) -> String {
+    report(t, cfg).to_text()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TournamentConfig {
+        TournamentConfig {
+            frameworks: vec![FrameworkKind::Spirt, FrameworkKind::AllReduce],
+            epochs: 1,
+            threads: 2,
+            ..TournamentConfig::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_every_cell_and_marks_a_frontier() {
+        let cfg = small();
+        let t = run(&cfg).unwrap();
+        assert_eq!(t.cells.len(), 2 * Attack::ALL.len() * rules().len());
+        for cell in &t.cells {
+            assert!(cell.vtime_secs > 0.0, "{cell:?}");
+            assert!(cell.cost_usd > 0.0, "{cell:?}");
+            assert!(cell.accuracy > 0.0 && cell.accuracy <= 1.0, "{cell:?}");
+        }
+        // Every (attack, framework) family keeps at least one cell on the
+        // Pareto frontier (a non-empty finite set always has a maximum).
+        for fw in &cfg.frameworks {
+            for attack in Attack::ALL {
+                assert!(
+                    t.cells
+                        .iter()
+                        .any(|c| c.framework == *fw && c.attack == attack && c.pareto),
+                    "{fw:?}/{attack:?} family has an empty frontier"
+                );
+            }
+        }
+        // The regimes actually fired, and only in their own columns.
+        for cell in &t.cells {
+            match cell.attack {
+                Attack::Coalition => assert!(cell.recovery.poisoned_grads > 0, "{cell:?}"),
+                Attack::Partition => assert!(cell.recovery.partition_secs > 0.0, "{cell:?}"),
+                Attack::StragglerTail => assert!(cell.recovery.straggler_secs > 0.0, "{cell:?}"),
+                Attack::PreemptionStorm => {
+                    assert_eq!(cell.recovery.preemptions, STORM_VICTIMS.len() as u64, "{cell:?}")
+                }
+            }
+        }
+        let text = render(&t, &cfg);
+        assert!(text.contains("Attack: coalition"), "{text}");
+        assert!(text.contains("krum"), "{text}");
+        assert!(text.contains('*'), "{text}");
+    }
+
+    #[test]
+    fn deterministic_across_reruns_and_thread_counts() {
+        let mut serial = small();
+        serial.threads = 1;
+        let mut parallel = small();
+        parallel.threads = 4;
+        let a = run(&serial).unwrap();
+        let b = run(&parallel).unwrap();
+        let c = run(&parallel).unwrap();
+        assert_eq!(a.cells.len(), b.cells.len());
+        for ((x, y), z) in a.cells.iter().zip(&b.cells).zip(&c.cells) {
+            assert_eq!(x.framework, y.framework);
+            assert_eq!(x.attack, y.attack);
+            assert_eq!(x.rule, y.rule);
+            for (p, q) in [(x, y), (y, z)] {
+                assert_eq!(
+                    p.vtime_secs.to_bits(),
+                    q.vtime_secs.to_bits(),
+                    "{:?}/{:?}/{}",
+                    p.framework,
+                    p.attack,
+                    p.rule.name()
+                );
+                assert_eq!(p.cost_usd.to_bits(), q.cost_usd.to_bits());
+                assert_eq!(p.accuracy.to_bits(), q.accuracy.to_bits());
+                assert_eq!(p.pareto, q.pareto);
+            }
+        }
+        assert_eq!(render(&a, &serial), render(&b, &parallel));
+    }
+
+    /// The acceptance headline: under the 2-of-8 coalition the plain mean
+    /// demonstrably diverges while krum:2 and trimmed:2 recover to within
+    /// tolerance of the fault-free accuracy.
+    #[test]
+    fn coalition_mean_diverges_robust_rules_recover() {
+        let cfg = TournamentConfig {
+            frameworks: vec![FrameworkKind::Spirt],
+            attacks: vec![Attack::Coalition],
+            epochs: 1,
+            threads: 2,
+            ..TournamentConfig::default()
+        };
+        let t = run(&cfg).unwrap();
+        assert!(t.clean_acc > 0.85, "baseline learns the task, got {:.3}", t.clean_acc);
+        let acc = |rule: AggregationRule| {
+            t.cells.iter().find(|c| c.rule == rule).map(|c| c.accuracy).unwrap()
+        };
+        assert!(
+            acc(AggregationRule::Mean) < t.clean_acc - 0.05,
+            "mean must diverge under the coalition: {:.3} vs clean {:.3}",
+            acc(AggregationRule::Mean),
+            t.clean_acc
+        );
+        // Trimmed mean still averages n-2k honest shards, so it sits close
+        // to the clean mean; Krum selects a *single* honest shard gradient
+        // per round (1/8 of the data), so it pays a visible but bounded
+        // selection-noise penalty — its tolerance is looser on purpose.
+        assert!(
+            acc(AggregationRule::TrimmedMean { k: 2 }) >= t.clean_acc - 0.04,
+            "trimmed-mean must recover within 4 points: {:.3} vs clean {:.3}",
+            acc(AggregationRule::TrimmedMean { k: 2 }),
+            t.clean_acc
+        );
+        assert!(
+            acc(AggregationRule::Krum { f: 2 }) >= t.clean_acc - 0.07,
+            "krum must recover within 7 points: {:.3} vs clean {:.3}",
+            acc(AggregationRule::Krum { f: 2 }),
+            t.clean_acc
+        );
+        // Krum's extra passes are billed: its sessions cost more than mean's.
+        let cost = |rule: AggregationRule| {
+            t.cells.iter().find(|c| c.rule == rule).map(|c| c.cost_usd).unwrap()
+        };
+        assert!(cost(AggregationRule::Krum { f: 2 }) > cost(AggregationRule::Mean));
+    }
+
+    #[test]
+    fn attack_specs_round_trip() {
+        for a in Attack::ALL {
+            assert_eq!(Attack::parse(a.name()).unwrap(), a);
+        }
+        assert!(Attack::parse("sybil").is_err());
+    }
+}

@@ -11,10 +11,17 @@
 //! * [`plan`] — [`FaultPlan`] / [`FaultSchedule`]: seeded, virtual-time-
 //!   deterministic injection of worker crashes (with cold-start restarts),
 //!   straggler slowdowns, update drops, and gradient poisoning, planned at
-//!   protocol coordinates (epoch/round) or virtual times.
+//!   protocol coordinates (epoch/round) or virtual times. Four adversarial
+//!   regimes compose on top of the single-fault kinds: colluding Byzantine
+//!   *coalitions* ([`FaultPlan::coalition`]), network *partitions* that
+//!   heal at a planned virtual time ([`FaultPlan::partition`], enforced at
+//!   every `coordinator::protocol` op), *heavy-tailed stragglers* with
+//!   deterministic Pareto draws ([`FaultPlan::pareto_stragglers`]) and
+//!   correlated spot-*preemption storms*
+//!   ([`FaultPlan::preemption_storm`]).
 //! * [`poison_demo`] — a dependency-free distributed training task that
 //!   shows robust aggregation (`tensor::robust`) recovering accuracy under
-//!   a poisoned worker while the naive mean degrades.
+//!   poisoned workers while the naive mean degrades.
 //!
 //! The hooks live in `coordinator::env::ClusterEnv` (fetch/compute/sync/
 //! update boundaries) and in each `Strategy`; recovery *costs* are billed
@@ -25,4 +32,6 @@
 pub mod plan;
 pub mod poison_demo;
 
-pub use plan::{FaultEvent, FaultKind, FaultPlan, FaultSchedule, PoisonMode, SUPERVISOR, Trigger};
+pub use plan::{
+    FaultEvent, FaultKind, FaultPlan, FaultSchedule, PartitionHit, PoisonMode, SUPERVISOR, Trigger,
+};

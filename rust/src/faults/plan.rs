@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 
 use crate::sim::VTime;
 use crate::tensor::Slab;
+use crate::util::rng::Rng;
 
 /// Sentinel worker id for events that target the MLLess supervisor rather
 /// than a training worker.
@@ -67,6 +68,24 @@ pub enum FaultKind {
     ShardCrash,
     /// The worker submits corrupted gradients while active.
     Poison(PoisonMode),
+    /// The worker is cut off from the network (stores, queues, peers) from
+    /// the trigger until virtual time `heal` on its clock: every protocol
+    /// op it issues in that window is deferred to the heal time. Partition
+    /// events must use [`Trigger::VTime`] so the heal-after-start invariant
+    /// is checkable up front.
+    Partition { heal: f64 },
+    /// Heavy-tailed straggler: each affected round draws a deterministic
+    /// Pareto-like slowdown factor `scale · (1 − u)^(−1/alpha)` where `u`
+    /// is a seeded uniform keyed by (worker, epoch, round). Small `alpha`
+    /// (e.g. 1.5) gives the occasional catastrophic tail round the fixed
+    /// [`FaultKind::Straggler`] cannot model.
+    ParetoStraggler { alpha: f64, scale: f64, seed: u64 },
+    /// Spot-instance preemption: the in-flight invocation is reclaimed by
+    /// the platform mid-compute. Recovery mechanics match
+    /// [`FaultKind::CrashCompute`] (cold start + state re-load + recompute,
+    /// billed again), but the event is traced as a preemption so storms
+    /// stay visible as such in the event log.
+    Preempt,
 }
 
 /// When a fault triggers.
@@ -210,17 +229,162 @@ impl FaultPlan {
             rounds: None,
         })
     }
+
+    /// A colluding Byzantine coalition: every worker in `members` applies
+    /// the same `mode` on the same rounds — `rounds` rounds from
+    /// (epoch, round), `None` = to the end of the run. Coordinated
+    /// poisoning is the regime robust aggregators quote their breakdown
+    /// point `f` against; validation rejects plans that name a member
+    /// twice with overlapping windows (the duplicate would silently
+    /// shadow under first-match-wins resolution).
+    pub fn coalition(
+        mut self,
+        members: &[usize],
+        epoch: usize,
+        round: usize,
+        rounds: Option<usize>,
+        mode: PoisonMode,
+    ) -> FaultPlan {
+        for &worker in members {
+            self.events.push(FaultEvent {
+                worker,
+                kind: FaultKind::Poison(mode),
+                at: Trigger::Round { epoch, round },
+                rounds,
+            });
+        }
+        self
+    }
+
+    /// Partition `members` off the network from virtual time `start` until
+    /// they heal at `heal` (both on the affected workers' clocks). While
+    /// partitioned, every protocol op a member issues is deferred to the
+    /// heal time; peers see its writes only after. Validation rejects
+    /// `heal <= start`.
+    pub fn partition(mut self, members: &[usize], start: f64, heal: f64) -> FaultPlan {
+        for &worker in members {
+            self.events.push(FaultEvent {
+                worker,
+                kind: FaultKind::Partition { heal },
+                at: Trigger::VTime(start),
+                rounds: None,
+            });
+        }
+        self
+    }
+
+    /// Heavy-tailed stragglers on `members`: each affected round draws a
+    /// deterministic Pareto-like factor (shape `alpha`, minimum `scale`)
+    /// from a stream keyed by `seed` and the (worker, epoch, round)
+    /// coordinates, for `rounds` rounds from (epoch, round);
+    /// `None` = rest of the run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pareto_stragglers(
+        mut self,
+        members: &[usize],
+        epoch: usize,
+        round: usize,
+        alpha: f64,
+        scale: f64,
+        seed: u64,
+        rounds: Option<usize>,
+    ) -> FaultPlan {
+        for &worker in members {
+            self.events.push(FaultEvent {
+                worker,
+                kind: FaultKind::ParetoStraggler { alpha, scale, seed },
+                at: Trigger::Round { epoch, round },
+                rounds,
+            });
+        }
+        self
+    }
+
+    /// A correlated spot-preemption storm: every worker in `victims` is
+    /// preempted mid-compute at (epoch, round) — the burst pattern of a
+    /// capacity reclaim sweeping a spot fleet. Each victim pays the full
+    /// cold-start restart billing of a compute crash.
+    pub fn preemption_storm(mut self, victims: &[usize], epoch: usize, round: usize) -> FaultPlan {
+        for &worker in victims {
+            self.events.push(FaultEvent {
+                worker,
+                kind: FaultKind::Preempt,
+                at: Trigger::Round { epoch, round },
+                rounds: None,
+            });
+        }
+        self
+    }
+}
+
+/// Can two poison windows on the same worker ever be active on the same
+/// round? Conservative: any reachable overlap counts.
+fn poison_windows_overlap(a: &FaultEvent, b: &FaultEvent) -> bool {
+    let (ea, ra, na) = match a.at {
+        // A VTime-triggered poison is active from t to the end of the run.
+        Trigger::VTime(_) => return true,
+        Trigger::Round { epoch, round } => (epoch, round, a.rounds),
+    };
+    let (eb, rb, nb) = match b.at {
+        Trigger::VTime(_) => return true,
+        Trigger::Round { epoch, round } => (epoch, round, b.rounds),
+    };
+    match (na, nb) {
+        // Bounded windows are epoch-local: overlap needs the same epoch
+        // and intersecting round intervals.
+        (Some(na), Some(nb)) => ea == eb && ra < rb + nb && rb < ra + na,
+        // An open window covers every round of every later epoch.
+        (None, Some(nb)) => eb > ea || (eb == ea && rb + nb > ra),
+        (Some(na), None) => ea > eb || (ea == eb && ra + na > rb),
+        (None, None) => true,
+    }
+}
+
+/// A deterministic Pareto-like slowdown factor for one (worker, epoch,
+/// round) coordinate: `scale · (1 − u)^(−1/alpha)` with `u` drawn from a
+/// stream forked off `seed` by the coordinates. Pure function — the same
+/// coordinates always produce the same factor, independent of query order.
+fn pareto_factor(
+    seed: u64,
+    worker: usize,
+    epoch: usize,
+    round: usize,
+    alpha: f64,
+    scale: f64,
+) -> f64 {
+    let u = Rng::new(seed)
+        .fork(worker as u64)
+        .fork(epoch as u64)
+        .fork(round as u64)
+        .next_f64();
+    // u ∈ [0, 1); cap just below 1 so the tail stays finite.
+    scale * (1.0 - u.min(1.0 - 1e-12)).powf(-1.0 / alpha)
+}
+
+/// Result of a [`FaultSchedule::partition_until`] query for a partitioned
+/// worker: when it heals, and which planned windows were consulted for the
+/// first time (so the env traces each partition span exactly once).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionHit {
+    /// Virtual time the worker becomes reachable again.
+    pub until: f64,
+    /// `(start, heal)` of each window first consulted by this query.
+    pub newly: Vec<(f64, f64)>,
 }
 
 /// A [`FaultPlan`] armed for one run.
 #[derive(Debug, Clone, Default)]
 pub struct FaultSchedule {
     events: Vec<FaultEvent>,
-    /// One-shot consumption flags (crashes fire exactly once).
+    /// One-shot consumption flags (crashes fire exactly once; partitions
+    /// reuse the flag to trace their window exactly once).
     fired: Vec<bool>,
     /// Per-worker compute-round counter, reset each epoch.
     round_of: Vec<usize>,
     epoch: usize,
+    /// Cached "any partition events at all" — `partition_until` sits on
+    /// every protocol op, so the common no-partition case must be one load.
+    has_partition: bool,
 }
 
 impl FaultSchedule {
@@ -242,13 +406,52 @@ impl FaultSchedule {
                     bail!("straggler factor must be >= 1, got {factor}");
                 }
             }
+            if let FaultKind::ParetoStraggler { alpha, scale, .. } = ev.kind {
+                if !(alpha > 0.0 && alpha.is_finite()) {
+                    bail!("pareto straggler shape must be > 0, got {alpha}");
+                }
+                if !(scale >= 1.0 && scale.is_finite()) {
+                    bail!("pareto straggler scale must be >= 1, got {scale}");
+                }
+            }
+            if let FaultKind::Partition { heal } = ev.kind {
+                let Trigger::VTime(start) = ev.at else {
+                    bail!("partition events must use a VTime trigger");
+                };
+                if !(heal.is_finite() && start.is_finite() && heal > start) {
+                    bail!("partition heal time {heal} must follow its start {start}");
+                }
+            }
+        }
+        // A worker named twice in overlapping poison windows would fire
+        // silently under first-match-wins resolution: the duplicate event
+        // never applies, and a coalition plan that meant two *different*
+        // workers quietly loses a member. Reject up front.
+        for (i, a) in plan.events.iter().enumerate() {
+            if !matches!(a.kind, FaultKind::Poison(_)) {
+                continue;
+            }
+            for b in plan.events.iter().skip(i + 1) {
+                if !matches!(b.kind, FaultKind::Poison(_)) || a.worker != b.worker {
+                    continue;
+                }
+                if poison_windows_overlap(a, b) {
+                    bail!(
+                        "poison events name worker {} twice with overlapping rounds",
+                        a.worker
+                    );
+                }
+            }
         }
         let fired = vec![false; plan.events.len()];
+        let has_partition =
+            plan.events.iter().any(|ev| matches!(ev.kind, FaultKind::Partition { .. }));
         Ok(FaultSchedule {
             events: plan.events,
             fired,
             round_of: vec![0; workers],
             epoch: 0,
+            has_partition,
         })
     }
 
@@ -304,16 +507,55 @@ impl FaultSchedule {
     }
 
     /// Compute slowdown multiplier for `worker` at `round` (product of all
-    /// active straggler events; 1.0 when none).
+    /// active straggler events; 1.0 when none). Heavy-tailed events draw
+    /// their factor from a pure function of (seed, worker, epoch, round),
+    /// so the same coordinates always see the same tail.
     pub fn compute_factor(&self, worker: usize, round: usize, now: VTime) -> f64 {
         self.events
             .iter()
             .filter(|ev| ev.worker == worker)
             .filter_map(|ev| match ev.kind {
                 FaultKind::Straggler { factor } if self.active(ev, round, now) => Some(factor),
+                FaultKind::ParetoStraggler { alpha, scale, seed }
+                    if self.active(ev, round, now) =>
+                {
+                    Some(pareto_factor(seed, worker, self.epoch, round, alpha, scale))
+                }
                 _ => None,
             })
             .product()
+    }
+
+    /// If `worker` is partitioned at `now`, the virtual time it heals
+    /// (max over overlapping partition events), plus the `(start, heal)`
+    /// windows consulted here for the first time (for one-shot trace
+    /// emission). `None` when the worker is reachable.
+    pub fn partition_until(&mut self, worker: usize, now: VTime) -> Option<PartitionHit> {
+        if !self.has_partition {
+            return None;
+        }
+        let mut until = f64::NEG_INFINITY;
+        let mut newly = Vec::new();
+        for (i, ev) in self.events.iter().enumerate() {
+            let FaultKind::Partition { heal } = ev.kind else { continue };
+            // Validated at construction: partitions are VTime-triggered.
+            let Trigger::VTime(start) = ev.at else { continue };
+            if ev.worker != worker || now.secs() < start || now.secs() >= heal {
+                continue;
+            }
+            until = until.max(heal);
+            if !self.fired[i] {
+                self.fired[i] = true;
+                newly.push((start, heal));
+            }
+        }
+        (until > f64::NEG_INFINITY).then_some(PartitionHit { until, newly })
+    }
+
+    /// Does the platform preempt `worker`'s in-flight invocation at
+    /// `round`? Consumes the event (a spot reclaim fires once).
+    pub fn preempted(&mut self, worker: usize, round: usize, now: VTime) -> bool {
+        self.fire(worker, FaultKind::Preempt, Some(round), now)
     }
 
     /// Active poison mode for `worker` at `round` (first match wins).
@@ -529,6 +771,127 @@ mod tests {
         PoisonMode::Scale(-4.0).apply(&mut v);
         assert_eq!(v.len(), 3);
         assert!(!v.is_real());
+    }
+
+    #[test]
+    fn coalition_expands_to_coordinated_poison_events() {
+        let plan =
+            FaultPlan::none().coalition(&[1, 3], 2, 1, Some(2), PoisonMode::Scale(-4.0));
+        assert_eq!(plan.events.len(), 2);
+        let mut s = FaultSchedule::new(plan, 4).unwrap();
+        s.begin_epoch(2);
+        for w in [1, 3] {
+            assert!(s.poison(w, 0, t(0.0)).is_none(), "before the window");
+            assert_eq!(s.poison(w, 1, t(0.0)), Some(PoisonMode::Scale(-4.0)));
+            assert_eq!(s.poison(w, 2, t(0.0)), Some(PoisonMode::Scale(-4.0)));
+            assert!(s.poison(w, 3, t(0.0)).is_none(), "after the window");
+        }
+        assert!(s.poison(0, 1, t(0.0)).is_none(), "non-members unaffected");
+    }
+
+    #[test]
+    fn coalition_naming_a_worker_twice_on_one_round_is_rejected() {
+        // The duplicate would silently shadow under first-match-wins.
+        let dup = FaultPlan::none().coalition(&[1, 1], 1, 0, Some(2), PoisonMode::SignFlip);
+        let err = FaultSchedule::new(dup, 4).unwrap_err().to_string();
+        assert!(err.contains("twice"), "{err}");
+        // Two open-ended poison events on one worker always overlap.
+        let open = FaultPlan::none()
+            .poison(2, 1, PoisonMode::SignFlip)
+            .poison(2, 5, PoisonMode::Scale(-2.0));
+        assert!(FaultSchedule::new(open, 4).is_err());
+        // Disjoint bounded windows on the same worker are fine.
+        let disjoint = FaultPlan::none()
+            .coalition(&[0], 1, 0, Some(2), PoisonMode::SignFlip)
+            .coalition(&[0], 1, 5, Some(2), PoisonMode::Scale(-2.0));
+        assert!(FaultSchedule::new(disjoint, 4).is_ok());
+        // Same rounds on *different* workers is the whole point.
+        let coalition =
+            FaultPlan::none().coalition(&[0, 1, 2], 1, 0, None, PoisonMode::SignFlip);
+        assert!(FaultSchedule::new(coalition, 4).is_ok());
+    }
+
+    #[test]
+    fn partition_heal_must_follow_start() {
+        let backwards = FaultPlan::none().partition(&[0], 50.0, 10.0);
+        let err = FaultSchedule::new(backwards, 2).unwrap_err().to_string();
+        assert!(err.contains("heal"), "{err}");
+        assert!(FaultSchedule::new(FaultPlan::none().partition(&[0], 50.0, 50.0), 2).is_err());
+        // Round-triggered partitions have no checkable start: rejected.
+        let round_trigger = FaultPlan::none().with(FaultEvent {
+            worker: 0,
+            kind: FaultKind::Partition { heal: 10.0 },
+            at: Trigger::Round { epoch: 1, round: 0 },
+            rounds: None,
+        });
+        assert!(FaultSchedule::new(round_trigger, 2).is_err());
+        assert!(FaultSchedule::new(FaultPlan::none().partition(&[0], 10.0, 50.0), 2).is_ok());
+    }
+
+    #[test]
+    fn partition_window_defers_until_heal() {
+        let plan = FaultPlan::none().partition(&[1], 10.0, 50.0);
+        let mut s = FaultSchedule::new(plan, 2).unwrap();
+        assert!(s.partition_until(1, t(5.0)).is_none(), "before the window");
+        assert!(s.partition_until(0, t(20.0)).is_none(), "other worker");
+        let hit = s.partition_until(1, t(20.0)).unwrap();
+        assert_eq!(hit.until, 50.0);
+        assert_eq!(hit.newly, vec![(10.0, 50.0)], "first consultation reports the window");
+        let hit = s.partition_until(1, t(30.0)).unwrap();
+        assert!(hit.newly.is_empty(), "window reported once");
+        assert!(s.partition_until(1, t(50.0)).is_none(), "healed at the boundary");
+    }
+
+    #[test]
+    fn pareto_straggler_factors_are_deterministic_and_heavy_tailed() {
+        let mk = || {
+            FaultSchedule::new(
+                FaultPlan::none().pareto_stragglers(&[0, 1], 1, 0, 1.5, 1.0, 7, None),
+                2,
+            )
+            .unwrap()
+        };
+        let mut a = mk();
+        let mut b = mk();
+        a.begin_epoch(1);
+        b.begin_epoch(1);
+        let mut max_factor: f64 = 0.0;
+        for round in 0..200 {
+            let fa = a.compute_factor(0, round, t(0.0));
+            assert_eq!(
+                fa.to_bits(),
+                b.compute_factor(0, round, t(0.0)).to_bits(),
+                "same coordinates, same draw"
+            );
+            assert!(fa >= 1.0, "pareto factor is a slowdown, got {fa}");
+            max_factor = max_factor.max(fa);
+        }
+        assert!(max_factor > 4.0, "200 draws at alpha=1.5 should show a tail, max {max_factor}");
+        let other = a.compute_factor(1, 0, t(0.0));
+        assert_ne!(other.to_bits(), a.compute_factor(0, 0, t(0.0)).to_bits());
+        // Invalid shapes/scales are rejected.
+        assert!(FaultSchedule::new(
+            FaultPlan::none().pareto_stragglers(&[0], 1, 0, 0.0, 1.0, 7, None),
+            1
+        )
+        .is_err());
+        assert!(FaultSchedule::new(
+            FaultPlan::none().pareto_stragglers(&[0], 1, 0, 1.5, 0.5, 7, None),
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn preemption_storm_fires_each_victim_once() {
+        let plan = FaultPlan::none().preemption_storm(&[0, 2], 1, 3);
+        let mut s = FaultSchedule::new(plan, 3).unwrap();
+        s.begin_epoch(1);
+        assert!(!s.preempted(0, 2, t(0.0)), "wrong round");
+        assert!(s.preempted(0, 3, t(0.0)));
+        assert!(!s.preempted(0, 3, t(0.0)), "one-shot");
+        assert!(!s.preempted(1, 3, t(0.0)), "not a victim");
+        assert!(s.preempted(2, 3, t(0.0)));
     }
 
     #[test]

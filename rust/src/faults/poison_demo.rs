@@ -113,14 +113,16 @@ impl Task {
     }
 }
 
-/// Train with `workers` data-parallel shards; worker `poisoned` (if any)
-/// corrupts its gradient with `mode` before submission; `rule` combines the
-/// submissions. Returns test accuracy.
+/// Train with `workers` data-parallel shards; every worker listed in
+/// `poisoned` (a coalition — possibly empty, possibly a single Byzantine
+/// worker) corrupts its gradient with `mode` before submission; `rule`
+/// combines the submissions. Returns test accuracy.
 fn train(
     train: &Task,
     test: &Task,
     workers: usize,
-    poisoned: Option<(usize, PoisonMode)>,
+    poisoned: &[usize],
+    mode: PoisonMode,
     rule: AggregationRule,
 ) -> Result<f64> {
     let mut theta = vec![0.0f32; DIM];
@@ -129,10 +131,8 @@ fn train(
         let mut grads = Vec::with_capacity(workers);
         for w in 0..workers {
             let mut g = train.grad(&theta, w * shard, (w + 1) * shard);
-            if let Some((pw, mode)) = poisoned {
-                if pw == w {
-                    mode.apply(&mut g);
-                }
+            if poisoned.contains(&w) {
+                mode.apply(&mut g);
             }
             grads.push(g);
         }
@@ -142,6 +142,26 @@ fn train(
         }
     }
     Ok(test.accuracy(&theta))
+}
+
+/// Final test accuracy of one training run with the workers in `poisoned`
+/// colluding under `mode` and `rule` aggregating. An empty coalition is the
+/// fault-free baseline. This is the accuracy axis of the robustness
+/// tournament (`exp::tournament`): same task, same seed derivation as
+/// [`run`], so tournament columns are comparable to the demo table.
+pub fn coalition_accuracy(
+    seed: u64,
+    workers: usize,
+    poisoned: &[usize],
+    mode: PoisonMode,
+    rule: AggregationRule,
+) -> Result<f64> {
+    assert!(workers >= 3, "need a Byzantine minority");
+    let mut rng = Rng::new(seed ^ 0xB12A_57);
+    let w_true: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let train_set = Task::generate(&mut rng, TRAIN, &w_true);
+    let test_set = Task::generate(&mut rng, TEST, &w_true);
+    train(&train_set, &test_set, workers, poisoned, mode, rule)
 }
 
 /// Run the full demo: fault-free baseline, then each rule against one
@@ -154,14 +174,14 @@ pub fn run(seed: u64, workers: usize, mode: PoisonMode) -> Result<PoisonReport> 
     let test_set = Task::generate(&mut rng, TEST, &w_true);
 
     let fault_free_acc =
-        train(&train_set, &test_set, workers, None, AggregationRule::Mean)?;
+        train(&train_set, &test_set, workers, &[], PoisonMode::SignFlip, AggregationRule::Mean)?;
     let mut rows = Vec::new();
     for rule in [
         AggregationRule::Mean,
         AggregationRule::ClippedMean { ratio: 1.0 },
         AggregationRule::CoordMedian,
     ] {
-        let final_acc = train(&train_set, &test_set, workers, Some((1, mode)), rule)?;
+        let final_acc = train(&train_set, &test_set, workers, &[1], mode, rule)?;
         rows.push(PoisonRow { rule, final_acc });
     }
     Ok(PoisonReport { workers, mode, fault_free_acc, rows })
@@ -216,6 +236,20 @@ mod tests {
         for (ra, rb) in a.rows.iter().zip(&b.rows) {
             assert_eq!(ra.final_acc.to_bits(), rb.final_acc.to_bits());
         }
+    }
+
+    #[test]
+    fn empty_coalition_matches_fault_free_baseline() {
+        let report = run(42, DEMO_WORKERS, PoisonMode::Scale(-8.0)).unwrap();
+        let clean = coalition_accuracy(
+            42,
+            DEMO_WORKERS,
+            &[],
+            PoisonMode::Scale(-8.0),
+            AggregationRule::Mean,
+        )
+        .unwrap();
+        assert_eq!(clean.to_bits(), report.fault_free_acc.to_bits());
     }
 
     #[test]

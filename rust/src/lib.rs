@@ -23,14 +23,19 @@
 //! * [`faults`] — deterministic fault injection (crashes with cold-start
 //!   restarts, stragglers, update drops, gradient poisoning) consulted by
 //!   the coordinator at every workflow-stage boundary, plus the
-//!   poisoning/robust-aggregation demo.
+//!   poisoning/robust-aggregation demo. Adversarial regimes compose the
+//!   primitives: Byzantine coalitions, healing network partitions,
+//!   heavy-tailed Pareto straggler factors, and spot-preemption storms
+//!   (DESIGN.md §8).
 //! * [`train`] — the epoch/step driver that wires data, strategy, substrates
 //!   and runtime into a training session.
 //! * [`exp`] — drivers that regenerate every table and figure of the paper,
 //!   plus the fault-resilience table (`exp::table4_faults`), the
 //!   4→256-worker scalability sweep (`exp::scale_sweep`, parallelized over
-//!   std threads) and the store-tier provisioning frontier
-//!   (`exp::shard_sweep`). Every driver returns a typed [`report::Report`].
+//!   std threads), the store-tier provisioning frontier
+//!   (`exp::shard_sweep`) and the robustness tournament crossing
+//!   aggregation rules × adversarial regimes × architectures
+//!   (`exp::tournament`). Every driver returns a typed [`report::Report`].
 //! * [`report`] — the documentation pipeline: the typed report model
 //!   (tables, rows, cells with paper anchors and PASS/WARN verdicts) with
 //!   text/Markdown/CSV/JSON renderers, and the suite runner behind

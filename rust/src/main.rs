@@ -9,6 +9,10 @@
 //! slsgpu exp spirt-indb [--real]             # §4.2 in-DB vs naive
 //! slsgpu exp table3 [--model mobilenet_s] [--epochs 20] [--csv out.csv]
 //! slsgpu fault-tolerance [--arch mobilenet] [--workers 4] [--epochs 3]
+//! slsgpu robustness-tournament [--attack coalition|partition|straggler-tail|preemption-storm|all]
+//!                    [--arch spirt|mlless|...|all] [--model mobilenet]
+//!                    [--workers 8] [--epochs 2] [--seed 42] [--threads 0]
+//!                    # aggregation-rule × attack × architecture grid + Pareto verdicts
 //! slsgpu scale-sweep [--workers 4,16,64,256] [--modes bsp,async:2]  # up to 4096 workers
 //!                    [--arch mobilenet] [--batches 24] [--epochs 1]
 //!                    [--threads 0] [--csv out.csv] [--trace]  # 5 archs × W × mode
@@ -77,6 +81,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("exp") => run_exp(&args),
         Some("fault-tolerance") => run_fault_tolerance(&args),
+        Some("robustness-tournament") => run_tournament(&args),
         Some("scale-sweep") => run_scale_sweep(&args),
         Some("shard-sweep") => run_shard_sweep(&args),
         Some("trace") => run_trace(&args),
@@ -102,14 +107,15 @@ fn run() -> Result<()> {
         }
         Some(other) => bail!(
             "unknown subcommand {other:?} \
-             (exp|fault-tolerance|scale-sweep|shard-sweep|trace|report|audit|train|artifacts)"
+             (exp|fault-tolerance|robustness-tournament|scale-sweep|shard-sweep|trace|report|\
+             audit|train|artifacts)"
         ),
         None => {
             println!("slsgpu — serverless-vs-GPU training testbed (see README)");
             println!(
                 "subcommands: exp <table1|table2|fig2|fig3|fig3-real|spirt-indb|table3>, \
-                 fault-tolerance, scale-sweep, shard-sweep, trace, report, audit, train, \
-                 artifacts"
+                 fault-tolerance, robustness-tournament, scale-sweep, shard-sweep, trace, \
+                 report, audit, train, artifacts"
             );
             Ok(())
         }
@@ -156,6 +162,8 @@ fn run_report(args: &Args) -> Result<()> {
     cfg.sweep.threads = args.get_usize("threads", 0)?;
     cfg.fault.epochs = args.get_usize("fault-epochs", 3)?;
     cfg.fault.seed = args.get_usize("seed", 42)? as u64;
+    cfg.tournament.threads = cfg.sweep.threads;
+    cfg.tournament.seed = cfg.fault.seed;
 
     let out = std::path::PathBuf::from(args.get_or("out", "docs"));
     let entries = slsgpu::report::suite::run(&cfg)?;
@@ -260,6 +268,32 @@ fn run_fault_tolerance(args: &Args) -> Result<()> {
     };
     let t4 = exp::table4_faults::run(&cfg)?;
     print!("{}", exp::table4_faults::render(&t4, &cfg));
+    Ok(())
+}
+
+/// The robustness tournament: aggregation rule × adversarial regime ×
+/// architecture, with cost/accuracy Pareto verdicts per family. `--arch`
+/// filters the *architecture* here (matching the other per-framework
+/// subcommands' vocabulary); the calibrated model profile is `--model`.
+fn run_tournament(args: &Args) -> Result<()> {
+    let mut cfg = exp::tournament::TournamentConfig {
+        model: args.get_or("model", "mobilenet").to_string(),
+        workers: args.get_usize("workers", 8)?,
+        epochs: args.get_usize("epochs", 2)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        threads: args.get_usize("threads", 0)?,
+        ..exp::tournament::TournamentConfig::default()
+    };
+    let arch = args.get_or("arch", "all");
+    if !arch.eq_ignore_ascii_case("all") {
+        cfg.frameworks = vec![framework_by_name(arch)?];
+    }
+    let attack = args.get_or("attack", "all");
+    if !attack.eq_ignore_ascii_case("all") {
+        cfg.attacks = vec![exp::tournament::Attack::parse(attack)?];
+    }
+    let t = exp::tournament::run(&cfg)?;
+    print!("{}", exp::tournament::render(&t, &cfg));
     Ok(())
 }
 

@@ -202,8 +202,14 @@ pub struct RecoveryStats {
     pub dropped_updates: u64,
     /// Gradients corrupted by injected poisoning.
     pub poisoned_grads: u64,
+    /// Spot preemptions reclaiming in-flight invocations (each recovers
+    /// like a compute crash and is also counted in `invocation_retries`).
+    pub preemptions: u64,
     /// Straggler-inflated compute seconds (extra over the fault-free time).
     pub straggler_secs: f64,
+    /// Virtual seconds workers spent cut off by network partitions
+    /// (protocol ops deferred to the heal time).
+    pub partition_secs: f64,
     /// Total downtime injected by crashes (virtual seconds).
     pub downtime_secs: f64,
     /// USD charged specifically for recovery actions (subset of the ledger).
@@ -243,8 +249,14 @@ impl RecoveryStats {
         if self.poisoned_grads > 0 {
             parts.push(format!("{} poisoned", self.poisoned_grads));
         }
+        if self.preemptions > 0 {
+            parts.push(format!("{} preempted", self.preemptions));
+        }
         if self.straggler_secs > 0.0 {
             parts.push(format!("+{:.0}s straggle", self.straggler_secs));
+        }
+        if self.partition_secs > 0.0 {
+            parts.push(format!("{:.0}s partitioned", self.partition_secs));
         }
         if self.downtime_secs > 0.0 {
             parts.push(format!("{:.1}s down", self.downtime_secs));
@@ -267,8 +279,10 @@ impl RecoveryStats {
             + self.shard_failovers
             + self.dropped_updates
             + self.poisoned_grads
+            + self.preemptions
             > 0
             || self.straggler_secs > 0.0
+            || self.partition_secs > 0.0
             || self.downtime_secs > 0.0
     }
 
@@ -285,7 +299,9 @@ impl RecoveryStats {
         self.shard_failovers += other.shard_failovers;
         self.dropped_updates += other.dropped_updates;
         self.poisoned_grads += other.poisoned_grads;
+        self.preemptions += other.preemptions;
         self.straggler_secs += other.straggler_secs;
+        self.partition_secs += other.partition_secs;
         self.downtime_secs += other.downtime_secs;
         self.cost_usd += other.cost_usd;
     }

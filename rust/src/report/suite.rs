@@ -34,6 +34,8 @@ pub struct SuiteConfig {
     pub indb_minibatches: usize,
     /// Table 4 fault-injection knobs.
     pub fault: exp::table4_faults::FaultConfig,
+    /// Robustness-tournament grid (rule × attack × architecture).
+    pub tournament: exp::tournament::TournamentConfig,
     /// Scale-sweep grid.
     pub sweep: exp::scale_sweep::SweepConfig,
     /// Shard-sweep grid (store-tier provisioning frontier).
@@ -51,6 +53,7 @@ impl Default for SuiteConfig {
             fig3_rates: vec![1.0, 0.5, 0.2, 0.1, 0.05],
             indb_minibatches: 24,
             fault: exp::table4_faults::FaultConfig::default(),
+            tournament: exp::tournament::TournamentConfig::default(),
             sweep: exp::scale_sweep::SweepConfig::default(),
             shard_sweep: exp::shard_sweep::ShardSweepConfig::default(),
             trace: exp::trace::TraceRunConfig::default(),
@@ -99,7 +102,7 @@ impl SuiteConfig {
 }
 
 /// The suite's experiment ids, in execution order.
-pub const EXPERIMENT_IDS: [&str; 10] = [
+pub const EXPERIMENT_IDS: [&str; 11] = [
     "table1",
     "table2",
     "fig2",
@@ -107,6 +110,7 @@ pub const EXPERIMENT_IDS: [&str; 10] = [
     "spirt_indb",
     "table3",
     "table4_faults",
+    "tournament",
     "scale_sweep",
     "shard_sweep",
     "trace",
@@ -151,6 +155,9 @@ pub fn canonical_title(id: &str) -> String {
         "spirt_indb" => "SPIRT in-database ops vs naive fetch-update-store".to_string(),
         "table3" => "Table 3 / Fig. 4 — convergence on the executed model".to_string(),
         "table4_faults" => "Table 4 — Resilience under injected faults".to_string(),
+        "tournament" => {
+            "Robustness tournament — aggregation rule × attack × architecture".to_string()
+        }
         "scale_sweep" => "Scale sweep — 4 → 256 workers × sync modes".to_string(),
         "shard_sweep" => "Shard sweep — store-tier provisioning frontier (MLLess)".to_string(),
         "trace" => "Protocol trace — critical path and op latency percentiles".to_string(),
@@ -180,6 +187,10 @@ fn run_one(id: &str, cfg: &SuiteConfig) -> Result<Report> {
         "table4_faults" => {
             let t4 = exp::table4_faults::run(&cfg.fault)?;
             exp::table4_faults::report(&t4, &cfg.fault)
+        }
+        "tournament" => {
+            let t = exp::tournament::run(&cfg.tournament)?;
+            exp::tournament::report(&t, &cfg.tournament)
         }
         "scale_sweep" => {
             let points = exp::scale_sweep::run(&cfg.sweep)?;

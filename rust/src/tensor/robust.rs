@@ -11,8 +11,19 @@
 //!   how large its update is.
 //! * **Coordinate-wise median** — each parameter takes the median across
 //!   workers, ignoring up to `(k-1)/2` arbitrary outliers per coordinate.
+//! * **Krum** (Blanchard et al., NeurIPS 2017) — selects the single
+//!   contribution whose summed squared distance to its `n − f − 2` nearest
+//!   neighbours is smallest. With at most `f` Byzantine workers and
+//!   `n ≥ 2f + 3`, the selected vector is within a bounded distance of an
+//!   honest one — and unlike the clipped mean, Krum defeats *norm-
+//!   disguised* attacks (e.g. sign flips at honest magnitude) because it
+//!   scores geometry, not length.
+//! * **Trimmed mean** — per coordinate, drop the `k` lowest and `k`
+//!   highest values and average the remaining `n − 2k`; tolerates up to
+//!   `k` Byzantine workers per coordinate while averaging more honest
+//!   signal than the median when `n` is large.
 //!
-//! Both preserve the slab contract: virtual (size-only) inputs produce a
+//! All rules preserve the slab contract: virtual (size-only) inputs produce a
 //! virtual output of the same length, so the cost-model experiments traverse
 //! the identical code path the end-to-end runs use.
 
@@ -29,20 +40,36 @@ pub enum AggregationRule {
     ClippedMean { ratio: f64 },
     /// Coordinate-wise median across contributions.
     CoordMedian,
+    /// Krum selection assuming at most `f` Byzantine contributions.
+    Krum { f: usize },
+    /// Coordinate-wise mean after trimming the `k` lowest and `k` highest.
+    TrimmedMean { k: usize },
 }
 
 impl AggregationRule {
-    /// Parse a CLI spec: `mean`, `clipped`, `clipped:<ratio>`, `median`.
+    /// Parse a CLI spec: `mean`, `clipped`, `clipped:<ratio>`, `median`,
+    /// `krum`, `krum:<f>`, `trimmed:<k>`.
     pub fn parse(spec: &str) -> Result<AggregationRule> {
         let spec = spec.trim().to_ascii_lowercase();
         Ok(match spec.as_str() {
             "mean" => AggregationRule::Mean,
             "clipped" => AggregationRule::ClippedMean { ratio: 1.0 },
             "median" | "coord-median" => AggregationRule::CoordMedian,
-            other => match other.strip_prefix("clipped:") {
-                Some(r) => AggregationRule::ClippedMean { ratio: r.parse()? },
-                None => bail!("unknown aggregation rule {other:?} (mean|clipped[:r]|median)"),
-            },
+            "krum" => AggregationRule::Krum { f: 1 },
+            other => {
+                if let Some(r) = other.strip_prefix("clipped:") {
+                    AggregationRule::ClippedMean { ratio: r.parse()? }
+                } else if let Some(f) = other.strip_prefix("krum:") {
+                    AggregationRule::Krum { f: f.parse()? }
+                } else if let Some(k) = other.strip_prefix("trimmed:") {
+                    AggregationRule::TrimmedMean { k: k.parse()? }
+                } else {
+                    bail!(
+                        "unknown aggregation rule {other:?} \
+                         (mean|clipped[:r]|median|krum[:f]|trimmed:k)"
+                    )
+                }
+            }
         })
     }
 
@@ -51,17 +78,22 @@ impl AggregationRule {
             AggregationRule::Mean => "mean",
             AggregationRule::ClippedMean { .. } => "clipped-mean",
             AggregationRule::CoordMedian => "coord-median",
+            AggregationRule::Krum { .. } => "krum",
+            AggregationRule::TrimmedMean { .. } => "trimmed-mean",
         }
     }
 
     /// Relative in-function compute cost vs the plain mean (extra slab
     /// passes: norm computation + clip for the clipped mean, per-coordinate
-    /// sorting for the median). The env charges this on the virtual clock.
+    /// sorting for the median and trimmed mean, all-pairs distances for
+    /// Krum). The env charges this on the virtual clock.
     pub fn cost_multiplier(&self) -> f64 {
         match self {
             AggregationRule::Mean => 1.0,
             AggregationRule::ClippedMean { .. } => 2.0,
             AggregationRule::CoordMedian => 4.0,
+            AggregationRule::TrimmedMean { .. } => 5.0,
+            AggregationRule::Krum { .. } => 6.0,
         }
     }
 
@@ -71,6 +103,8 @@ impl AggregationRule {
             AggregationRule::Mean => Slab::mean(slabs),
             AggregationRule::ClippedMean { ratio } => clipped_mean(slabs, *ratio),
             AggregationRule::CoordMedian => coordinate_median(slabs),
+            AggregationRule::Krum { f } => krum(slabs, *f),
+            AggregationRule::TrimmedMean { k } => trimmed_mean(slabs, *k),
         }
     }
 }
@@ -160,6 +194,79 @@ pub fn coordinate_median(slabs: &[Slab]) -> Result<Slab> {
     Ok(Slab::from_vec(out))
 }
 
+/// Krum selection: return a copy of the contribution whose summed squared
+/// L2 distance to its `n − f − 2` nearest neighbours is smallest (ties
+/// break toward the lower index, so the result is independent of any
+/// intermediate ordering). Requires `n ≥ f + 3` so every candidate has at
+/// least one scored neighbour. Virtual if any input is.
+pub fn krum(slabs: &[Slab], f: usize) -> Result<Slab> {
+    let (len, real) = check(slabs)?;
+    let n = slabs.len();
+    if n < f + 3 {
+        bail!("krum needs n >= f + 3 contributions (got n={n}, f={f})");
+    }
+    if !real {
+        return Ok(Slab::virtual_of(len));
+    }
+    let views: Vec<&[f32]> = slabs.iter().map(|s| s.as_slice()).collect::<Result<_>>()?;
+    // Pairwise squared distances, accumulated in f64 so the scores are
+    // independent of summation blocking.
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut acc = 0.0f64;
+            for (a, b) in views[i].iter().zip(views[j].iter()) {
+                let d = (*a as f64) - (*b as f64);
+                acc += d * d;
+            }
+            d2[i * n + j] = acc;
+            d2[j * n + i] = acc;
+        }
+    }
+    let m = n - f - 2; // neighbours scored per candidate
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    let mut row: Vec<f64> = Vec::with_capacity(n - 1);
+    for i in 0..n {
+        row.clear();
+        row.extend((0..n).filter(|j| *j != i).map(|j| d2[i * n + j]));
+        row.sort_unstable_by(f64::total_cmp);
+        let score: f64 = row[..m].iter().sum();
+        // Strict `<` keeps the lowest index on ties.
+        if score < best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    Ok(Slab::from_vec(views[best].to_vec()))
+}
+
+/// Coordinate-wise trimmed mean: per parameter, drop the `k` lowest and
+/// `k` highest contributions and average the remaining `n − 2k` (in sorted
+/// order, accumulated in f64). Requires `n > 2k`. Virtual if any input is.
+pub fn trimmed_mean(slabs: &[Slab], k: usize) -> Result<Slab> {
+    let (len, real) = check(slabs)?;
+    let n = slabs.len();
+    if n <= 2 * k {
+        bail!("trimmed mean needs n > 2k contributions (got n={n}, k={k})");
+    }
+    if !real {
+        return Ok(Slab::virtual_of(len));
+    }
+    let views: Vec<&[f32]> = slabs.iter().map(|s| s.as_slice()).collect::<Result<_>>()?;
+    let kept = (n - 2 * k) as f64;
+    let mut out = Vec::with_capacity(len);
+    let mut column: Vec<f64> = Vec::with_capacity(n);
+    for j in 0..len {
+        column.clear();
+        column.extend(views.iter().map(|v| v[j] as f64));
+        column.sort_unstable_by(f64::total_cmp);
+        let sum: f64 = column[k..n - k].iter().sum();
+        out.push((sum / kept) as f32);
+    }
+    Ok(Slab::from_vec(out))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,14 +308,19 @@ mod tests {
         assert_eq!(m.as_slice().unwrap(), &[4.0]);
     }
 
+    const ALL_RULES: [AggregationRule; 5] = [
+        AggregationRule::Mean,
+        AggregationRule::ClippedMean { ratio: 1.0 },
+        AggregationRule::CoordMedian,
+        AggregationRule::Krum { f: 1 },
+        AggregationRule::TrimmedMean { k: 1 },
+    ];
+
     #[test]
     fn rules_match_mean_on_clean_identical_inputs() {
-        let xs = [slab(&[2.0, -4.0]), slab(&[2.0, -4.0]), slab(&[2.0, -4.0])];
-        for rule in [
-            AggregationRule::Mean,
-            AggregationRule::ClippedMean { ratio: 1.0 },
-            AggregationRule::CoordMedian,
-        ] {
+        // Four inputs so Krum's n >= f + 3 floor is met.
+        let xs: Vec<Slab> = (0..4).map(|_| slab(&[2.0, -4.0])).collect();
+        for rule in ALL_RULES {
             let out = rule.apply(&xs).unwrap();
             assert_eq!(out.as_slice().unwrap(), &[2.0, -4.0], "{}", rule.name());
         }
@@ -216,13 +328,10 @@ mod tests {
 
     #[test]
     fn virtual_slabs_pass_through() {
-        for rule in [
-            AggregationRule::Mean,
-            AggregationRule::ClippedMean { ratio: 1.0 },
-            AggregationRule::CoordMedian,
-        ] {
-            let out = rule.apply(&[Slab::virtual_of(7), Slab::virtual_of(7)]).unwrap();
-            assert!(!out.is_real());
+        for rule in ALL_RULES {
+            let xs: Vec<Slab> = (0..4).map(|_| Slab::virtual_of(7)).collect();
+            let out = rule.apply(&xs).unwrap();
+            assert!(!out.is_real(), "{}", rule.name());
             assert_eq!(out.len(), 7);
         }
     }
@@ -235,13 +344,101 @@ mod tests {
             AggregationRule::ClippedMean { ratio: 1.5 }
         );
         assert_eq!(AggregationRule::parse("median").unwrap(), AggregationRule::CoordMedian);
-        assert!(AggregationRule::parse("krum").is_err());
+        assert_eq!(AggregationRule::parse("krum").unwrap(), AggregationRule::Krum { f: 1 });
+        assert_eq!(AggregationRule::parse("krum:2").unwrap(), AggregationRule::Krum { f: 2 });
+        assert_eq!(
+            AggregationRule::parse("trimmed:2").unwrap(),
+            AggregationRule::TrimmedMean { k: 2 }
+        );
+        assert!(AggregationRule::parse("bulyan").is_err());
+        assert!(AggregationRule::parse("trimmed").is_err(), "trimmed requires an explicit k");
+    }
+
+    #[test]
+    fn krum_selects_an_honest_input_under_coalition() {
+        // Five honest vectors clustered at (1, 0), two colluders at
+        // (-9, -9): each colluder's nearest n-f-2 = 3 neighbours include
+        // honest vectors far away, so colluder scores blow up and Krum
+        // returns one of the honest inputs verbatim.
+        let xs = [
+            slab(&[1.0, 0.0]),
+            slab(&[1.1, 0.1]),
+            slab(&[0.9, -0.1]),
+            slab(&[1.05, 0.0]),
+            slab(&[0.95, 0.05]),
+            slab(&[-9.0, -9.0]),
+            slab(&[-9.1, -9.1]),
+        ];
+        let out = krum(&xs, 2).unwrap();
+        let v = out.as_slice().unwrap();
+        assert!(v[0] > 0.8 && v[0] < 1.2, "krum picked a colluder: {v:?}");
+        // The output is one of the inputs, byte for byte.
+        assert!(xs.iter().any(|x| x.as_slice().unwrap() == v));
+    }
+
+    #[test]
+    fn krum_breaks_ties_toward_the_lower_index() {
+        // Two identical tight pairs, equidistant geometry: scores tie, and
+        // the selection must be index 0 regardless of evaluation order.
+        let xs = [
+            slab(&[1.0, 0.0]),
+            slab(&[1.0, 0.0]),
+            slab(&[-1.0, 0.0]),
+            slab(&[-1.0, 0.0]),
+        ];
+        let out = krum(&xs, 1).unwrap();
+        assert_eq!(out.as_slice().unwrap(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes_per_coordinate() {
+        let xs = [
+            slab(&[1.0, 10.0]),
+            slab(&[2.0, 20.0]),
+            slab(&[3.0, 30.0]),
+            slab(&[-1000.0, 40.0]),
+            slab(&[4.0, 9999.0]),
+        ];
+        let out = trimmed_mean(&xs, 1).unwrap();
+        // Coord 0 keeps {1, 2, 3}; coord 1 keeps {20, 30, 40}.
+        assert_eq!(out.as_slice().unwrap(), &[2.0, 30.0]);
+    }
+
+    #[test]
+    fn krum_beats_clipped_mean_on_norm_disguised_sign_flip() {
+        // The counterexample that motivates geometry-aware rules: two
+        // colluders submit the *negated* honest gradient at honest
+        // magnitude. Norm clipping is blind to them (no norm exceeds the
+        // median), so the clipped mean is dragged toward zero — while Krum
+        // and the trimmed mean recover an honest-direction step.
+        // The colluders are *near*-identical, not byte-identical: a pair of
+        // exact duplicates would score 0 under Krum's nearest-neighbour sum
+        // (the classic sybil gap), which the honest cluster must beat by
+        // being tighter than the colluders are to each other.
+        let honest = [1.0f32, 0.0];
+        let xs = [
+            slab(&honest),
+            slab(&[1.02, 0.01]),
+            slab(&[0.98, -0.01]),
+            slab(&[-1.0, 0.0]),
+            slab(&[-0.97, 0.02]),
+        ];
+        let clipped = clipped_mean(&xs, 1.0).unwrap();
+        let c = clipped.as_slice().unwrap()[0];
+        assert!(c < 0.25, "clipping should fail to filter the flip, got {c}");
+        let k = krum(&xs, 2).unwrap();
+        assert!(k.as_slice().unwrap()[0] > 0.9, "krum recovers the honest direction");
+        let t = trimmed_mean(&xs, 2).unwrap();
+        assert!(t.as_slice().unwrap()[0] > 0.9, "trimmed mean recovers too");
     }
 
     #[test]
     fn mismatched_lengths_error() {
         assert!(coordinate_median(&[slab(&[1.0]), slab(&[1.0, 2.0])]).is_err());
         assert!(clipped_mean(&[], 1.0).is_err());
+        // Population floors: krum needs n >= f + 3, trimmed needs n > 2k.
+        assert!(krum(&[slab(&[1.0]), slab(&[2.0]), slab(&[3.0])], 1).is_err());
+        assert!(trimmed_mean(&[slab(&[1.0]), slab(&[2.0])], 1).is_err());
     }
 
     fn noise(seed: u64, len: usize) -> Vec<f32> {

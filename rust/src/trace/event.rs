@@ -52,11 +52,21 @@ pub enum EventKind {
     Poison,
     /// A straggler slowdown applied to this compute span (instant marker).
     Straggler,
+    /// A network partition window `[start, heal)` on the supervisor track
+    /// (span; emitted once per planned window, at first enforcement).
+    Partition,
+    /// The instant a partition heals and deferred ops proceed (supervisor
+    /// track).
+    PartitionHeal,
+    /// A spot-instance preemption reclaiming an in-flight invocation
+    /// (instant on the supervisor track; the victim's restart downtime
+    /// stays a `CrashCompute` span on its own track).
+    Preemption,
 }
 
 impl EventKind {
     /// Every kind, in display order.
-    pub const ALL: [EventKind; 21] = [
+    pub const ALL: [EventKind; 24] = [
         EventKind::StateLoad,
         EventKind::Compute,
         EventKind::ApplyUpdate,
@@ -78,6 +88,9 @@ impl EventKind {
         EventKind::DropUpdate,
         EventKind::Poison,
         EventKind::Straggler,
+        EventKind::Partition,
+        EventKind::PartitionHeal,
+        EventKind::Preemption,
     ];
 
     pub fn name(self) -> &'static str {
@@ -103,6 +116,9 @@ impl EventKind {
             EventKind::DropUpdate => "drop-update",
             EventKind::Poison => "poison",
             EventKind::Straggler => "straggler",
+            EventKind::Partition => "partition",
+            EventKind::PartitionHeal => "partition-heal",
+            EventKind::Preemption => "preemption",
         }
     }
 
@@ -129,13 +145,23 @@ impl EventKind {
             | EventKind::ShardCrash
             | EventKind::DropUpdate
             | EventKind::Poison
-            | EventKind::Straggler => "fault",
+            | EventKind::Straggler
+            | EventKind::Partition
+            | EventKind::PartitionHeal
+            | EventKind::Preemption => "fault",
         }
     }
 
     /// Zero-duration markers rendered as Chrome instant events (`ph:"i"`).
     pub fn is_instant(self) -> bool {
-        matches!(self, EventKind::DropUpdate | EventKind::Poison | EventKind::Straggler)
+        matches!(
+            self,
+            EventKind::DropUpdate
+                | EventKind::Poison
+                | EventKind::Straggler
+                | EventKind::PartitionHeal
+                | EventKind::Preemption
+        )
     }
 
     /// Communication / coordination ops — the population for the sweep's

@@ -223,6 +223,79 @@ fn event_queue_core_matches_stepped_semantics_across_the_matrix() {
     }
 }
 
+/// The four adversarial regimes behind `slsgpu robustness-tournament`,
+/// each as a standalone plan at coordinates inside the 3-epoch session.
+fn adversarial_plans() -> [(&'static str, FaultPlan); 4] {
+    [
+        (
+            "coalition",
+            FaultPlan::none().coalition(&[1, 2], 2, 0, Some(8), PoisonMode::Scale(-8.0)),
+        ),
+        ("partition-heal", FaultPlan::none().partition(&[1], 0.0, 45.0)),
+        (
+            "straggler-tail",
+            FaultPlan::none().pareto_stragglers(&[1, 2, 3], 1, 0, 1.5, 1.0, 42, None),
+        ),
+        ("preemption-storm", FaultPlan::none().preemption_storm(&[1, 2, 3], 2, 5)),
+    ]
+}
+
+#[test]
+fn adversarial_matrix_is_bit_identical_across_runs_and_tracing() {
+    // The tournament's contract, cell by cell: every adversarial regime ×
+    // all five architectures × {BSP, bounded-staleness async} must (a)
+    // reproduce vtime/cost bit-for-bit on a rerun and (b) be unmoved by
+    // enabling the trace layer — including the new Partition/PartitionHeal
+    // and Preemption supervisor events, whose one-shot fired flags must be
+    // consumed identically whether or not a sink is attached.
+    //
+    // ClippedMean (not Krum/trimmed) on purpose: the async quorum at 4
+    // workers aggregates 2 slabs, below the n >= f+3 / n > 2k floors of
+    // the selection rules. Their determinism is covered at full width by
+    // `exp::tournament`'s thread-count test (BSP, 8 workers).
+    let agg = AggregationRule::ClippedMean { ratio: 1.0 };
+    for (name, plan) in adversarial_plans() {
+        for mode in [SyncMode::Bsp, SyncMode::Async { staleness: 2 }] {
+            for fw in FrameworkKind::ALL {
+                let off_a = session_traced(fw, &plan, agg, mode, TraceConfig::disabled());
+                let off_b = session_traced(fw, &plan, agg, mode, TraceConfig::disabled());
+                let on = session_traced(fw, &plan, agg, mode, TraceConfig::on());
+                let label = format!("{} {} {}", fw.name(), mode.label(), name);
+                assert_bit_identical(&off_a, &off_b, &format!("{label} rerun"));
+                assert_bit_identical(&off_a, &on, &format!("{label} traced"));
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_regimes_move_the_clock_as_designed() {
+    // A coalition poisons gradient *values* only — the timeline must not
+    // move relative to a clean run. Partitions, Pareto stragglers, and
+    // preemption storms all cost virtual time on every architecture (the
+    // partition victim's first comm op defers to the heal; stragglers
+    // stretch compute; preemption restarts bill cold-start downtime).
+    let agg = AggregationRule::ClippedMean { ratio: 1.0 };
+    for fw in FrameworkKind::ALL {
+        let clean = session(fw, &FaultPlan::none(), agg);
+        for (name, plan) in adversarial_plans() {
+            let hit = session(fw, &plan, agg);
+            if name == "coalition" {
+                assert_bit_identical(&clean, &hit, &format!("{} coalition clock", fw.name()));
+            } else {
+                assert!(
+                    hit.total_vtime_secs > clean.total_vtime_secs,
+                    "{} {}: expected added vtime ({} vs {})",
+                    fw.name(),
+                    name,
+                    hit.total_vtime_secs,
+                    clean.total_vtime_secs
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn faults_change_the_trace_but_only_the_faults() {
     // Sanity check that the fault plan is actually exercised: the faulty

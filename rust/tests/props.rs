@@ -5,6 +5,7 @@
 use slsgpu::cloud::pricing;
 use slsgpu::metrics::CommStats;
 use slsgpu::sim::{Resource, VTime};
+use slsgpu::tensor::robust::{clipped_mean, krum, trimmed_mean};
 use slsgpu::tensor::{ChunkPlan, SignificanceFilter, Slab};
 use slsgpu::util::json::Json;
 use slsgpu::util::rng::Rng;
@@ -207,6 +208,196 @@ fn prop_slab_mean_bounded_by_extremes() {
             );
         }
     }
+}
+
+/// Random slab population for the robust-aggregation properties: `honest`
+/// vectors clustered around a common direction plus `byzantine` arbitrary
+/// outliers, in a deterministic interleaved order.
+fn robust_population(rng: &mut Rng, n_honest: usize, n_byz: usize, dim: usize) -> Vec<Slab> {
+    let center: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut slabs = Vec::with_capacity(n_honest + n_byz);
+    for _ in 0..n_honest {
+        slabs.push(Slab::from_vec(
+            center.iter().map(|c| c + rng.normal_f32(0.0, 0.05)).collect(),
+        ));
+    }
+    for _ in 0..n_byz {
+        slabs.push(Slab::from_vec(
+            (0..dim).map(|_| rng.normal_f32(0.0, 50.0)).collect(),
+        ));
+    }
+    // Interleave deterministically so Byzantine inputs are not always last.
+    rng.shuffle(&mut slabs);
+    slabs
+}
+
+#[test]
+fn prop_krum_and_trimmed_mean_are_permutation_invariant() {
+    // Both rules are functions of the input *multiset*: permuting the slab
+    // order must not change a single output bit. (Krum's index tie-break
+    // only matters for exactly-tied scores, which continuous random data
+    // does not produce.)
+    for seed in 0..CASES {
+        let mut rng = Rng::new(9000 + seed);
+        let dim = 1 + rng.below(40) as usize;
+        let f = 1 + rng.below(2) as usize; // 1..=2
+        let n = (f + 3) + rng.below(6) as usize;
+        let slabs = robust_population(&mut rng, n - f, f, dim);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let permuted: Vec<Slab> = order.iter().map(|&i| slabs[i].clone()).collect();
+
+        let k1 = krum(&slabs, f).unwrap();
+        let k2 = krum(&permuted, f).unwrap();
+        assert_eq!(k1.as_slice().unwrap(), k2.as_slice().unwrap(), "seed {seed}: krum");
+
+        let kk = f.min((n - 1) / 2);
+        let t1 = trimmed_mean(&slabs, kk).unwrap();
+        let t2 = trimmed_mean(&permuted, kk).unwrap();
+        let b1: Vec<u32> = t1.as_slice().unwrap().iter().map(|x| x.to_bits()).collect();
+        let b2: Vec<u32> = t2.as_slice().unwrap().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(b1, b2, "seed {seed}: trimmed mean");
+    }
+}
+
+#[test]
+fn prop_krum_matches_brute_force_reference_on_small_n() {
+    // Reference implementation: score every candidate by the sum of its
+    // n-f-2 smallest squared distances (full sort, f64), pick the argmin
+    // with lowest-index tie-break. The kernel must select the same input.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(10_000 + seed);
+        let dim = 1 + rng.below(12) as usize;
+        let f = 1 + rng.below(2) as usize;
+        let n = (f + 3) + rng.below(4) as usize;
+        let slabs = robust_population(&mut rng, n - f, f, dim);
+        let views: Vec<&[f32]> = slabs.iter().map(|s| s.as_slice().unwrap()).collect();
+
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for i in 0..n {
+            let mut dists: Vec<f64> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| {
+                    views[i]
+                        .iter()
+                        .zip(views[j])
+                        .map(|(a, b)| {
+                            let d = (*a as f64) - (*b as f64);
+                            d * d
+                        })
+                        .sum::<f64>()
+                })
+                .collect();
+            dists.sort_by(f64::total_cmp);
+            let score: f64 = dists[..n - f - 2].iter().sum();
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        let got = krum(&slabs, f).unwrap();
+        assert_eq!(got.as_slice().unwrap(), views[best], "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_trimmed_mean_matches_brute_force_reference_on_small_n() {
+    // Reference: per coordinate, full sort, drop k from each end, f64 mean
+    // over the middle in sorted order — the exact computation the kernel
+    // performs, so agreement is bit-exact.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(11_000 + seed);
+        let dim = 1 + rng.below(12) as usize;
+        let k = 1 + rng.below(2) as usize;
+        let n = (2 * k + 1) + rng.below(5) as usize;
+        let slabs = robust_population(&mut rng, n - k, k, dim);
+        let views: Vec<&[f32]> = slabs.iter().map(|s| s.as_slice().unwrap()).collect();
+        let m = slabs.len();
+        let mut reference = Vec::with_capacity(dim);
+        for j in 0..dim {
+            let mut col: Vec<f64> = views.iter().map(|v| v[j] as f64).collect();
+            col.sort_by(f64::total_cmp);
+            let sum: f64 = col[k..m - k].iter().sum();
+            reference.push((sum / (m - 2 * k) as f64) as f32);
+        }
+        let got = trimmed_mean(&slabs, k).unwrap();
+        let gb: Vec<u32> = got.as_slice().unwrap().iter().map(|x| x.to_bits()).collect();
+        let rb: Vec<u32> = reference.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, rb, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_robust_rules_tolerate_f_byzantine_below_breakdown() {
+    // With at most f Byzantine inputs and enough honest ones, Krum must
+    // return an honest input verbatim, and every trimmed-mean coordinate
+    // must stay inside the honest value hull (the Byzantine values are
+    // either trimmed or bracketed by honest extremes).
+    for seed in 0..CASES {
+        let mut rng = Rng::new(12_000 + seed);
+        let dim = 1 + rng.below(24) as usize;
+        let f = 1 + rng.below(3) as usize; // 1..=3
+        let n_honest = (2 * f + 3) + rng.below(4) as usize; // n >= 2f + 3
+        let center: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let honest: Vec<Vec<f32>> = (0..n_honest)
+            .map(|_| center.iter().map(|c| c + rng.normal_f32(0.0, 0.02)).collect())
+            .collect();
+        let byz: Vec<Vec<f32>> = (0..f)
+            .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 100.0)).collect())
+            .collect();
+        let mut slabs: Vec<Slab> = honest
+            .iter()
+            .chain(byz.iter())
+            .map(|v| Slab::from_vec(v.clone()))
+            .collect();
+        rng.shuffle(&mut slabs);
+
+        let selected = krum(&slabs, f).unwrap();
+        let sv = selected.as_slice().unwrap();
+        assert!(
+            honest.iter().any(|h| h.as_slice() == sv),
+            "seed {seed}: krum returned a non-honest vector"
+        );
+
+        let trimmed = trimmed_mean(&slabs, f).unwrap();
+        let tv = trimmed.as_slice().unwrap();
+        for j in 0..dim {
+            let lo = honest.iter().map(|h| h[j]).fold(f32::INFINITY, f32::min);
+            let hi = honest.iter().map(|h| h[j]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(
+                tv[j] >= lo - 1e-4 && tv[j] <= hi + 1e-4,
+                "seed {seed}: trimmed mean left the honest hull at {j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn clipped_mean_norm_blindness_counterexample_pinned() {
+    // The breakdown contrast that motivates Krum/trimmed-mean: two
+    // colluders submit the *negated* honest direction at honest magnitude.
+    // Norm clipping cannot see them (no norm exceeds the median), so the
+    // clipped mean collapses toward zero; Krum and the trimmed mean both
+    // recover the honest direction. If this pin ever breaks, the
+    // aggregator's breakdown-point table in DESIGN.md §8 needs re-deriving.
+    let xs = [
+        Slab::from_vec(vec![1.0, 0.0]),
+        Slab::from_vec(vec![1.02, 0.01]),
+        Slab::from_vec(vec![0.98, -0.01]),
+        Slab::from_vec(vec![-1.0, 0.0]),
+        Slab::from_vec(vec![-0.97, 0.02]),
+    ];
+    let c = clipped_mean(&xs, 1.0).unwrap();
+    assert!(
+        c.as_slice().unwrap()[0] < 0.25,
+        "clipped mean should be fooled, got {}",
+        c.as_slice().unwrap()[0]
+    );
+    let k = krum(&xs, 2).unwrap();
+    assert!(k.as_slice().unwrap()[0] > 0.9, "krum recovers");
+    let t = trimmed_mean(&xs, 2).unwrap();
+    assert!(t.as_slice().unwrap()[0] > 0.9, "trimmed mean recovers");
 }
 
 #[test]
